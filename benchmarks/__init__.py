@@ -1,0 +1,7 @@
+"""Benchmarks — one per paper table/figure + the roofline report.
+
+    python -m benchmarks.run            # all, CPU-sized budgets
+    python -m benchmarks.run --only fig3
+
+Artifacts land in artifacts/bench/<name>.json.
+"""

@@ -1,0 +1,55 @@
+"""Paper §III-A extensibility claim — "integrating BOHB took 138 new lines
+against 4305 reused".
+
+We measure the same quantity for this codebase: lines of code in each
+proposer's integration file vs the shared machinery it reuses (base Proposer
++ search space + experiment loop + resource managers + tracking).  The claim
+reproduced is structural: each new algorithm costs ~100 lines because the
+interface is two functions.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+
+
+def _loc(path: str) -> int:
+    with open(path) as f:
+        return sum(
+            1 for ln in f
+            if ln.strip() and not ln.strip().startswith("#")
+        )
+
+
+def run() -> Dict:
+    prop_dir = os.path.join(SRC, "core", "proposer")
+    per_proposer = {}
+    for name in sorted(os.listdir(prop_dir)):
+        if name.endswith(".py") and name != "__init__.py":
+            per_proposer[name[:-3]] = _loc(os.path.join(prop_dir, name))
+
+    shared_files = [
+        os.path.join(SRC, "core", "proposer", "__init__.py"),
+        os.path.join(SRC, "core", "search_space.py"),
+        os.path.join(SRC, "core", "experiment.py"),
+        os.path.join(SRC, "core", "job.py"),
+        os.path.join(SRC, "core", "basic_config.py"),
+        os.path.join(SRC, "core", "tracking", "database.py"),
+    ]
+    for sub in ("resource",):
+        d = os.path.join(SRC, "core", sub)
+        shared_files += [os.path.join(d, f) for f in os.listdir(d) if f.endswith(".py")]
+    shared = sum(_loc(f) for f in shared_files)
+
+    # BOHB is the paper's example: it subclasses Hyperband + reuses TPE's model
+    bohb_new = per_proposer.get("bohb", 0)
+    return {
+        "per_proposer_loc": per_proposer,
+        "shared_framework_loc": shared,
+        "bohb_new_loc": bohb_new,
+        "bohb_reuse_ratio": round(shared / max(bohb_new, 1), 1),
+        "paper_claim": "BOHB = 138 new lines vs 4305 reused",
+        "pass": bohb_new < 200 and shared > 1000,
+    }

@@ -1,0 +1,66 @@
+"""Roofline report — collates the dry-run artifacts into the §Roofline table.
+
+Reads artifacts/dryrun/<mesh>/<arch>__<shape>.json (produced by
+``python -m repro.launch.dryrun --all``) and emits, per (arch x shape x mesh):
+the three roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs,
+and the roofline fraction.  Also writes a markdown table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict
+
+ART = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+
+def _fmt(x):
+    return f"{x:.3e}"
+
+
+def run(mesh: str = "pod_16x16") -> Dict:
+    rows = []
+    md = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck | useful | frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for path in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        r = json.load(open(path))
+        if r.get("status") == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"], "skip": r["reason"]})
+            md.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP: {r['reason'][:45]} | — | — |")
+            continue
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"], "error": True})
+            md.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | |")
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "kind": r["kind"],
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "bottleneck": rl["bottleneck"],
+            "useful_ratio": rl["useful_ratio"],
+            "roofline_fraction": rl["roofline_fraction"],
+            "compile_s": r.get("compile_s"),
+        })
+        md.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt(rl['compute_s'])} | {_fmt(rl['memory_s'])} "
+            f"| {_fmt(rl['collective_s'])} | {rl['bottleneck']} "
+            f"| {rl['useful_ratio']:.2f} | {rl['roofline_fraction']:.3f} |"
+        )
+    ok = [r for r in rows if "compute_s" in r]
+    return {
+        "mesh": mesh,
+        "n_cells": len(rows),
+        "n_ok": len(ok),
+        "n_skipped": sum(1 for r in rows if "skip" in r),
+        "n_failed": sum(1 for r in rows if r.get("error")),
+        "bottleneck_histogram": {
+            b: sum(1 for r in ok if r["bottleneck"] == b)
+            for b in ("compute", "memory", "collective")
+        },
+        "rows": rows,
+        "markdown": "\n".join(md),
+        "pass": rows != [] and not any(r.get("error") for r in rows),
+    }

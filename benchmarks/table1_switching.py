@@ -1,0 +1,76 @@
+"""Paper Table I — flexibility / usability / extensibility, measured.
+
+* flexibility: number of proposers registered behind the single interface
+  (paper claims 9 for Auptimizer) and proof that switching between them is a
+  one-word config change: the SAME target callable runs under every proposer
+  with zero code changes.
+* usability: the job-side protocol is a script (BasicConfig + print_result),
+  demonstrated by running one subprocess job.
+* extensibility: integration LOC per proposer (see extensibility_loc).
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+import textwrap
+from typing import Dict
+
+import numpy as np
+
+from repro.core.experiment import Experiment
+from repro.core.proposer import available_proposers
+from repro.core.resource import available_resource_managers
+
+SPACE = [
+    {"name": "x", "type": "float", "range": [-2.0, 2.0]},
+    {"name": "y", "type": "float", "range": [-1.0, 3.0]},
+]
+
+
+def rosenbrock(cfg):
+    x, y = float(cfg["x"]), float(cfg["y"])
+    return -((1 - x) ** 2 + 100 * (y - x * x) ** 2)
+
+
+def run(budget: int = 12) -> Dict:
+    proposers = available_proposers()
+    scores = {}
+    for name in ("random", "grid", "gp", "tpe", "hyperband", "bohb", "asha", "pbt"):
+        exp_cfg = {"proposer": name, "parameter_config": SPACE, "n_samples": budget,
+                   "n_parallel": 4, "target": "max", "random_seed": 0}
+        best = Experiment(exp_cfg, rosenbrock).run()   # same target, 1 word changed
+        scores[name] = best["score"]
+
+    # usability: script-format job via the subprocess RM
+    with tempfile.TemporaryDirectory() as tmp:
+        script = f"{tmp}/job.py"
+        with open(script, "w") as f:
+            f.write(textwrap.dedent(f"""\
+                import sys
+                sys.path.insert(0, {repr(sys.path[0] + '/src')})
+                from repro.core.basic_config import BasicConfig, print_result
+                c = BasicConfig(x=0.0, y=0.0).load(sys.argv[1] if len(sys.argv) > 1 else None)
+                print_result(-((1 - c.x) ** 2 + 100 * (c.y - c.x ** 2) ** 2))
+            """))
+        exp = Experiment(
+            {"proposer": "random", "parameter_config": SPACE, "n_samples": 2,
+             "n_parallel": 1, "target": "max", "random_seed": 0,
+             "resource": "subprocess", "workdir": tmp},
+            script,
+        )
+        script_best = exp.run()
+
+    return {
+        "criteria": {
+            "open_source": True,
+            "flexibility_n_proposers": len(proposers),
+            "proposers": proposers,
+            "usability_format": "script (BasicConfig argv[1] JSON in, print_result out)",
+            "scalability_resource_managers": available_resource_managers(),
+            "extensibility": "Proposer ABC: get_param()/update()/finished()",
+        },
+        "switching_is_config_only": {k: round(v, 3) for k, v in scores.items()},
+        "script_job_score": script_best["score"],
+        "paper_claim": "Auptimizer: 9 HPO algorithms, script-format code, scalable, extensible",
+        "pass": len(proposers) >= 9 and all(np.isfinite(v) for v in scores.values()),
+    }

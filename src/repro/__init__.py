@@ -1,0 +1,3 @@
+"""repro — Auptimizer-in-JAX: HPO orchestration + multi-pod training substrate."""
+
+__version__ = "1.0.0"

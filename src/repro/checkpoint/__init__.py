@@ -1,0 +1,1 @@
+from .checkpointer import Checkpointer

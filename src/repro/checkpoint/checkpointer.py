@@ -1,0 +1,134 @@
+"""Atomic, optionally-async checkpointing for pytree states.
+
+Layout: ``<dir>/step_<n>/arrays.npz`` (flattened path->array) +
+``manifest.json``.  Writes go to ``step_<n>.tmp`` then ``os.rename`` — a crash
+mid-save never corrupts the latest checkpoint, which is the property the
+fault-tolerance tests assert.  ``save_async`` snapshots to host memory
+synchronously (cheap) and writes on a background thread so the train loop
+keeps stepping.  ``latest_step``/``restore`` drive auto-resume in the
+launchers; HPO trial checkpoints (Hyperband promotion, PBT inherit) use the
+same machinery keyed by the proposer's ``hb_key``/``pbt_ckpt`` aux values.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+
+    def fix(node):
+        if isinstance(node, dict) and node and all(k.isdigit() for k in node):
+            return [fix(node[str(i)]) for i in range(len(node))]
+        if isinstance(node, dict):
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    return fix(root)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save ---------------------------------------------------------------------
+    def save(self, step: int, state: Any, extra: Optional[Dict[str, Any]] = None) -> str:
+        flat = {k: np.asarray(v) for k, v in _flatten(state).items()}
+        return self._write(step, flat, extra or {})
+
+    def save_async(self, step: int, state: Any, extra: Optional[Dict[str, Any]] = None) -> None:
+        self.wait()
+        # snapshot on the caller's thread (device->host); write in background
+        flat = {k: np.asarray(v) for k, v in _flatten(state).items()}
+
+        def _bg():
+            try:
+                self._write(step, flat, extra or {})
+            except BaseException as e:  # surfaced by wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_bg, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray], extra: Dict[str, Any]) -> str:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {"step": step, "time": time.time(), "keys": sorted(flat), **extra}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1, default=str)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None) -> Tuple[Any, Dict[str, Any]]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        return _unflatten(flat), manifest

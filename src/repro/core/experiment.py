@@ -1,0 +1,220 @@
+"""Experiment — the paper's Algorithm 1 orchestration loop.
+
+    while not proposer.finished():
+        resource <- resource_manager.get_available()
+        if not resource: sleep
+        hyperparameters <- proposer.get_param()
+        Job <- aup.run(hyperparameters, resource)
+        if Job.callback(): proposer.update()
+    aup.finish()   # wait for unfinished jobs
+
+plus the production features a thousand-node deployment needs:
+
+* **asynchronous callbacks** — jobs finish on worker threads; results flow
+  through a queue so the proposer stays single-threaded;
+* **fault tolerance** — every proposal/result is in SQLite *before* it is
+  acted on; ``Experiment.resume()`` replays finished jobs into the proposer
+  and re-queues the ones that were mid-flight at the crash;
+* **straggler mitigation** — per-job deadline -> kill -> retry;
+* **retries** — failed/LOST jobs are resubmitted up to ``max_retries`` before
+  the failure is surfaced to the proposer;
+* **elasticity** — works with ElasticResourceManager; lost resources simply
+  shrink the pool, lost jobs are retried.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from .basic_config import BasicConfig
+from .job import Job, JobStatus
+from .proposer import make_proposer
+from .resource import ResourceManager, get_resource_manager_cls
+from .tracking.database import TrackingDB
+
+
+class Experiment:
+    def __init__(
+        self,
+        exp_config: Dict[str, Any],
+        target: Any,
+        db: Optional[TrackingDB] = None,
+        resource_manager: Optional[ResourceManager] = None,
+        user: str = "default",
+    ):
+        self.exp_config = dict(exp_config)
+        self.target = target
+        self.db = db or TrackingDB(exp_config.get("db_path", ":memory:"))
+        self.user = user
+
+        from .search_space import SearchSpace
+
+        space = SearchSpace.from_json(self.exp_config.get("parameter_config", []))
+        maximize = self.exp_config.get("target", "max") == "max"
+        prop_kwargs = {
+            k: v
+            for k, v in self.exp_config.items()
+            if k
+            not in (
+                "proposer", "parameter_config", "target", "resource", "script",
+                "n_parallel", "db_path", "workdir", "job_deadline_s", "max_retries",
+            )
+        }
+        self.proposer = make_proposer(
+            self.exp_config["proposer"], space, maximize=maximize, **prop_kwargs
+        )
+        self.maximize = maximize
+
+        if resource_manager is not None:
+            self.rm = resource_manager
+        else:
+            rm_cls = get_resource_manager_cls(self.exp_config.get("resource", "local"))
+            rm_kwargs: Dict[str, Any] = {"n_parallel": int(self.exp_config.get("n_parallel", 1))}
+            if self.exp_config.get("workdir"):
+                rm_kwargs["workdir"] = self.exp_config["workdir"]
+            self.rm = rm_cls(**rm_kwargs)
+
+        self.deadline_s = self.exp_config.get("job_deadline_s")
+        self.max_retries = int(self.exp_config.get("max_retries", 1))
+
+        self.exp_id: Optional[int] = None
+        self._next_job_id = 0
+        self._cond = threading.Condition()
+        self._finished_q: List[Job] = []
+        self._running: Dict[int, Job] = {}
+        self._retries: Dict[str, int] = {}
+        self._requeue: List[Dict[str, Any]] = []  # crash-resume / retry configs
+        self.job_log: List[Job] = []
+
+    # -- callback (fires on worker threads; keep it tiny) -----------------------
+    def _on_job_done(self, job: Job) -> None:
+        with self._cond:
+            self._finished_q.append(job)
+            self._cond.notify_all()
+
+    # -- helpers ------------------------------------------------------------------
+    def _config_key(self, cfg: Dict[str, Any]) -> str:
+        import json
+
+        return json.dumps({k: v for k, v in cfg.items() if k != "job_id"}, sort_keys=True, default=str)
+
+    def _next_config(self) -> Optional[Dict[str, Any]]:
+        if self._requeue:
+            return self._requeue.pop(0)
+        return self.proposer.get_param()
+
+    def _drain_finished_locked(self) -> None:
+        """Process completed jobs: DB, retries, proposer update, release."""
+        while self._finished_q:
+            job = self._finished_q.pop(0)
+            self._running.pop(job.job_id, None)
+            res = job.result
+            ok = job.status == JobStatus.FINISHED and res is not None and res.score is not None
+            self.db.record_job_end(
+                self.exp_id, job.job_id, job.status.value,
+                None if res is None else res.score,
+                None if res is None else res.extra,
+                None if res is None else res.error,
+            )
+            # resource returns to the pool unless it was lost with the node
+            if job.status != JobStatus.LOST:
+                self.rm.release(job.resource_id)
+            if ok:
+                self.proposer.update(res.score, job)
+            else:
+                key = self._config_key(job.config)
+                n = self._retries.get(key, 0)
+                if n < self.max_retries:
+                    self._retries[key] = n + 1
+                    cfg = {k: v for k, v in job.config.items() if k != "job_id"}
+                    self._requeue.append(cfg)
+                else:
+                    self.proposer.update(None, job)
+
+    def _check_stragglers_locked(self) -> None:
+        for job in list(self._running.values()):
+            if job.is_overdue():
+                self.rm.kill(job)
+
+    # -- main loop -------------------------------------------------------------------
+    def run(self, poll_interval: float = 0.02) -> Optional[Dict[str, Any]]:
+        if self.exp_id is None:
+            self.exp_id = self.db.create_experiment(self.exp_config, self.user)
+        t0 = time.time()
+        while True:
+            with self._cond:
+                self._drain_finished_locked()
+                self._check_stragglers_locked()
+                done = self.proposer.finished() and not self._running and not self._requeue
+            if done:
+                break
+
+            res = self.rm.get_available()
+            if res is None:
+                if not self._running and self.rm.n_total() == 0:
+                    raise RuntimeError("no resources left in the pool and none running")
+                with self._cond:
+                    self._cond.wait(timeout=poll_interval)
+                continue
+
+            with self._cond:
+                self._drain_finished_locked()
+                cfg = None if self.proposer.finished() else self._next_config()
+            if cfg is None:
+                self.rm.release(res)
+                with self._cond:
+                    if self.proposer.finished() and not self._running and not self._requeue:
+                        break
+                    self._cond.wait(timeout=poll_interval)
+                continue
+
+            job_id = self._next_job_id
+            self._next_job_id += 1
+            cfg = dict(cfg)
+            cfg["job_id"] = job_id  # paper Code 1: job_id rides in the BasicConfig
+            bc = BasicConfig(**cfg)
+            job = Job(job_id, bc, res, self._on_job_done, deadline_s=self.deadline_s)
+            with self._cond:
+                self._running[job_id] = job
+            self.job_log.append(job)
+            self.db.record_job_start(self.exp_id, job_id, bc.to_json(), str(res))
+            self.rm.run(job, self.target)
+
+        # aup.finish(): drain stragglers
+        with self._cond:
+            self._drain_finished_locked()
+        self.db.finish_experiment(self.exp_id)
+        self.wall_time_s = time.time() - t0
+        return self.best()
+
+    def best(self) -> Optional[Dict[str, Any]]:
+        return self.proposer.best()
+
+    # -- crash-resume --------------------------------------------------------------
+    @classmethod
+    def resume(
+        cls,
+        db: TrackingDB,
+        target: Any,
+        exp_id: Optional[int] = None,
+        resource_manager: Optional[ResourceManager] = None,
+        user: str = "default",
+    ) -> "Experiment":
+        exp_id = exp_id if exp_id is not None else db.latest_experiment_id()
+        if exp_id is None:
+            raise ValueError("no experiment to resume")
+        row = db.get_experiment(exp_id)
+        exp = cls(row["exp_config"], target, db=db, resource_manager=resource_manager, user=user)
+        exp.exp_id = exp_id
+        rows = db.jobs(exp_id)
+        exp.proposer.replay(rows)
+        max_id = -1
+        for r in rows:
+            max_id = max(max_id, int(r["job_id"]))
+            if r["status"] == "running":  # mid-flight at crash -> re-queue
+                cfg = {k: v for k, v in r["config"].items() if k != "job_id"}
+                exp._requeue.append(cfg)
+                db.record_job_end(exp_id, r["job_id"], "lost", None, None, "controller crash")
+        exp._next_job_id = max_id + 1
+        return exp

@@ -1,0 +1,138 @@
+"""Proposer interface (paper §III-A) + registry.
+
+Every HPO algorithm is reduced to:
+
+* ``get_param()``  -> next hyperparameter dict (or ``None`` == "wait": a rung /
+  batch barrier is outstanding, ask again after a callback fires),
+* ``update(score, job)`` -> feed one finished job's score back,
+* ``finished()``   -> experiment is complete.
+
+This is the paper's central extensibility claim — integrating a new algorithm
+touches exactly one file (a subclass registered with ``@register``), which the
+``benchmarks/extensibility_loc.py`` benchmark counts.
+
+Auxiliary keys the proposer places in the config (``n_iterations``,
+``hb_bracket``, ...) flow through the BasicConfig to the job and back —
+the mechanism the paper uses so Hyperband can resume/extend training
+(§III-A2).  ``replay(rows)`` rebuilds internal state from the tracking DB for
+crash-resume; it relies only on those auxiliary keys, never on in-memory state.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Dict, List, Optional, Sequence, Type
+
+import numpy as np
+
+from ..search_space import SearchSpace
+
+_REGISTRY: Dict[str, Type["Proposer"]] = {}
+
+
+def register(name: str):
+    def deco(cls: Type["Proposer"]) -> Type["Proposer"]:
+        _REGISTRY[name.lower()] = cls
+        cls.registry_name = name.lower()
+        return cls
+    return deco
+
+
+def get_proposer_cls(name: str) -> Type["Proposer"]:
+    key = name.lower()
+    if key not in _REGISTRY:
+        raise KeyError(f"unknown proposer {name!r}; available: {sorted(_REGISTRY)}")
+    return _REGISTRY[key]
+
+
+def available_proposers() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def make_proposer(name: str, space: SearchSpace, **kwargs) -> "Proposer":
+    return get_proposer_cls(name)(space=space, **kwargs)
+
+
+class Proposer(abc.ABC):
+    """Base class: bookkeeping shared by all algorithms."""
+
+    registry_name = "base"
+
+    def __init__(
+        self,
+        space: SearchSpace,
+        n_samples: int = 100,
+        seed: int = 0,
+        maximize: bool = True,
+        **_unused: Any,
+    ):
+        self.space = space
+        self.n_samples = int(n_samples)
+        self.maximize = bool(maximize)
+        self.rng = np.random.default_rng(seed)
+        self.seed = seed
+        self.n_proposed = 0
+        self.n_updated = 0
+        self.n_failed = 0
+        self.history: List[Dict[str, Any]] = []  # {config, score}
+
+    # -- core interface -------------------------------------------------------
+    def get_param(self) -> Optional[Dict[str, Any]]:
+        """Next config, or None to signal 'wait for outstanding jobs'."""
+        if self.finished():
+            return None
+        cfg = self._propose()
+        if cfg is not None:
+            self.n_proposed += 1
+        return cfg
+
+    def update(self, score: Optional[float], job: Any = None) -> None:
+        """Feed back one finished job.  ``job.config`` carries auxiliary keys."""
+        config = dict(job.config) if job is not None else {}
+        if score is None:
+            self.n_failed += 1
+            self._on_failure(config)
+        else:
+            self.n_updated += 1
+            s = float(score) if self.maximize else -float(score)
+            self.history.append({"config": config, "score": s})
+            self._on_result(config, s)
+
+    def finished(self) -> bool:
+        return (self.n_updated + self.n_failed) >= self.n_samples
+
+    # -- crash-resume -----------------------------------------------------------
+    def replay(self, rows: Sequence[Dict[str, Any]]) -> None:
+        """Rebuild state from tracking-DB job rows (finished ones only)."""
+        for r in rows:
+            if r.get("status") == "finished" and r.get("score") is not None:
+                self.n_proposed += 1
+
+                class _J:  # minimal duck-typed job
+                    config = r["config"]
+
+                self.update(r["score"], _J())
+            elif r.get("status") in ("failed", "killed", "lost"):
+                self.n_proposed += 1
+                self.n_failed += 1
+
+    # -- subclass hooks ---------------------------------------------------------
+    @abc.abstractmethod
+    def _propose(self) -> Optional[Dict[str, Any]]:
+        ...
+
+    def _on_result(self, config: Dict[str, Any], score: float) -> None:
+        pass
+
+    def _on_failure(self, config: Dict[str, Any]) -> None:
+        pass
+
+    # -- helpers -----------------------------------------------------------------
+    def best(self) -> Optional[Dict[str, Any]]:
+        if not self.history:
+            return None
+        h = max(self.history, key=lambda r: r["score"])
+        return {"config": h["config"], "score": h["score"] if self.maximize else -h["score"]}
+
+
+# Import submodules so @register decorators run on package import.
+from . import random_search, grid_search, bayesian, tpe, hyperband, bohb, asha, pbt, eas, cmaes  # noqa: E402,F401

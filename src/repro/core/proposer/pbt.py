@@ -1,0 +1,92 @@
+"""Population-Based Training (beyond-paper addition).
+
+A population of ``population`` members trains in generations; after each
+generation the bottom quartile clones the top quartile's hyperparameters AND
+checkpoint (via ``pbt_ckpt`` aux key — the job restores the donor's weights)
+then perturbs.  Maps naturally onto the mesh-slice pool: one member per slice.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+from . import Proposer, register
+
+
+@register("pbt")
+class PBTProposer(Proposer):
+    def __init__(self, space, population: int = 8, n_generations: int = None,
+                 perturb: float = 1.2, quantile: float = 0.25, **kwargs):
+        super().__init__(space, **kwargs)
+        self.population = int(population)
+        self.n_generations = int(n_generations or max(1, self.n_samples // self.population))
+        self.n_samples = self.population * self.n_generations
+        self.perturb = float(perturb)
+        self.quantile = float(quantile)
+        self.members: List[Dict[str, Any]] = [self.space.sample(self.rng) for _ in range(self.population)]
+        self.gen = 0
+        self.gen_issued: set = set()
+        self.gen_results: Dict[int, float] = {}
+
+    def _propose(self) -> Optional[Dict[str, Any]]:
+        if self.gen >= self.n_generations:
+            return None
+        for m in range(self.population):
+            if m not in self.gen_issued and m not in self.gen_results:
+                self.gen_issued.add(m)
+                cfg = dict(self.members[m])
+                cfg.update(pbt_member=m, pbt_gen=self.gen, pbt_ckpt=f"m{m}")
+                return cfg
+        if len(self.gen_results) >= self.population:
+            self._exploit_explore()
+        return None  # generation barrier
+
+    def _exploit_explore(self) -> None:
+        ranked = sorted(self.gen_results.items(), key=lambda kv: -kv[1])
+        k = max(1, int(self.quantile * self.population))
+        top = [m for m, _ in ranked[:k]]
+        bottom = [m for m, _ in ranked[-k:]]
+        for loser in bottom:
+            donor = top[int(self.rng.integers(len(top)))]
+            new_cfg = dict(self.members[donor])
+            for p in self.space:
+                if p.type == "choice":
+                    if self.rng.uniform() < 0.25:
+                        new_cfg[p.name] = p.sample(self.rng)
+                else:
+                    factor = self.perturb if self.rng.uniform() < 0.5 else 1.0 / self.perturb
+                    u = p.to_unit(new_cfg[p.name])
+                    # perturb in native space, clamp through the unit cube
+                    new_cfg[p.name] = p.from_unit(min(1.0, max(0.0, u * factor)))
+            new_cfg["pbt_inherit"] = f"m{donor}"  # job restores donor checkpoint
+            self.members[loser] = new_cfg
+        self.gen += 1
+        self.gen_issued = set()
+        self.gen_results = {}
+
+    def _on_result(self, config: Dict[str, Any], score: float) -> None:
+        m = config.get("pbt_member")
+        if m is not None and config.get("pbt_gen") == self.gen:
+            self.gen_results[m] = score
+            self.gen_issued.discard(m)
+
+    def _on_failure(self, config: Dict[str, Any]) -> None:
+        self._on_result(config, float("-inf"))
+
+    def finished(self) -> bool:
+        return self.gen >= self.n_generations
+
+    def replay(self, rows) -> None:
+        for r in rows:
+            if r.get("status") == "finished" and r.get("score") is not None:
+                cfg = r["config"]
+                self.n_proposed += 1
+                self.n_updated += 1
+                sc = float(r["score"]) if self.maximize else -float(r["score"])
+                self.history.append({"config": cfg, "score": sc})
+                if cfg.get("pbt_gen") == self.gen:
+                    self.gen_results[cfg.get("pbt_member")] = sc
+            elif r.get("status") in ("failed", "killed", "lost"):
+                self.n_proposed += 1
+                self.n_failed += 1
+        if len(self.gen_results) >= self.population:
+            self._exploit_explore()

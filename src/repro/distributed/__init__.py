@@ -1,0 +1,3 @@
+from .sharding import build_pspec, build_sharding, constrain, make_rules, map_specs, sharding_context
+
+__all__ = ["build_pspec", "build_sharding", "constrain", "make_rules", "map_specs", "sharding_context"]

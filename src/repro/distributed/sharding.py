@@ -1,0 +1,153 @@
+"""Logical-axis sharding rules -> NamedSharding / PartitionSpec.
+
+Every parameter/cache/activation tree has a parallel *specs* tree whose leaves
+are tuples of logical axis names.  ``build_sharding`` maps logical names onto
+mesh axes through a rules dict, enforcing the two legality constraints XLA
+requires: (i) a mesh axis is used at most once per tensor, (ii) the dimension
+must be divisible by the product of its mesh axes (else that dim replicates).
+
+Default placement (single-pod (data=16, model=16)):
+
+    weights   : "embed" -> data (FSDP/ZeRO-3), "vocab"/"heads"/"ff"/"expert"/
+                "inner"/"moe_ff" -> model (TP/EP)
+    activations: "batch" -> (pod, data); inner activation dims follow the op
+    KV caches : "cache_seq" -> model (decode), or (data, model) for the
+                batch=1 long-context cells (sequence parallelism)
+
+Multi-pod ((pod=2, data=16, model=16)) additionally folds "pod" into the
+batch and FSDP axes — parameters and optimizer state shard over all 512 chips.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Rules = Dict[str, Tuple[str, ...]]
+
+
+def make_rules(mesh_axes: Sequence[str], *, shard_cache_seq: bool = False) -> Rules:
+    has_pod = "pod" in mesh_axes
+    dp: Tuple[str, ...] = ("pod", "data") if has_pod else ("data",)
+    rules: Rules = {
+        "batch": dp,
+        "embed": dp,              # FSDP: weights' d_model dim over data(+pod)
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head": (),
+        "ff": ("model",),
+        "moe_ff": ("model",),
+        "expert": ("model",),
+        "inner": ("model",),
+        "cache_seq": ("data", "model") if shard_cache_seq else ("model",),
+        "act_embed": (),
+        "act_seq": (),
+        # Ulysses-style fallback: when an arch's head count does not divide the
+        # model axis (starcoder2 24H, qwen3 kv=4, ...) the *query sequence*
+        # takes the model axis instead, so attention compute still shards 16
+        # ways rather than silently replicating.  Priority ordering below makes
+        # heads claim the axis first whenever they can.
+        "act_seq_attn": ("model",),
+    }
+    return {k: tuple(a for a in v if a in mesh_axes) for k, v in rules.items()}
+
+
+# Lower number = claims mesh axes first.  Head/ff/expert dims take the model
+# axis when divisible; act_seq_attn only picks it up as a fallback.
+_PRIORITY = {
+    "vocab": 0, "heads": 0, "kv_heads": 0, "ff": 0, "moe_ff": 0,
+    "expert": 0, "inner": 0, "cache_seq": 0,
+    "embed": 1, "batch": 1,
+    "act_seq_attn": 2, "act_seq": 3, "act_embed": 3, "head": 3,
+}
+
+
+def build_pspec(
+    shape: Sequence[int], logical: Sequence[Optional[str]], rules: Rules, mesh: Mesh
+) -> PartitionSpec:
+    """Map a logical-axes tuple to a legal PartitionSpec for ``shape``."""
+    assert len(shape) == len(logical), (shape, logical)
+    used: set = set()
+    spec: list = [None] * len(shape)
+    # resolve dims in priority order so e.g. "heads" claims the model axis
+    # before the "act_seq_attn" fallback can
+    order = sorted(range(len(shape)), key=lambda i: _PRIORITY.get(logical[i], 1))
+    for i in order:
+        name = logical[i]
+        if name is None:
+            continue
+        dim = shape[i]
+        axes = [a for a in rules.get(name, ()) if a not in used]
+        # greedily keep the prefix of mesh axes that divides the dim
+        keep = []
+        prod = 1
+        for a in axes:
+            n = mesh.shape[a]
+            if dim % (prod * n) == 0:
+                keep.append(a)
+                prod *= n
+        if keep:
+            used.update(keep)
+            spec[i] = tuple(keep) if len(keep) > 1 else keep[0]
+    return PartitionSpec(*spec)
+
+
+def _is_spec_leaf(s: Any) -> bool:
+    return isinstance(s, tuple) and all(i is None or isinstance(i, str) for i in s)
+
+
+def map_specs(shapes, specs, fn):
+    """Walk a (nested dict/list) shapes tree in lockstep with its specs tree.
+    specs leaves are tuples of logical names; shapes leaves are arrays/SDS."""
+    if _is_spec_leaf(specs):
+        return fn(shapes, specs)
+    if isinstance(specs, dict):
+        return {k: map_specs(shapes[k], specs[k], fn) for k in specs}
+    if isinstance(specs, (list, tuple)):
+        return type(specs)(map_specs(a, b, fn) for a, b in zip(shapes, specs))
+    raise TypeError(f"bad specs node: {type(specs)}")
+
+
+def build_sharding(tree_shapes, tree_specs, rules: Rules, mesh: Mesh):
+    """Pytree of shapes (arrays/ShapeDtypeStructs) + specs -> NamedSharding tree."""
+
+    def one(leaf, logical):
+        return NamedSharding(mesh, build_pspec(leaf.shape, logical, rules, mesh))
+
+    return map_specs(tree_shapes, tree_specs, one)
+
+
+# -- activation constraints inside model code -----------------------------------------
+_CTX: contextvars.ContextVar[Optional[Tuple[Mesh, Rules]]] = contextvars.ContextVar(
+    "sharding_ctx", default=None
+)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: Rules):
+    tok = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def ctx_mesh() -> Optional[Mesh]:
+    """The active sharding context's mesh (None outside a context)."""
+    ctx = _CTX.get()
+    return ctx[0] if ctx is not None else None
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint through the active context; no-op outside it."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = build_pspec(x.shape, logical, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

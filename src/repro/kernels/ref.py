@@ -1,0 +1,416 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantics of record: Pallas kernels are validated against these
+under ``interpret=True`` sweeps, and the dry-run / roofline path runs them so
+XLA's cost analysis sees the true math.  fp32 accumulation everywhere it
+matters (softmax, norm statistics, SSM state).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with fp32 statistics; returns x's dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def _softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def attention(
+    q: jax.Array,                  # (B, Sq, H, Dq)
+    k: jax.Array,                  # (B, Sk, Hkv, Dq)
+    v: jax.Array,                  # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding window (local attention)
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,             # position of q[0] within the kv sequence
+    kv_len: Optional[jax.Array] = None,  # valid kv length (decode with cache)
+) -> jax.Array:
+    """Grouped-query attention oracle. Returns (B, Sq, H, Dv)."""
+    B, Sq, H, Dq = q.shape
+    _, Sk, Hkv, Dv = v.shape
+    assert H % Hkv == 0, (H, Hkv)
+    g = H // Hkv
+    scale = scale if scale is not None else Dq ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    # grouped heads: n = kv head, g = query heads per kv head
+    scores = jnp.einsum("bqngd,bknd->bngqk", qf.reshape(B, Sq, Hkv, g, Dq), kf)
+    scores = _softcap(scores, softcap)
+
+    q_pos = q_offset + jnp.arange(Sq)[:, None]          # (Sq, 1)
+    k_pos = jnp.arange(Sk)[None, :]                     # (1, Sk)
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngqk,bknd->bqngd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def _block_bounds(iq, nk, block_q, block_kv, q_offset, causal, window, causal_skip):
+    """Static [lo, hi) kv-block range visible to q block ``iq`` (flash skip)."""
+    lo = 0
+    if causal and causal_skip:
+        hi = min(nk, (q_offset + (iq + 1) * block_q + block_kv - 1) // block_kv)
+        if window is not None:
+            lo = max(0, (q_offset + iq * block_q - window + 1) // block_kv)
+    else:
+        hi = nk
+    return lo, hi
+
+
+def _block_mask(q_pos, k_pos, causal, window, valid_k):
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    mask &= (k_pos < valid_k)[None, :]
+    return mask
+
+
+def _blocked_fwd(
+    q, k, v, *, causal, window, softcap, scale, q_offset, kv_len,
+    block_q, block_kv, causal_skip,
+):
+    """Flash-style forward. Returns (out (B,Sq,H,Dv), lse (B,Hkv,g,Sq) fp32)."""
+    B, Sq, H, Dq = q.shape
+    _, Sk, Hkv, Dv = v.shape
+    g = H // Hkv
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Sk)
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_kv
+    qf = q.astype(jnp.float32) * scale
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = (Sq + pad_q) // block_q, (Sk + pad_k) // block_kv
+    # (nk, B, blk, Hkv, D): scan slices are contiguous loads
+    kb = kf.reshape(B, nk, block_kv, Hkv, Dq).transpose(1, 0, 2, 3, 4)
+    vb = vf.reshape(B, nk, block_kv, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+    valid_k = Sk if kv_len is None else kv_len
+    qf = qf.reshape(B, nq, block_q, Hkv, g, Dq)
+    # Ulysses archs only (H doesn't divide the model axis): shard the
+    # sequence dim inside each q block — without this the static q-block
+    # loop replicates over the model axis.  When H divides, SPMD keeps the
+    # (Hkv, g) product head-sharded across the reshape; constraining seq
+    # there would force per-layer reshards (measured 2x worse on qwen3).
+    from ..distributed.sharding import constrain, ctx_mesh
+    mesh = ctx_mesh()
+    seq_shard = (
+        mesh is not None
+        and "model" in mesh.axis_names
+        and H % mesh.shape["model"] != 0
+    )
+    if seq_shard:
+        qf = constrain(qf, ("batch", None, "act_seq_attn", "kv_heads", None, None))
+
+    def q_block(iq, qblk):
+        q_pos = q_offset + iq * block_q + jnp.arange(block_q)
+        m0 = jnp.full((B, Hkv, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, block_q), jnp.float32)
+        a0 = jnp.zeros((B, block_q, Hkv, g, Dv), jnp.float32)
+        lo, hi = _block_bounds(iq, nk, block_q, block_kv, q_offset, causal, window, causal_skip)
+
+        def body(carry, inp):
+            m, l, acc, ik = carry
+            kblk, vblk = inp
+            s = jnp.einsum("bqngd,bknd->bngqk", qblk, kblk)
+            s = _softcap(s, softcap)
+            k_pos = ik * block_kv + jnp.arange(block_kv)
+            mask = _block_mask(q_pos, k_pos, causal, window, valid_k)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # fully-masked rows keep m=-inf; exp(-inf - -inf) guard:
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+                "bngqk,bknd->bqngd", p, vblk
+            )
+            return (m_new, l, acc, ik + 1), None
+
+        (m, l, acc, _), _ = jax.lax.scan(
+            body,
+            (m0, l0, a0, jnp.full((), lo, jnp.int32)),
+            (kb[lo:hi], vb[lo:hi]),
+        )
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        if seq_shard:
+            out = constrain(out, ("batch", "act_seq_attn", "kv_heads", None, None))
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        lse = m_safe + jnp.log(jnp.maximum(l, 1e-30))
+        lse = jnp.where(jnp.isfinite(m), lse, NEG_INF)
+        return out, lse
+
+    outs, lses = [], []
+    for i in range(nq):
+        o, e = q_block(i, qf[:, i])
+        outs.append(o)
+        lses.append(e)
+    out = jnp.stack(outs, axis=1).reshape(B, nq * block_q, H, Dv)[:, :Sq]
+    lse = jnp.concatenate(lses, axis=-1)[..., :Sq]  # (B,Hkv,g,Sq)
+    return out.astype(q.dtype), lse
+
+
+def _blocked_bwd(
+    q, k, v, out, lse, dout, *, causal, window, softcap, scale, q_offset,
+    block_q, block_kv, causal_skip,
+):
+    """Flash backward: recompute P blockwise from (q,k,lse); no S^2 residuals."""
+    B, Sq, H, Dq = q.shape
+    _, Sk, Hkv, Dv = v.shape
+    g = H // Hkv
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Sk)
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_kv
+    qf = q.astype(jnp.float32)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    do = dout.astype(jnp.float32)
+    of = out.astype(jnp.float32)
+    if pad_q:
+        zq = ((0, 0), (0, pad_q), (0, 0), (0, 0))
+        qf, do, of = jnp.pad(qf, zq), jnp.pad(do, zq), jnp.pad(of, zq)
+        lse = jnp.pad(lse, ((0, 0), (0, 0), (0, 0), (0, pad_q)), constant_values=NEG_INF)
+    if pad_k:
+        zk = ((0, 0), (0, pad_k), (0, 0), (0, 0))
+        kf, vf = jnp.pad(kf, zk), jnp.pad(vf, zk)
+    nq, nk = (Sq + pad_q) // block_q, (Sk + pad_k) // block_kv
+    kb = kf.reshape(B, nk, block_kv, Hkv, Dq).transpose(1, 0, 2, 3, 4)
+    vb = vf.reshape(B, nk, block_kv, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+    qf = qf.reshape(B, nq, block_q, Hkv, g, Dq)
+    do = do.reshape(B, nq, block_q, Hkv, g, Dv)
+    of = of.reshape(B, nq, block_q, Hkv, g, Dv)
+    lse = lse.reshape(B, Hkv, g, nq, block_q)
+
+    dkb0 = jnp.zeros_like(kb)
+    dvb0 = jnp.zeros_like(vb)
+
+    def q_block(iq, qblk, doblk, oblk, lseblk, dkb, dvb):
+        q_pos = q_offset + iq * block_q + jnp.arange(block_q)
+        delta = jnp.einsum("bqngd,bqngd->bngq", doblk, oblk)  # (B,Hkv,g,blk_q)
+        # rows with the NEG_INF sentinel (fully masked / q padding) must give
+        # p = exp(s - inf) = 0, never exp(s + 1e30)
+        lse_safe = jnp.where(lseblk > NEG_INF / 2, lseblk, jnp.inf)
+        lo, hi = _block_bounds(iq, nk, block_q, block_kv, q_offset, causal, window, causal_skip)
+        dq0 = jnp.zeros((B, block_q, Hkv, g, Dq), jnp.float32)
+
+        def body(carry, inp):
+            dq, dkb, dvb, ik = carry
+            kblk, vblk = inp
+            s_raw = scale * jnp.einsum("bqngd,bknd->bngqk", qblk, kblk)
+            if softcap is not None:
+                tanh_val = jnp.tanh(s_raw / softcap)
+                s = softcap * tanh_val
+            else:
+                s = s_raw
+            k_pos = ik * block_kv + jnp.arange(block_kv)
+            mask = _block_mask(q_pos, k_pos, causal, window, Sk)
+            p = jnp.where(
+                mask[None, None, None], jnp.exp(s - lse_safe[..., None]), 0.0
+            )
+            dv_c = jnp.einsum("bngqk,bqngd->bknd", p, doblk)
+            dp = jnp.einsum("bqngd,bknd->bngqk", doblk, vblk)
+            ds = p * (dp - delta[..., None])
+            if softcap is not None:
+                ds = ds * (1.0 - tanh_val * tanh_val)
+            ds = ds * scale
+            dq = dq + jnp.einsum("bngqk,bknd->bqngd", ds, kblk)
+            dk_c = jnp.einsum("bngqk,bqngd->bknd", ds, qblk)
+            j = ik - lo
+            dkb = jax.lax.dynamic_update_index_in_dim(
+                dkb, jax.lax.dynamic_index_in_dim(dkb, j, 0, False) + dk_c, j, 0
+            )
+            dvb = jax.lax.dynamic_update_index_in_dim(
+                dvb, jax.lax.dynamic_index_in_dim(dvb, j, 0, False) + dv_c, j, 0
+            )
+            return (dq, dkb, dvb, ik + 1), None
+
+        (dq, dkw, dvw, _), _ = jax.lax.scan(
+            body,
+            (dq0, dkb[lo:hi], dvb[lo:hi], jnp.full((), lo, jnp.int32)),
+            (kb[lo:hi], vb[lo:hi]),
+        )
+        dkb = jax.lax.dynamic_update_slice_in_dim(dkb, dkw, lo, 0)
+        dvb = jax.lax.dynamic_update_slice_in_dim(dvb, dvw, lo, 0)
+        return dq, dkb, dvb
+
+    dqs = []
+    dkb, dvb = dkb0, dvb0
+    for i in range(nq):
+        dq_i, dkb, dvb = q_block(i, qf[:, i], do[:, i], of[:, i], lse[:, :, :, i], dkb, dvb)
+        dqs.append(dq_i)
+    dq = jnp.stack(dqs, axis=1).reshape(B, nq * block_q, H, Dq)[:, :Sq]
+    dk = dkb.transpose(1, 0, 2, 3, 4).reshape(B, nk * block_kv, Hkv, Dq)[:, :Sk]
+    dv = dvb.transpose(1, 0, 2, 3, 4).reshape(B, nk * block_kv, Hkv, Dv)[:, :Sk]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_blocked_attention(causal, window, softcap, scale, q_offset, block_q, block_kv, causal_skip):
+    """custom_vjp blocked attention for a static config (flash fwd + bwd)."""
+    kw = dict(
+        causal=causal, window=window, softcap=softcap, scale=scale,
+        q_offset=q_offset, block_q=block_q, block_kv=block_kv,
+        causal_skip=causal_skip,
+    )
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        with jax.named_scope("kernel_flash_attn"):
+            out, _ = _blocked_fwd(q, k, v, kv_len=None, **kw)
+        return out
+
+    def fwd(q, k, v):
+        with jax.named_scope("kernel_flash_attn"):
+            out, lse = _blocked_fwd(q, k, v, kv_len=None, **kw)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, dout):
+        q, k, v, out, lse = res
+        with jax.named_scope("kernel_flash_attn_bwd"):
+            return _blocked_bwd(q, k, v, out, lse, dout, **kw)
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+def attention_blocked(
+    q: jax.Array,                  # (B, Sq, H, Dq)
+    k: jax.Array,                  # (B, Sk, Hkv, Dq)
+    v: jax.Array,                  # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    kv_len: Optional[jax.Array] = None,
+    block_q: int = 1024,
+    block_kv: int = 1024,
+    causal_skip: bool = True,
+) -> jax.Array:
+    """Flash-style blocked attention in pure jnp: the CPU/dry-run stand-in for
+    the Pallas kernel.
+
+    Numerically equivalent to ``attention`` (fp32 online softmax) but never
+    materializes the (Sq, Sk) score matrix, statically skips out-of-mask kv
+    blocks, and carries a **flash custom_vjp**: backward recomputes P
+    blockwise from (q, k, lse) instead of letting the scan VJP stack O(S^2)
+    probability residuals.
+    """
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    if kv_len is None and isinstance(q_offset, int):
+        fn = _make_blocked_attention(
+            causal, window, softcap, scale, q_offset, block_q, block_kv, causal_skip
+        )
+        return fn(q, k, v)
+    out, _ = _blocked_fwd(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        q_offset=q_offset, kv_len=kv_len, block_q=block_q, block_kv=block_kv,
+        causal_skip=causal_skip,
+    )
+    return out
+
+
+def ssm_scan(
+    x: jax.Array,    # (B, L, D)  post-conv/silu inputs
+    dt: jax.Array,   # (B, L, D)  softplus'd timestep
+    A: jax.Array,    # (D, N)     negative state matrix (continuous)
+    Bc: jax.Array,   # (B, L, N)  input gate
+    Cc: jax.Array,   # (B, L, N)  output gate
+    D: jax.Array,    # (D,)       skip
+    h0: Optional[jax.Array] = None,  # (B, D, N) initial state
+    chunk: int = 128,
+):
+    """Mamba-1 selective scan oracle (chunked lax.scan, fp32 state).
+
+    Returns (y: (B, L, D), h_last: (B, D, N)).
+
+    Discretization: dA = exp(dt*A), dB = dt*B (Euler for B as in Mamba).
+    """
+    Bsz, L, Dm = x.shape
+    N = A.shape[1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+
+    h = jnp.zeros((Bsz, Dm, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    pad = (-L) % chunk
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+        dtf = jnp.pad(dtf, ((0, 0), (0, pad), (0, 0)))
+        Bf = jnp.pad(Bf, ((0, 0), (0, pad), (0, 0)))
+        Cf = jnp.pad(Cf, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    nc = Lp // chunk
+
+    def chunk_body(h, inp):
+        xc, dtc, bc, cc = inp  # (B, Q, D), (B, Q, D), (B, Q, N), (B, Q, N)
+        dA = jnp.exp(dtc[..., None] * Af)                 # (B, Q, D, N)
+        dBx = (dtc * xc)[..., None] * bc[:, :, None, :]   # (B, Q, D, N)
+
+        def assoc(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        aa, bb = jax.lax.associative_scan(assoc, (dA, dBx), axis=1)
+        hs = aa * h[:, None] + bb                          # (B, Q, D, N)
+        yc = jnp.einsum("bqdn,bqn->bqd", hs, cc)
+        return hs[:, -1], yc
+
+    xs = (
+        xf.reshape(Bsz, nc, chunk, Dm).transpose(1, 0, 2, 3),
+        dtf.reshape(Bsz, nc, chunk, Dm).transpose(1, 0, 2, 3),
+        Bf.reshape(Bsz, nc, chunk, N).transpose(1, 0, 2, 3),
+        Cf.reshape(Bsz, nc, chunk, N).transpose(1, 0, 2, 3),
+    )
+    h_last, ys = jax.lax.scan(chunk_body, h, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(Bsz, Lp, Dm)[:, :L]
+    y = y + xf[:, :L] * D.astype(jnp.float32)
+    return y.astype(x.dtype), h_last
+
+
+def ssm_decode_step(x, dt, A, Bc, Cc, D, h):
+    """Single-token SSM state update.  x,dt: (B, D); Bc,Cc: (B, N); h: (B, D, N)."""
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    dA = jnp.exp(dtf[..., None] * A.astype(jnp.float32))        # (B, D, N)
+    dBx = (dtf * xf)[..., None] * Bc.astype(jnp.float32)[:, None, :]
+    h = h * dA + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cc.astype(jnp.float32)) + xf * D.astype(jnp.float32)
+    return y.astype(x.dtype), h

@@ -1,0 +1,121 @@
+"""Mamba-1 selective-scan Pallas kernel (TPU target, interpret-validated).
+
+TPU-native adaptation of the Mamba CUDA scan: instead of a warp-level
+parallel scan, the sequence is cut into VMEM-sized chunks and the grid's last
+dimension sweeps chunks **sequentially on-core**, carrying the (D_blk, N) SSM
+state in VMEM scratch — the TPU analogue of keeping the recurrence in
+registers/SMEM.  Within a chunk the recurrence runs as a fori_loop of rank-1
+state updates, fully vectorized over the channel block on the VPU:
+
+    h[t] = exp(dt[t] * A) * h[t-1] + (dt[t] * x[t]) ⊗ B[t]
+    y[t] = h[t] · C[t] + D * x[t]
+
+grid = (batch, D/block_d, L/chunk); block spec tiles:
+    x, dt  (chunk, block_d)   B, C  (chunk, N)   A (block_d, N)   D (block_d,)
+
+The channel dim is blocked (block_d) so falcon-mamba's d_inner=8192 chunk
+tiles stay ~4 MiB; N=16 keeps the state tiny.  fp32 state throughout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
+                y_ref, hout_ref, h_scr, *, chunk: int, nc: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = h0_ref[0, :, :].astype(jnp.float32)
+
+    x = x_ref[0, :, :].astype(jnp.float32)     # (chunk, Dblk)
+    dt = dt_ref[0, :, :].astype(jnp.float32)   # (chunk, Dblk)
+    bc = b_ref[0, :, :].astype(jnp.float32)    # (chunk, N)
+    cc = c_ref[0, :, :].astype(jnp.float32)    # (chunk, N)
+    a = a_ref[...].astype(jnp.float32)         # (Dblk, N)
+    d = d_ref[...].astype(jnp.float32)         # (Dblk,)
+
+    def step(t, carry):
+        h, y = carry
+        dA = jnp.exp(dt[t][:, None] * a)                     # (Dblk, N)
+        dBx = (dt[t] * x[t])[:, None] * bc[t][None, :]       # (Dblk, N)
+        h = h * dA + dBx
+        yt = h @ cc[t] + d * x[t]                            # (Dblk,)
+        y = jax.lax.dynamic_update_index_in_dim(y, yt, t, 0)
+        return h, y
+
+    h0 = h_scr[...]
+    y0 = jnp.zeros((chunk, x.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h0, y0))
+    h_scr[...] = h
+    y_ref[0, :, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _finish():
+        hout_ref[0, :, :] = h
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "block_d", "interpret")
+)
+def ssm_scan_pallas(
+    x: jax.Array,    # (B, L, D)
+    dt: jax.Array,   # (B, L, D)
+    A: jax.Array,    # (D, N)
+    Bc: jax.Array,   # (B, L, N)
+    Cc: jax.Array,   # (B, L, N)
+    D: jax.Array,    # (D,)
+    h0: Optional[jax.Array] = None,   # (B, D, N)
+    *,
+    chunk: int = 128,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,L,D), h_last (B,D,N)); matches ref.ssm_scan."""
+    B, L, Dm = x.shape
+    N = A.shape[1]
+    block_d = min(block_d, Dm)
+    assert Dm % block_d == 0, (Dm, block_d)
+    pad = (-L) % chunk
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0))
+        x, dt = jnp.pad(x, zp), jnp.pad(dt, zp)
+        Bc, Cc = jnp.pad(Bc, zp), jnp.pad(Cc, zp)
+    Lp = L + pad
+    nc = Lp // chunk
+    nd = Dm // block_d
+    if h0 is None:
+        h0 = jnp.zeros((B, Dm, N), jnp.float32)
+
+    grid = (B, nd, nc)
+    kernel = functools.partial(_ssm_kernel, chunk=chunk, nc=nc)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, j, ic: (b, ic, j)),
+            pl.BlockSpec((1, chunk, block_d), lambda b, j, ic: (b, ic, j)),
+            pl.BlockSpec((1, chunk, N), lambda b, j, ic: (b, ic, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, j, ic: (b, ic, 0)),
+            pl.BlockSpec((block_d, N), lambda b, j, ic: (j, 0)),
+            pl.BlockSpec((block_d,), lambda b, j, ic: (j,)),
+            pl.BlockSpec((1, block_d, N), lambda b, j, ic: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, j, ic: (b, ic, j)),
+            pl.BlockSpec((1, block_d, N), lambda b, j, ic: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Lp, Dm), x.dtype),
+            jax.ShapeDtypeStruct((B, Dm, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, Bc, Cc, A, D, h0)
+    return y[:, :L], h_last

@@ -1,0 +1,389 @@
+"""Trip-count-aware cost analysis of post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits every computation **once** — a
+``lax.scan`` lowered to ``while`` has its body counted a single time, so
+FLOPs/bytes/collectives of scanned-layer models are undercounted by the trip
+count (30-88x here).  Fortunately the CPU/TPU compilers annotate every while
+with ``backend_config={"known_trip_count":{"n":...}}``; this module walks the
+computation graph from ENTRY, multiplying each called computation by how many
+times it actually runs:
+
+    flops       2 x result_elems x contracted_elems per ``dot``
+                (+ convolutions; elementwise/transcendental flops are ignored —
+                 they are O(1/100) of dot flops for these models)
+    bytes       operands + result per instruction, at fusion *boundaries*
+                (internals of a fusion never touch HBM), skipping pure
+                bookkeeping ops (tuple/gte/parameter/constant/bitcast)
+    collectives operand bytes + modeled wire bytes per op (see hlo_stats);
+                ops inside loops are multiplied by trip count.  ``tpu_wire``
+                re-costs f32 collectives at bf16 width: XLA-CPU's float
+                normalization promotes the logically-bf16 params/grads/
+                activations this program moves to f32, which a TPU build
+                would not.
+
+This is a *model*, not ground truth — but unlike the built-in analysis it is
+consistent across architectures and shapes, which is what roofline
+comparisons need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from .hlo_stats import COLLECTIVES, _group_size, _wire_factor, shape_bytes
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+_CALL_ATTR_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRUE_FALSE_RE = re.compile(r"true_computation=%?([\w.\-]+), false_computation=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_SHAPE_DIMS_RE = re.compile(r"[a-z0-9]+\[([0-9,]*)\]")
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str       # instruction name (no leading %)
+    opcode: str
+    result: str     # result type text
+    operands: str   # operand region text
+    attrs: str      # attributes after the operand parens
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    bytes_bf16eq: float = 0.0
+    # portion attributed to jax.named_scope("kernel_*") regions — tensors a
+    # TPU Pallas kernel keeps in VMEM and never writes to HBM
+    kernel_flops: float = 0.0
+    kernel_bytes: float = 0.0
+    kernel_bytes_bf16eq: float = 0.0
+    coll_operand: float = 0.0
+    coll_wire: float = 0.0
+    coll_tpu_wire: float = 0.0
+    per_op: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Totals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_bf16eq += other.bytes_bf16eq * mult
+        self.kernel_flops += other.kernel_flops * mult
+        self.kernel_bytes += other.kernel_bytes * mult
+        self.kernel_bytes_bf16eq += other.kernel_bytes_bf16eq * mult
+        self.coll_operand += other.coll_operand * mult
+        self.coll_wire += other.coll_wire * mult
+        self.coll_tpu_wire += other.coll_tpu_wire * mult
+        for op, d in other.per_op.items():
+            mine = self.per_op.setdefault(
+                op, {"count": 0.0, "operand_bytes": 0.0, "wire_bytes": 0.0, "tpu_wire_bytes": 0.0}
+            )
+            for k in mine:
+                mine[k] += d[k] * mult
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _split_instr(line: str) -> Optional[Instr]:
+    eq = line.find(" = ")
+    if eq < 0:
+        return None
+    nm = _NAME_RE.match(line)
+    name = nm.group(1) if nm else ""
+    rhs = line[eq + 3 :].lstrip()
+    if rhs.startswith("("):  # tuple result type — skip balanced parens
+        depth = 0
+        j = 0
+        for j, c in enumerate(rhs):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        result = rhs[: j + 1]
+        rest = rhs[j + 1 :].lstrip()
+        k = rest.find("(")
+        if k < 0:
+            return None
+        opcode = rest[:k].strip()
+        tail = rest[k:]
+    else:
+        k = rhs.find("(")
+        if k < 0:
+            return None
+        head = rhs[:k].rstrip()
+        sp = head.rsplit(" ", 1)
+        if len(sp) == 2:
+            result, opcode = sp
+        else:
+            result, opcode = "", sp[0]
+        tail = rhs[k:]
+    # operand region: balanced parens from tail[0]
+    depth = 0
+    j = 0
+    for j, c in enumerate(tail):
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    operands = tail[1:j]
+    attrs = tail[j + 1 :]
+    return Instr(name=name, opcode=opcode, result=result, operands=operands, attrs=attrs)
+
+
+def parse_computations(hlo_text: str) -> Tuple[Dict[str, List[Instr]], Optional[str]]:
+    comps: Dict[str, List[Instr]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for raw in hlo_text.splitlines():
+        if cur is None:
+            m = _COMP_START_RE.match(raw)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        ins = _split_instr(raw)
+        if ins is not None:
+            comps[cur].append(ins)
+    return comps, entry
+
+
+def _dims_of(type_text: str) -> List[int]:
+    m = _SHAPE_DIMS_RE.search(type_text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(1).split(",")] if m.group(1) else []
+
+
+def _operand_entries(operands: str) -> List[str]:
+    """Split an operand region on top-level commas."""
+    out, depth, cur = [], 0, []
+    for c in operands:
+        if c in "([{":
+            depth += 1
+        elif c in ")]}":
+            depth -= 1
+        if c == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(c)
+    if cur:
+        out.append("".join(cur).strip())
+    return [e for e in out if e]
+
+
+def _operand_bytes(ins: Instr, types: Dict[str, str], f32_as_bf16: bool = False) -> int:
+    """Bytes of all operands, resolving name-only references via ``types``."""
+    total = 0
+    for entry in _operand_entries(ins.operands):
+        if "[" in entry:
+            total += shape_bytes(entry, f32_as_bf16)
+            continue
+        m = _OPERAND_NAME_RE.search(entry)
+        if m and m.group(1) in types:
+            total += shape_bytes(types[m.group(1)], f32_as_bf16)
+    return total
+
+
+def _dot_flops(ins: Instr, types: Dict[str, str]) -> float:
+    out = 1
+    for d in _dims_of(ins.result):
+        out *= d
+    # contracted size from lhs operand shape + lhs_contracting_dims
+    entries = _operand_entries(ins.operands)
+    lhs_dims: List[int] = []
+    if entries:
+        e = entries[0]
+        if "[" in e:
+            lhs_dims = _dims_of(e)
+        else:
+            m = _OPERAND_NAME_RE.search(e)
+            if m and m.group(1) in types:
+                lhs_dims = _dims_of(types[m.group(1)])
+    mc = _LHS_CONTRACT_RE.search(ins.attrs)
+    contracted = 1
+    if lhs_dims and mc and mc.group(1):
+        for ci in mc.group(1).split(","):
+            i = int(ci)
+            if i < len(lhs_dims):
+                contracted *= lhs_dims[i]
+    return 2.0 * out * contracted
+
+
+def _conv_flops(ins: Instr, types: Dict[str, str]) -> float:
+    # 2 x output elems x (kernel spatial x in_channels): derive from rhs shape
+    entries = _operand_entries(ins.operands)
+    out = 1
+    for d in _dims_of(ins.result):
+        out *= d
+    rhs: List[int] = []
+    if len(entries) >= 2:
+        e = entries[1]
+        if "[" in e:
+            rhs = _dims_of(e)
+        else:
+            m = _OPERAND_NAME_RE.search(e)
+            if m and m.group(1) in types:
+                rhs = _dims_of(types[m.group(1)])
+    k = 1
+    for d in rhs:
+        k *= d
+    # rhs = kernel; one of its dims is out_channels (already in `out`)
+    if rhs:
+        k //= max(rhs[-1], 1)  # heuristic: last dim = output feature dim
+    return 2.0 * out * k
+
+
+def analyse_hlo(hlo_text: str, default_group: int = 1) -> Totals:
+    comps, entry = parse_computations(hlo_text)
+    # per-computation name -> result-type map for operand shape resolution
+    type_maps: Dict[str, Dict[str, str]] = {
+        cname: {i.name: i.result for i in instrs if i.name}
+        for cname, instrs in comps.items()
+    }
+    memo: Dict[Tuple[str, bool], Totals] = {}
+    fusion_flops_memo: Dict[str, float] = {}
+
+    def _scoped(ins: Instr) -> bool:
+        return "kernel_" in ins.attrs
+
+    def fusion_flops(name: str) -> float:
+        """dots/convs inside a fusion computation (flops only; bytes stay at boundary)."""
+        if name in fusion_flops_memo:
+            return fusion_flops_memo[name]
+        total = 0.0
+        types = type_maps.get(name, {})
+        for ins in comps.get(name, []):
+            if ins.opcode == "dot":
+                total += _dot_flops(ins, types)
+            elif ins.opcode == "convolution":
+                total += _conv_flops(ins, types)
+            elif ins.opcode == "fusion":
+                m = _CALL_ATTR_RE.search(ins.attrs)
+                if m:
+                    total += fusion_flops(m.group(1))
+        fusion_flops_memo[name] = total
+        return total
+
+    def walk(name: str, in_scope: bool = False) -> Totals:
+        key = (name, in_scope)
+        if key in memo:
+            return memo[key]
+        memo[key] = Totals()  # guard (recursion shouldn't happen, but be safe)
+        t = Totals()
+        types = type_maps.get(name, {})
+
+        def io_bytes(ins, eq=False):
+            return _operand_bytes(ins, types, eq) + shape_bytes(ins.result, eq)
+
+        def account(ins, flops=0.0):
+            b = io_bytes(ins)
+            beq = io_bytes(ins, True)
+            t.flops += flops
+            t.bytes += b
+            t.bytes_bf16eq += beq
+            if in_scope or _scoped(ins):
+                t.kernel_flops += flops
+                t.kernel_bytes += b
+                t.kernel_bytes_bf16eq += beq
+
+        for ins in comps.get(name, []):
+            op = ins.opcode
+            base_op = op[:-6] if op.endswith("-start") else op
+            scoped = in_scope or _scoped(ins)
+            if op == "while":
+                m = _COND_BODY_RE.search(ins.attrs)
+                trip = 1
+                mt = _TRIP_RE.search(ins.attrs)
+                if mt:
+                    trip = int(mt.group(1))
+                if m:
+                    t.add(walk(m.group(2), scoped), trip)   # body
+                    t.add(walk(m.group(1), scoped), trip)   # cond
+                continue
+            if op in ("call", "async-start") or op.startswith("async"):
+                m = _CALL_ATTR_RE.search(ins.attrs)
+                if m:
+                    t.add(walk(m.group(1), scoped))
+                continue
+            if op == "custom-call":
+                m = _CALL_ATTR_RE.search(ins.attrs)
+                if m:
+                    t.add(walk(m.group(1), scoped))
+                account(ins)
+                continue
+            if op == "conditional":
+                names = []
+                mb = _BRANCHES_RE.search(ins.attrs)
+                if mb:
+                    names = [x.strip().lstrip("%") for x in mb.group(1).split(",")]
+                else:
+                    mtf = _TRUE_FALSE_RE.search(ins.attrs)
+                    if mtf:
+                        names = [mtf.group(1), mtf.group(2)]
+                if names:
+                    branches = [walk(n, scoped) for n in names]
+                    # max-cost branch (upper bound)
+                    t.add(max(branches, key=lambda b: b.flops + b.bytes))
+                continue
+            if op == "fusion":
+                m = _CALL_ATTR_RE.search(ins.attrs)
+                account(ins, fusion_flops(m.group(1)) if m else 0.0)
+                continue
+            if op == "dot":
+                account(ins, _dot_flops(ins, types))
+                continue
+            if op == "convolution":
+                account(ins, _conv_flops(ins, types))
+                continue
+            if base_op in COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                obytes = _operand_bytes(ins, types)
+                n = _group_size(ins.attrs, default_group)
+                wf = _wire_factor(base_op, n)
+                wire = obytes * wf
+                # f32 on the wire that is logically bf16 on TPU
+                obytes_eq = _operand_bytes(ins, types, True)
+                tpu = wire * (obytes_eq / obytes if obytes else 1.0)
+                d = t.per_op.setdefault(
+                    base_op,
+                    {"count": 0.0, "operand_bytes": 0.0, "wire_bytes": 0.0, "tpu_wire_bytes": 0.0},
+                )
+                d["count"] += 1
+                d["operand_bytes"] += obytes
+                d["wire_bytes"] += wire
+                d["tpu_wire_bytes"] += tpu
+                t.coll_operand += obytes
+                t.coll_wire += wire
+                t.coll_tpu_wire += tpu
+                t.bytes += obytes  # data still moves through HBM
+                t.bytes_bf16eq += obytes_eq
+                continue
+            if op in _SKIP_BYTES_OPS or op.endswith("-done"):
+                continue
+            account(ins)
+        memo[key] = t
+        return t
+
+    if entry is None:
+        return Totals()
+    return walk(entry)

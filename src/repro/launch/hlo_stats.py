@@ -1,0 +1,147 @@
+"""Parse collective traffic out of (post-SPMD, per-device) HLO text.
+
+``compiled.as_text()`` is the per-device program after the SPMD partitioner —
+every cross-chip transfer appears as an explicit collective op whose operand
+types are printed inline:
+
+    %ar = bf16[4,512]{1,0} all-reduce(bf16[4,512]{1,0} %add.9), replica_groups=...
+
+We sum operand bytes per collective family (the prompt's roofline definition)
+and additionally model *wire* bytes per op from its replica-group size n:
+
+    all-reduce        2 (n-1)/n x operand      (ring reduce-scatter + all-gather)
+    all-gather        (n-1)   x operand        (each device receives n-1 shards)
+    reduce-scatter    (n-1)/n x operand
+    all-to-all        (n-1)/n x operand
+    collective-permute       1 x operand
+
+Both totals are reported; the roofline's collective term uses wire bytes over
+a single 50 GB/s ICI link (conservative: assumes no multi-link parallelism).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "fp8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# "%name = <shape(s)> <opcode>(" — opcode may carry -start suffix (async)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+("
+    + "|".join(COLLECTIVES)
+    + r")(-start)?\("
+)
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def shape_bytes(text: str, f32_as_bf16: bool = False) -> int:
+    """Sum byte sizes of every dtype[dims] group in ``text``.
+
+    ``f32_as_bf16``: count f32 tensors at 2 bytes/elem — XLA-CPU's float
+    normalization promotes logically-bf16 tensors to f32, which a TPU build
+    keeps in bf16; this gives the TPU-equivalent byte count.
+    """
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        width = _DTYPE_BYTES[dtype]
+        if f32_as_bf16 and dtype == "f32":
+            width = 2
+        total += n * width
+    return total
+
+
+def _operand_region(line: str) -> str:
+    """The text inside the top-level parens of the op call on this line."""
+    i = line.find("(")
+    depth, j = 0, i
+    for j in range(i, len(line)):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    return line[i + 1 : j]
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ITOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [n_groups, group_size]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return default
+
+
+def _wire_factor(op: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op == "all-gather":
+        return float(n - 1)
+    if op in ("reduce-scatter", "all-to-all", "ragged-all-to-all"):
+        return (n - 1) / n
+    if op == "collective-broadcast":
+        return 1.0
+    return 1.0  # collective-permute
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op: Dict[str, Dict[str, float]]      # op -> {count, operand_bytes, wire_bytes}
+    operand_bytes: int
+    wire_bytes: float
+
+    def summary(self) -> Dict:
+        return {
+            "per_op": self.per_op,
+            "operand_bytes": self.operand_bytes,
+            "wire_bytes": self.wire_bytes,
+        }
+
+
+def parse_collectives(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    per_op: Dict[str, Dict[str, float]] = {}
+    total_operand = 0
+    total_wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        op = m.group(2)
+        operands = _operand_region(line)
+        obytes = shape_bytes(operands)
+        n = _group_size(line, default_group)
+        wire = obytes * _wire_factor(op, n)
+        d = per_op.setdefault(op, {"count": 0, "operand_bytes": 0, "wire_bytes": 0.0})
+        d["count"] += 1
+        d["operand_bytes"] += obytes
+        d["wire_bytes"] += wire
+        total_operand += obytes
+        total_wire += wire
+    return CollectiveStats(per_op=per_op, operand_bytes=total_operand, wire_bytes=total_wire)

@@ -1,0 +1,123 @@
+"""HPO driver: the paper's Experiment loop over model-training trials.
+
+This is Auptimizer's headline use-case on the training substrate: pick an
+architecture (reduced config on CPU), define a search space over training
+hyperparameters, and let any proposer drive trials through a resource
+manager.  Switching HPO algorithms is exactly one flag (--proposer), the
+paper's flexibility claim.
+
+    PYTHONPATH=src python -m repro.launch.hpo --arch starcoder2-3b \\
+        --proposer random --n-samples 8 --n-parallel 2 --steps 30
+
+Each trial trains the smoke config for --steps on the deterministic
+synthetic stream and reports -final_loss as the score.  All proposals and
+results land in the tracking DB (--db) for post-hoc analysis / resume.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import numpy as np
+
+
+def make_trial(arch: str, steps: int, batch: int, seq: int, seed: int):
+    """A trial callable: config dict -> score (higher = better)."""
+
+    def trial(config: dict) -> float:
+        import jax
+
+        from ..configs import get_smoke_config
+        from ..configs.base import ParallelConfig, TrainConfig
+        from ..data.pipeline import SyntheticLM
+        from ..train.train_step import init_train_state, make_train_step
+
+        cfg = get_smoke_config(arch)
+        n_steps = int(config.get("n_iterations", 1) * steps)
+        tc = TrainConfig(
+            model=cfg,
+            parallel=ParallelConfig(remat="none"),
+            learning_rate=float(config["learning_rate"]),
+            warmup_steps=max(1, int(config.get("warmup_frac", 0.1) * n_steps)),
+            total_steps=n_steps,
+            weight_decay=float(config.get("weight_decay", 0.1)),
+            b2=float(config.get("b2", 0.95)),
+            grad_clip=float(config.get("grad_clip", 1.0)),
+            seed=seed,
+        )
+        data = SyntheticLM(cfg.vocab_size, seq, batch, seed=seed)
+        state = init_train_state(jax.random.PRNGKey(seed), tc)
+        step_fn = jax.jit(make_train_step(tc))
+        loss = float("inf")
+        for s in range(n_steps):
+            state, metrics = step_fn(state, data.make_batch(s))
+            loss = float(metrics["loss"])
+            if not np.isfinite(loss):
+                return -1e9  # diverged
+        return -loss
+
+    return trial
+
+
+SPACE = [
+    {"name": "learning_rate", "type": "float", "range": [1e-4, 3e-2], "scale": "log"},
+    {"name": "warmup_frac", "type": "float", "range": [0.02, 0.5]},
+    {"name": "weight_decay", "type": "float", "range": [0.0, 0.3]},
+    {"name": "b2", "type": "float", "range": [0.9, 0.999]},
+    {"name": "grad_clip", "type": "choice", "range": [0.5, 1.0, 2.0]},
+]
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="starcoder2-3b")
+    p.add_argument("--proposer", default="random",
+                   help="random | grid | gp | tpe | hyperband | bohb | asha | pbt")
+    p.add_argument("--n-samples", type=int, default=8)
+    p.add_argument("--n-parallel", type=int, default=2)
+    p.add_argument("--steps", type=int, default=30, help="train steps per unit budget")
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--db", default="", help="sqlite path ('' = in-memory)")
+    p.add_argument("--deadline", type=float, default=0.0, help="per-job seconds (straggler kill)")
+    args = p.parse_args(argv)
+
+    from ..core.experiment import Experiment
+
+    exp_cfg = {
+        "proposer": args.proposer,
+        "parameter_config": SPACE,
+        "n_samples": args.n_samples,
+        "n_parallel": args.n_parallel,
+        "target": "max",
+        "random_seed": args.seed,
+        "resource": "local",
+    }
+    if args.db:
+        exp_cfg["db_path"] = args.db
+    if args.deadline:
+        exp_cfg["job_deadline_s"] = args.deadline
+
+    trial = make_trial(args.arch, args.steps, args.batch, args.seq, args.seed)
+    t0 = time.time()
+    exp = Experiment(exp_cfg, trial)
+    best = exp.run()
+    dt = time.time() - t0
+    print(json.dumps({
+        "proposer": args.proposer,
+        "arch": args.arch,
+        "best_score": best["score"],
+        "best_config": {k: v for k, v in best["config"].items()
+                        if not k.startswith(("hb_", "asha_", "pbt_")) and k != "job_id"},
+        "n_jobs": best.get("n_jobs"),
+        "seconds": round(dt, 1),
+    }, default=float, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,94 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e targets).
+
+    compute    = HLO_FLOPs_per_device        / 197e12   [s]
+    memory     = HBM_bytes_per_device        / 819e9    [s]
+    collective = wire_bytes_per_device       / 50e9     [s]
+
+Inputs come from ``hlo_cost.analyse_hlo`` (trip-count-aware walk of the
+post-SPMD per-device program — chip count is already divided out):
+
+* ``bytes``: counted at bf16-equivalent width (XLA-CPU promotes logically-bf16
+  tensors to f32) and **kernel-adjusted** — bytes inside
+  ``jax.named_scope("kernel_*")`` regions (flash-attention blocks, SSM scan
+  chunks, fused norms) stay in VMEM on the TPU target and are subtracted;
+  the unadjusted figure is kept alongside.
+* ``wire bytes``: ring-model wire traffic per collective (see hlo_stats),
+  f32->bf16-corrected, over one 50 GB/s ICI link (conservative).
+
+MODEL_FLOPS uses the standard estimates (6·N·D for a train step over D
+tokens, 2·N_active·D for prefill/decode), divided by chip count; the
+useful-FLOP ratio MODEL_FLOPS / HLO_FLOPs exposes remat recompute,
+causal-mask waste, and dispatch overhead.  ``roofline_fraction`` =
+(MODEL_FLOPS / peak) / max(term) — the fraction of the binding roofline
+bound spent on useful model math; this is the score §Perf hillclimbs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip (v5e)
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+KIND_TO_FLOP_FACTOR = {"train": 6.0, "prefill": 2.0, "decode": 2.0}
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float              # kernel-adjusted bf16eq bytes / HBM_BW
+    collective_s: float          # tpu-corrected wire bytes / ICI_BW
+    memory_unadjusted_s: float   # without the kernel-VMEM adjustment
+    flops_dev: float
+    bytes_dev: float             # bf16eq, kernel-adjusted
+    bytes_dev_raw: float         # as-compiled (f32-promoted), unadjusted
+    kernel_bytes_dev: float      # bytes inside kernel_* scopes (stay in VMEM on TPU)
+    wire_bytes_dev: float
+    model_flops_dev: float
+    useful_ratio: float
+    bottleneck: str
+    roofline_fraction: float
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def analyse(
+    *,
+    flops_dev: float,
+    bytes_bf16eq_dev: float,
+    kernel_bytes_bf16eq_dev: float,
+    bytes_raw_dev: float,
+    wire_bytes_dev: float,
+    n_params_active: float,
+    tokens_global: float,
+    kind: str,
+    n_chips: int,
+) -> Roofline:
+    bytes_adj = max(bytes_bf16eq_dev - kernel_bytes_bf16eq_dev, 0.0)
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_adj / HBM_BW
+    collective_s = wire_bytes_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    model_flops = KIND_TO_FLOP_FACTOR[kind] * n_params_active * tokens_global / n_chips
+    useful = model_flops / flops_dev if flops_dev else 0.0
+    dominant = max(terms.values())
+    frac = (model_flops / PEAK_FLOPS) / dominant if dominant > 0 else 0.0
+    return Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        memory_unadjusted_s=bytes_bf16eq_dev / HBM_BW,
+        flops_dev=flops_dev,
+        bytes_dev=bytes_adj,
+        bytes_dev_raw=bytes_raw_dev,
+        kernel_bytes_dev=kernel_bytes_bf16eq_dev,
+        wire_bytes_dev=wire_bytes_dev,
+        model_flops_dev=model_flops,
+        useful_ratio=useful,
+        bottleneck=bottleneck,
+        roofline_fraction=min(frac, 1.0),
+    )

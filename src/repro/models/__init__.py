@@ -1,0 +1,3 @@
+from . import attention, layers, mamba, mlp, moe, rope, transformer
+
+__all__ = ["attention", "layers", "mamba", "mlp", "moe", "rope", "transformer"]

@@ -1,0 +1,218 @@
+"""Attention mixers: GQA (global / sliding-window local) and MLA (DeepSeek).
+
+Train/prefill paths call ``kernels.ops.attention`` (flash kernel on TPU, jnp
+oracle elsewhere).  Decode paths update a KV cache at ``pos``:
+
+* GQA caches (k, v) per layer — (B, max_seq, n_kv, head_dim);
+* MLA caches the **compressed** latent (c_kv, k_rope) — 512+64 floats/token
+  instead of 2·H·Dh = 4096 — and runs the *absorbed* decode form
+  (q projected into latent space), which is the technique's entire point.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from ..kernels import ops, ref
+from .layers import Params, Specs, dense_init, dtype_of, rmsnorm_init
+from .rope import apply_rope
+
+
+# =============================== GQA ==============================================
+def gqa_init(key, cfg: ModelConfig) -> Params:
+    pdt = dtype_of(cfg.param_dtype)
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, (d, H, Dh), pdt, fan_in=d),
+        "wk": dense_init(kk, (d, Hkv, Dh), pdt, fan_in=d),
+        "wv": dense_init(kv, (d, Hkv, Dh), pdt, fan_in=d),
+        "wo": dense_init(ko, (H, Dh, d), pdt, fan_in=H * Dh),
+    }
+
+
+def gqa_specs(cfg: ModelConfig) -> Specs:
+    return {
+        "wq": ("embed", "heads", "head"),
+        "wk": ("embed", "kv_heads", "head"),
+        "wv": ("embed", "kv_heads", "head"),
+        "wo": ("heads", "head", "embed"),
+    }
+
+
+def gqa_apply(
+    p: Params,
+    x: jax.Array,                        # (B, S, d)
+    cfg: ModelConfig,
+    positions: jax.Array,                # (B, S)
+    *,
+    local: bool = False,
+) -> jax.Array:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # TP over heads when divisible, else Ulysses-style sequence parallelism:
+    # "act_seq_attn" picks up the model axis only if "heads" could not.
+    q = constrain(q, ("batch", "act_seq_attn", "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    out = ops.attention(
+        q, k, v,
+        causal=not cfg.encoder_only,
+        window=cfg.sliding_window if local else None,
+        softcap=cfg.attn_softcap,
+    )
+    out = constrain(out, ("batch", "act_seq_attn", "heads", None))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Dict[str, jax.Array]:
+    Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_seq, Hkv, Dh), dtype),
+        "v": jnp.zeros((batch, max_seq, Hkv, Dh), dtype),
+    }
+
+
+def gqa_cache_specs(cfg: ModelConfig) -> Specs:
+    return {
+        "k": ("batch", "cache_seq", "kv_heads", "head"),
+        "v": ("batch", "cache_seq", "kv_heads", "head"),
+    }
+
+
+def gqa_decode(
+    p: Params,
+    x: jax.Array,                        # (B, 1, d)
+    cache: Dict[str, jax.Array],
+    pos: jax.Array,                      # scalar int32: index being written
+    cfg: ModelConfig,
+    *,
+    local: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    pos_b = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, pos_b, cfg.rope_theta)
+    k = apply_rope(k, pos_b, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    out = ref.attention(
+        q, ck, cv,
+        causal=True,
+        window=cfg.sliding_window if local else None,
+        softcap=cfg.attn_softcap,
+        q_offset=pos,
+        kv_len=pos + 1,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": ck, "v": cv}
+
+
+# =============================== MLA ==============================================
+def mla_init(key, cfg: ModelConfig) -> Params:
+    pdt = dtype_of(cfg.param_dtype)
+    d, H, Dh = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    r, rr = cfg.kv_lora_rank, cfg.rope_head_dim
+    kq, ka, kb1, kb2, ko = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(kq, (d, H, Dh + rr), pdt, fan_in=d),
+        "wkv_a": dense_init(ka, (d, r + rr), pdt, fan_in=d),
+        "kv_norm": rmsnorm_init(r, pdt),
+        "wk_b": dense_init(kb1, (r, H, Dh), pdt, fan_in=r),
+        "wv_b": dense_init(kb2, (r, H, Dh), pdt, fan_in=r),
+        "wo": dense_init(ko, (H, Dh, d), pdt, fan_in=H * Dh),
+    }
+
+
+def mla_specs(cfg: ModelConfig) -> Specs:
+    return {
+        "wq": ("embed", "heads", "head"),
+        "wkv_a": ("embed", None),
+        "kv_norm": (None,),
+        "wk_b": (None, "heads", "head"),
+        "wv_b": (None, "heads", "head"),
+        "wo": ("heads", "head", "embed"),
+    }
+
+
+def _mla_qkc(p, x, cfg, positions):
+    """Shared q / compressed-kv computation. Returns (q_nope, q_rope, c, k_rope)."""
+    from .layers import apply_rmsnorm
+
+    Dh, rr = cfg.resolved_head_dim, cfg.rope_head_dim
+    r = cfg.kv_lora_rank
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :Dh], q[..., Dh:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c, k_rope = ckv[..., :r], ckv[..., r:]
+    c = apply_rmsnorm(c, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope, c, k_rope
+
+
+def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, positions: jax.Array) -> jax.Array:
+    """Prefill/train path: decompress K,V and run standard attention."""
+    Dh = cfg.resolved_head_dim
+    q_nope, q_rope, c, k_rope = _mla_qkc(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, p["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", c, p["wv_b"])
+    H = cfg.n_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], k_nope.shape[:3] + (cfg.rope_head_dim,))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    scale = 1.0 / math.sqrt(Dh + cfg.rope_head_dim)
+    q_full = constrain(q_full, ("batch", "act_seq_attn", "heads", None))
+    k_full = constrain(k_full, ("batch", None, "heads", None))
+    v = constrain(v, ("batch", None, "heads", None))
+    out = ops.attention(q_full, k_full, v, causal=True, scale=scale)
+    out = constrain(out, ("batch", "act_seq_attn", "heads", None))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Dict[str, jax.Array]:
+    return {
+        "c": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_seq, cfg.rope_head_dim), dtype),
+    }
+
+
+def mla_cache_specs(cfg: ModelConfig) -> Specs:
+    return {"c": ("batch", "cache_seq", None), "kr": ("batch", "cache_seq", None)}
+
+
+def mla_decode(
+    p: Params, x: jax.Array, cache: Dict[str, jax.Array], pos: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Absorbed MLA decode: attention runs entirely in the latent space."""
+    B = x.shape[0]
+    pos_b = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _mla_qkc(p, x, cfg, pos_b)
+    cc = jax.lax.dynamic_update_slice(cache["c"], c_new.astype(cache["c"].dtype), (0, pos, 0))
+    ckr = jax.lax.dynamic_update_slice(cache["kr"], kr_new.astype(cache["kr"].dtype), (0, pos, 0))
+
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim + cfg.rope_head_dim)
+    # absorb wk_b into q: (B,1,H,Dh) x (r,H,Dh) -> (B,1,H,r)
+    q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope.astype(jnp.float32), p["wk_b"].astype(jnp.float32))
+    scores = (
+        jnp.einsum("bqhr,bsr->bhqs", q_lat, cc.astype(jnp.float32))
+        + jnp.einsum("bqhk,bsk->bhqs", q_rope.astype(jnp.float32), ckr.astype(jnp.float32))
+    ) * scale
+    S = cc.shape[1]
+    mask = jnp.arange(S)[None, None, None, :] <= pos
+    scores = jnp.where(mask, scores, ref.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhqs,bsr->bqhr", probs, cc.astype(jnp.float32))
+    out = jnp.einsum("bqhr,rhk->bqhk", out_lat, p["wv_b"].astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"c": cc, "kr": ckr}

@@ -1,0 +1,86 @@
+"""Shared primitives: initializers, norms, embeddings, dtype plumbing.
+
+Parameters are plain nested dicts of jnp arrays.  Every init function has a
+matching ``*_specs`` returning the same tree with tuples of *logical axis
+names* as leaves; ``repro.distributed.sharding`` maps those onto the mesh.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape: Tuple[int, ...], dtype, fan_in: Optional[int] = None) -> jax.Array:
+    """Truncated-normal with 1/sqrt(fan_in) scaling (fan_in = shape[0] default)."""
+    fan = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(max(fan, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    # 1/sqrt(d) keeps tied-unembedding logits O(1); gemma-style ``scale_embed``
+    # multiplies activations back up by sqrt(d) after lookup.
+    std = 1.0 / math.sqrt(d)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d), jnp.float32) * std).astype(dtype)
+
+
+# -- norm ---------------------------------------------------------------------------
+def rmsnorm_init(d: int, dtype) -> jax.Array:
+    return jnp.zeros((d,), dtype)  # stored as (gamma - 1), gemma convention
+
+
+def rmsnorm_specs() -> Tuple:
+    return (None,)
+
+
+def apply_rmsnorm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    return ops.rmsnorm(x, gamma, eps=eps)
+
+
+# -- embedding / unembedding ----------------------------------------------------------
+def embedding_init(key, cfg: ModelConfig) -> Params:
+    pdt = dtype_of(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"embed": embed_init(k1, cfg.vocab_size, cfg.d_model, pdt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, (cfg.d_model, cfg.vocab_size), pdt)
+    return p
+
+
+def embedding_specs(cfg: ModelConfig) -> Specs:
+    s = {"embed": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        s["unembed"] = ("embed", "vocab")
+    return s
+
+
+def embed_tokens(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype_of(cfg.compute_dtype))
+    if cfg.scale_embed:
+        x = x * math.sqrt(cfg.d_model)
+    return x
+
+
+def unembed(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Final logits with optional gemma2 softcap; fp32 output for a stable loss."""
+    table = params.get("unembed")
+    if table is None:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]).astype(jnp.float32)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, table).astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits

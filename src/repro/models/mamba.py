@@ -1,0 +1,107 @@
+"""Mamba-1 selective-SSM mixer (falcon-mamba, jamba).
+
+x -> in_proj -> (u, z); u -> causal depthwise conv(K) -> silu ->
+selective scan (kernels.ops.ssm_scan; Pallas on TPU) -> y * silu(z) -> out_proj.
+
+Decode keeps two pieces of state per layer: the last K-1 conv inputs and the
+(B, d_inner, N) SSM state — O(1) in sequence length, which is why the
+``long_500k`` cell runs on the SSM/hybrid archs only.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from .layers import Params, Specs, dense_init, dtype_of
+
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    pdt = dtype_of(cfg.param_dtype)
+    d, di, N, K, dr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv, cfg.dt_rank
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+    return {
+        "in_proj": dense_init(k1, (d, 2, di), pdt, fan_in=d),
+        "conv_w": dense_init(k2, (K, di), pdt, fan_in=K),
+        "conv_b": jnp.zeros((di,), pdt),
+        "x_proj": dense_init(k3, (di, dr + 2 * N), pdt, fan_in=di),
+        "dt_proj": dense_init(k4, (dr, di), pdt, fan_in=dr),
+        # softplus(dt_bias) ~= 0.01: tokens start with slow dynamics
+        "dt_bias": jnp.full((di,), math.log(math.expm1(0.01)), pdt),
+        "A_log": jnp.log(A),                     # fp32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(k5, (di, d), pdt, fan_in=di),
+    }
+
+
+def mamba_specs(cfg: ModelConfig) -> Specs:
+    return {
+        "in_proj": ("embed", None, "inner"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "x_proj": ("inner", None),
+        "dt_proj": (None, "inner"),
+        "dt_bias": ("inner",),
+        "A_log": ("inner", None),
+        "D": ("inner",),
+        "out_proj": ("inner", "embed"),
+    }
+
+
+def _split_xproj(h: jax.Array, cfg: ModelConfig):
+    dr, N = cfg.dt_rank, cfg.ssm_state
+    return h[..., :dr], h[..., dr : dr + N], h[..., dr + N :]
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq: u (B, L, D), w (K, D)."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    L = u.shape[1]
+    out = sum(pad[:, j : j + L] * w[j] for j in range(K))
+    return out + b
+
+
+def mamba_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    uz = jnp.einsum("bsd,dci->bsci", x, p["in_proj"])
+    u, z = uz[:, :, 0], uz[:, :, 1]
+    u = jax.nn.silu(_causal_conv(u, p["conv_w"], p["conv_b"]))
+    dt_raw, Bc, Cc = _split_xproj(jnp.einsum("bsi,ij->bsj", u, p["x_proj"]), cfg)
+    dt = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", dt_raw, p["dt_proj"]) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ops.ssm_scan(u, dt, A, Bc, Cc, p["D"])
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_cache_specs(cfg: ModelConfig) -> Specs:
+    return {"conv": ("batch", None, "inner"), "h": ("batch", "inner", None)}
+
+
+def mamba_decode(
+    p: Params, x: jax.Array, cache: Dict[str, jax.Array], cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token step. x: (B, 1, d)."""
+    uz = jnp.einsum("bsd,dci->bsci", x, p["in_proj"])
+    u, z = uz[:, 0, 0], uz[:, 0, 1]                               # (B, di)
+    window = jnp.concatenate([cache["conv"], u[:, None]], axis=1)  # (B, K, di)
+    u_conv = jax.nn.silu(jnp.einsum("bki,ki->bi", window, p["conv_w"]) + p["conv_b"])
+    dt_raw, Bc, Cc = _split_xproj(jnp.einsum("bi,ij->bj", u_conv, p["x_proj"]), cfg)
+    dt = jax.nn.softplus(jnp.einsum("br,ri->bi", dt_raw, p["dt_proj"]) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h = ops.ssm_decode_step(u_conv, dt, A, Bc, Cc, p["D"], cache["h"])
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"])[:, None]
+    return out, {"conv": window[:, 1:], "h": h}

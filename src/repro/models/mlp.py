@@ -1,0 +1,38 @@
+"""Dense FFN: SwiGLU (llama/gemma family) or GeLU (starcoder2/hubert)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import Params, Specs, dense_init, dtype_of
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int = 0) -> Params:
+    pdt = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    if cfg.activation == "swiglu":
+        # gate & up stacked on axis 1 -> one einsum, fewer HLO ops under scan
+        return {
+            "wi": dense_init(k1, (d, 2, ff), pdt, fan_in=d),
+            "wo": dense_init(k2, (ff, d), pdt, fan_in=ff),
+        }
+    return {
+        "wi": dense_init(k1, (d, 1, ff), pdt, fan_in=d),
+        "wo": dense_init(k2, (ff, d), pdt, fan_in=ff),
+    }
+
+
+def mlp_specs(cfg: ModelConfig) -> Specs:
+    return {"wi": ("embed", None, "ff"), "wo": ("ff", "embed")}
+
+
+def mlp_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = jnp.einsum("bsd,dcf->bscf", x, p["wi"])
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(h[:, :, 0]) * h[:, :, 1]
+    else:
+        h = jax.nn.gelu(h[:, :, 0])
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])

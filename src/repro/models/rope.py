@@ -1,0 +1,23 @@
+"""Rotary position embeddings (half-rotation / llama convention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) or (..., S, D); positions: broadcastable to (..., S)."""
+    D = x.shape[-1]
+    inv = rope_freqs(D, theta)                                  # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv        # (..., S, D/2)
+    if x.ndim == ang.ndim + 1:                                  # (..., S, H, D): add head axis
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

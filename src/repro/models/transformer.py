@@ -1,0 +1,306 @@
+"""Model assembly: super-block scan over heterogeneous (mixer, ffn) layers.
+
+A model = embedding -> [prefix layers] -> scan(superblock) x n_superblocks ->
+final norm -> unembed.  Params/caches for the scanned body carry a leading
+``n_superblocks`` axis, which keeps the HLO O(|pattern|) regardless of depth
+(88-layer granite compiles as fast as 27-layer deepseek) and lets XLA overlap
+each layer's collectives with the next layer's compute.
+
+Public surface:
+    init_params / param_specs
+    forward(params, batch, cfg)                 -> (logits, aux)   train/prefill
+    init_cache / cache_specs
+    decode_step(params, cache, tokens, pos, cfg) -> (logits, cache) serving
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from . import attention as attn
+from . import mamba as mam
+from . import mlp as mlpm
+from . import moe as moem
+from .layers import (
+    Params,
+    Specs,
+    apply_rmsnorm,
+    dtype_of,
+    embed_tokens,
+    embedding_init,
+    embedding_specs,
+    rmsnorm_init,
+    rmsnorm_specs,
+    unembed,
+)
+
+_MIXER_INIT = {
+    "attn": attn.gqa_init,
+    "attn_local": attn.gqa_init,
+    "attn_mla": attn.mla_init,
+    "mamba": mam.mamba_init,
+}
+_MIXER_SPECS = {
+    "attn": attn.gqa_specs,
+    "attn_local": attn.gqa_specs,
+    "attn_mla": attn.mla_specs,
+    "mamba": mam.mamba_specs,
+}
+
+
+# ------------------------------ init --------------------------------------------------
+def _layer_init(key, mixer: str, ffn: str, cfg: ModelConfig) -> Params:
+    pdt = dtype_of(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p: Params = {
+        "norm1": rmsnorm_init(cfg.d_model, pdt),
+        "mixer": _MIXER_INIT[mixer](k1, cfg),
+    }
+    if cfg.post_norm:
+        p["norm1_post"] = rmsnorm_init(cfg.d_model, pdt)
+    if ffn != "none":
+        p["norm2"] = rmsnorm_init(cfg.d_model, pdt)
+        p["ffn"] = moem.moe_init(k2, cfg) if ffn == "moe" else mlpm.mlp_init(k2, cfg)
+        if cfg.post_norm:
+            p["norm2_post"] = rmsnorm_init(cfg.d_model, pdt)
+    return p
+
+
+def _layer_specs(mixer: str, ffn: str, cfg: ModelConfig) -> Specs:
+    s: Specs = {"norm1": rmsnorm_specs(), "mixer": _MIXER_SPECS[mixer](cfg)}
+    if cfg.post_norm:
+        s["norm1_post"] = rmsnorm_specs()
+    if ffn != "none":
+        s["norm2"] = rmsnorm_specs()
+        s["ffn"] = moem.moe_specs(cfg) if ffn == "moe" else mlpm.mlp_specs(cfg)
+        if cfg.post_norm:
+            s["norm2_post"] = rmsnorm_specs()
+    return s
+
+
+def _superblock_init(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, len(cfg.pattern))
+    return {
+        f"l{i}": _layer_init(keys[i], m, f, cfg)
+        for i, (m, f) in enumerate(cfg.pattern)
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    k_emb, k_pre, k_body, k_fin = jax.random.split(key, 4)
+    params: Params = {"embedding": embedding_init(k_emb, cfg)}
+    if cfg.prefix_pattern:
+        pre_keys = jax.random.split(k_pre, len(cfg.prefix_pattern))
+        params["prefix"] = [
+            _layer_init(pre_keys[i], m, f, cfg)
+            for i, (m, f) in enumerate(cfg.prefix_pattern)
+        ]
+    body_keys = jax.random.split(k_body, cfg.n_superblocks)
+    params["blocks"] = jax.vmap(lambda k: _superblock_init(k, cfg))(body_keys)
+    params["final_norm"] = rmsnorm_init(cfg.d_model, dtype_of(cfg.param_dtype))
+    return params
+
+
+def param_specs(cfg: ModelConfig) -> Specs:
+    specs: Specs = {"embedding": embedding_specs(cfg)}
+    if cfg.prefix_pattern:
+        specs["prefix"] = [_layer_specs(m, f, cfg) for m, f in cfg.prefix_pattern]
+    sb = {f"l{i}": _layer_specs(m, f, cfg) for i, (m, f) in enumerate(cfg.pattern)}
+    # scanned params have a leading n_superblocks axis -> prepend None
+    specs["blocks"] = jax.tree.map(
+        lambda t: (None,) + t, sb,
+        is_leaf=lambda x: isinstance(x, tuple) and all(i is None or isinstance(i, str) for i in x),
+    )
+    specs["final_norm"] = rmsnorm_specs()
+    return specs
+
+
+# ------------------------------ forward (train / prefill) ------------------------------
+def _layer_apply(
+    lp: Params, x: jax.Array, mixer: str, ffn: str, cfg: ModelConfig, positions: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    h = apply_rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    if mixer == "mamba":
+        h = mam.mamba_apply(lp["mixer"], h, cfg)
+    elif mixer == "attn_mla":
+        h = attn.mla_apply(lp["mixer"], h, cfg, positions)
+    else:
+        h = attn.gqa_apply(lp["mixer"], h, cfg, positions, local=(mixer == "attn_local"))
+    if cfg.post_norm:
+        h = apply_rmsnorm(h, lp["norm1_post"], cfg.norm_eps)
+    x = x + h
+    x = constrain(x, ("batch", "act_seq", "act_embed"))
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h = apply_rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        if ffn == "moe":
+            h, aux = moem.moe_apply(lp["ffn"], h, cfg)
+        else:
+            h = mlpm.mlp_apply(lp["ffn"], h, cfg)
+        if cfg.post_norm:
+            h = apply_rmsnorm(h, lp["norm2_post"], cfg.norm_eps)
+        x = x + h
+        x = constrain(x, ("batch", "act_seq", "act_embed"))
+    return x, aux
+
+
+def _superblock_apply(sp: Params, x, cfg: ModelConfig, positions) -> Tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    for i, (m, f) in enumerate(cfg.pattern):
+        x, a = _layer_apply(sp[f"l{i}"], x, m, f, cfg, positions)
+        aux = aux + a
+    return x, aux
+
+
+def forward(
+    params: Params,
+    tokens: Optional[jax.Array],
+    cfg: ModelConfig,
+    *,
+    inputs_embeds: Optional[jax.Array] = None,
+    remat: str = "full",
+    last_only: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits fp32 (B,S,V), aux MoE loss scalar).
+
+    ``last_only``: unembed only the final position (serving prefill — avoids a
+    (B, S, vocab) logits tensor when only the next-token distribution is needed).
+    """
+    if inputs_embeds is not None:
+        x = inputs_embeds.astype(dtype_of(cfg.compute_dtype))
+    else:
+        x = embed_tokens(params["embedding"], tokens, cfg)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = constrain(x, ("batch", "act_seq", "act_embed"))
+
+    aux = jnp.zeros((), jnp.float32)
+    for i, (m, f) in enumerate(cfg.prefix_pattern):
+        x, a = _layer_apply(params["prefix"][i], x, m, f, cfg, positions)
+        aux = aux + a
+
+    def body(carry, sp):
+        x, aux = carry
+        x, a = _superblock_apply(sp, x, cfg, positions)
+        return (x, aux + a), None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"])
+
+    if last_only:
+        x = x[:, -1:]
+    x = apply_rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embedding"], x, cfg)
+    logits = constrain(logits, ("batch", "act_seq", "vocab"))
+    return logits, aux
+
+
+# ------------------------------ serving (decode) ---------------------------------------
+def _layer_cache_init(mixer: str, cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Params:
+    if mixer == "mamba":
+        return mam.mamba_cache_init(cfg, batch, dtype)
+    if mixer == "attn_mla":
+        return attn.mla_cache_init(cfg, batch, max_seq, dtype)
+    return attn.gqa_cache_init(cfg, batch, max_seq, dtype)
+
+
+def _layer_cache_specs(mixer: str, cfg: ModelConfig) -> Specs:
+    if mixer == "mamba":
+        return mam.mamba_cache_specs(cfg)
+    if mixer == "attn_mla":
+        return attn.mla_cache_specs(cfg)
+    return attn.gqa_cache_specs(cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Params:
+    cache: Params = {}
+    if cfg.prefix_pattern:
+        cache["prefix"] = [
+            _layer_cache_init(m, cfg, batch, max_seq, dtype) for m, _ in cfg.prefix_pattern
+        ]
+    one_sb = {
+        f"l{i}": _layer_cache_init(m, cfg, batch, max_seq, dtype)
+        for i, (m, _) in enumerate(cfg.pattern)
+    }
+    cache["blocks"] = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_superblocks,) + a.shape), one_sb
+    )
+    return cache
+
+
+def cache_specs(cfg: ModelConfig) -> Specs:
+    specs: Specs = {}
+    if cfg.prefix_pattern:
+        specs["prefix"] = [_layer_cache_specs(m, cfg) for m, _ in cfg.prefix_pattern]
+    sb = {f"l{i}": _layer_cache_specs(m, cfg) for i, (m, _) in enumerate(cfg.pattern)}
+    specs["blocks"] = jax.tree.map(
+        lambda t: (None,) + t, sb,
+        is_leaf=lambda x: isinstance(x, tuple) and all(i is None or isinstance(i, str) for i in x),
+    )
+    return specs
+
+
+def _layer_decode(
+    lp: Params, x, cache, pos, mixer: str, ffn: str, cfg: ModelConfig
+) -> Tuple[jax.Array, Params]:
+    h = apply_rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    if mixer == "mamba":
+        h, new_cache = mam.mamba_decode(lp["mixer"], h, cache, cfg)
+    elif mixer == "attn_mla":
+        h, new_cache = attn.mla_decode(lp["mixer"], h, cache, pos, cfg)
+    else:
+        h, new_cache = attn.gqa_decode(
+            lp["mixer"], h, cache, pos, cfg, local=(mixer == "attn_local")
+        )
+    if cfg.post_norm:
+        h = apply_rmsnorm(h, lp["norm1_post"], cfg.norm_eps)
+    x = x + h
+    if ffn != "none":
+        h = apply_rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        if ffn == "moe":
+            h, _ = moem.moe_apply(lp["ffn"], h, cfg, dropless=True)  # decode: never drop
+        else:
+            h = mlpm.mlp_apply(lp["ffn"], h, cfg)
+        if cfg.post_norm:
+            h = apply_rmsnorm(h, lp["norm2_post"], cfg.norm_eps)
+        x = x + h
+    return x, new_cache
+
+
+def decode_step(
+    params: Params, cache: Params, tokens: jax.Array, pos: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, Params]:
+    """One serving step: tokens (B, 1) + position ``pos`` -> (logits (B,1,V), cache)."""
+    x = embed_tokens(params["embedding"], tokens, cfg)
+    x = constrain(x, ("batch", "act_seq", "act_embed"))
+
+    new_prefix = []
+    for i, (m, f) in enumerate(cfg.prefix_pattern):
+        x, nc = _layer_decode(params["prefix"][i], x, cache["prefix"][i], pos, m, f, cfg)
+        new_prefix.append(nc)
+
+    def body(x, inputs):
+        sp, sc = inputs
+        new_sc = {}
+        for i, (m, f) in enumerate(cfg.pattern):
+            x, nc = _layer_decode(sp[f"l{i}"], x, sc[f"l{i}"], pos, m, f, cfg)
+            new_sc[f"l{i}"] = nc
+        return x, new_sc
+
+    x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    x = apply_rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embedding"], x, cfg)
+    new_cache: Params = {"blocks": new_blocks}
+    if cfg.prefix_pattern:
+        new_cache["prefix"] = new_prefix
+    return logits, new_cache

@@ -1,0 +1,2 @@
+from .adamw import adamw_update, init_opt_state, global_norm
+from .schedule import warmup_cosine, constant

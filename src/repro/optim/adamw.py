@@ -1,0 +1,87 @@
+"""AdamW with dtype-configurable sharded state (pure pytrees, no optax here).
+
+Memory policy knobs (ParallelConfig) that keep the 100B+ cells under
+16 GB/chip on v5e:
+
+* ``mu_dtype`` / ``nu_dtype`` — moments in bf16 halve optimizer memory;
+* ``master_dtype`` — optional fp32 master copy when params are bf16
+  (None = update in param dtype, saving 4 bytes/param);
+* all states inherit the parameter's sharding (ZeRO-3: FSDP axis shards
+  them over data(+pod), TP axes over model).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import TrainConfig
+from ..models.layers import dtype_of
+
+OptState = Dict[str, Any]
+
+
+def init_opt_state(params, tc: TrainConfig) -> OptState:
+    pc = tc.parallel
+    mu_dt, nu_dt = dtype_of(pc.mu_dtype), dtype_of(pc.nu_dtype)
+    state: OptState = {
+        "mu": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mu_dt), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=nu_dt), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if pc.master_dtype is not None:
+        mdt = dtype_of(pc.master_dtype)
+        state["master"] = jax.tree.map(lambda p: p.astype(mdt), params)
+    return state
+
+
+def opt_state_specs(p_specs) -> Dict[str, Any]:
+    """Optimizer states share the parameter specs; step is replicated."""
+    return {"mu": p_specs, "nu": p_specs, "step": ()}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads, params, state: OptState, lr: jax.Array, tc: TrainConfig
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    b1, b2, eps, wd = tc.b1, tc.b2, tc.eps, tc.weight_decay
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tc.grad_clip / (gnorm + 1e-9)) if tc.grad_clip > 0 else 1.0
+
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    masters = state.get("master", params)
+
+    def upd(g, p, m, v, master):
+        gf = g.astype(jnp.float32) * clip
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mh, vh = m_new / c1, v_new / c2
+        delta = mh / (jnp.sqrt(vh) + eps)
+        base = master.astype(jnp.float32)
+        if wd > 0 and p.ndim >= 2:  # decay matrices, not norms/biases
+            delta = delta + wd * base
+        new_master = base - lr * delta
+        return (
+            new_master.astype(p.dtype),
+            m_new.astype(m.dtype),
+            v_new.astype(v.dtype),
+            new_master.astype(master.dtype),
+        )
+
+    flat = jax.tree.map(upd, grads, params, state["mu"], state["nu"], masters)
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_state: OptState = {"mu": new_mu, "nu": new_nu, "step": step}
+    if "master" in state:
+        new_state["master"] = jax.tree.map(
+            lambda t: t[3], flat, is_leaf=lambda x: isinstance(x, tuple)
+        )
+    return new_params, new_state, {"grad_norm": gnorm}

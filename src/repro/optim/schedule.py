@@ -1,0 +1,17 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup_steps, warm, cos)
+
+
+def constant(step, *, peak_lr: float, **_):
+    return jnp.full_like(step, peak_lr, dtype=jnp.float32)

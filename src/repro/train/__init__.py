@@ -1,0 +1,3 @@
+from .train_step import init_train_state, make_eval_step, make_train_step, train_state_specs
+from .serve_step import greedy_generate, make_serve_step
+from .loss import cross_entropy

@@ -1,0 +1,145 @@
+"""The paper's §IV demonstration model: 2 conv + 2 fc, Adam, global dropout.
+
+Hyperparameters exactly as the paper's experiment: ``conv1``, ``conv2``
+(filter counts), ``fc1`` (hidden width), ``learning_rate``, ``dropout``, and
+``n_iterations`` (epochs — the Hyperband/BOHB budget axis).  Trains on the
+synthetic classification task and returns test accuracy, so HPO curves
+(Fig. 4/5) are meaningful on CPU in seconds.
+
+Also the EAS §V client model: ``arch`` json {"conv": [[f,k],...], "fc": n}
+overrides the fixed two-conv structure, and function-preserving morphism
+init (widen = channel duplication + halved outgoing weights, deepen =
+identity-ish layer) gives children a warm start from the parent.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.pipeline import SyntheticClassification
+
+
+def _conv_init(key, k: int, cin: int, cout: int) -> jax.Array:
+    std = 1.0 / math.sqrt(k * k * cin)
+    return jax.random.truncated_normal(key, -2, 2, (k, k, cin, cout), jnp.float32) * std
+
+
+def init_cnn(key, arch: Dict[str, Any], n_classes: int = 10, image_size: int = 16):
+    params: Dict[str, Any] = {"conv": []}
+    cin = 1
+    keys = jax.random.split(key, len(arch["conv"]) + 2)
+    size = image_size
+    for i, (f, k) in enumerate(arch["conv"]):
+        params["conv"].append({"w": _conv_init(keys[i], k, cin, f), "b": jnp.zeros((f,))})
+        cin = f
+        size //= 2  # each conv block pools 2x
+    flat = size * size * cin
+    params["fc1"] = {
+        "w": jax.random.truncated_normal(keys[-2], -2, 2, (flat, arch["fc"]), jnp.float32)
+        / math.sqrt(flat),
+        "b": jnp.zeros((arch["fc"],)),
+    }
+    params["out"] = {
+        "w": jax.random.truncated_normal(keys[-1], -2, 2, (arch["fc"], n_classes), jnp.float32)
+        / math.sqrt(arch["fc"]),
+        "b": jnp.zeros((n_classes,)),
+    }
+    return params
+
+
+def cnn_forward(params, x, dropout: float = 0.0, key=None):
+    for layer in params["conv"]:
+        x = jax.lax.conv_general_dilated(
+            x, layer["w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        ) + layer["b"]
+        x = jax.nn.relu(x)
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    if dropout > 0 and key is not None:
+        mask = jax.random.bernoulli(key, 1 - dropout, x.shape)
+        x = x * mask / (1 - dropout)
+    return x @ params["out"]["w"] + params["out"]["b"]
+
+
+def morph_params(key, parent_params, parent_arch, child_arch, n_classes=10, image_size=16):
+    """Net2net-ish warm start: copy overlapping channels, init the rest fresh."""
+    child = init_cnn(key, child_arch, n_classes, image_size)
+
+    def copy_overlap(dst, src):
+        sl = tuple(slice(0, min(a, b)) for a, b in zip(dst.shape, src.shape))
+        return dst.at[sl].set(src[sl])
+
+    for i in range(min(len(child["conv"]), len(parent_params["conv"]))):
+        child["conv"][i]["w"] = copy_overlap(child["conv"][i]["w"], parent_params["conv"][i]["w"])
+        child["conv"][i]["b"] = copy_overlap(child["conv"][i]["b"], parent_params["conv"][i]["b"])
+    for name in ("fc1", "out"):
+        child[name]["w"] = copy_overlap(child[name]["w"], parent_params[name]["w"])
+        child[name]["b"] = copy_overlap(child[name]["b"], parent_params[name]["b"])
+    return child
+
+
+def train_cnn(config: Dict[str, Any], *, n_train: int = 2048, n_test: int = 512,
+              batch: int = 128, image_size: int = 16, seed: int = 0) -> float:
+    """Paper §IV job: config -> test accuracy.  ~1 s/epoch on this CPU."""
+    arch = (
+        json.loads(config["arch"])
+        if "arch" in config and config["arch"]
+        else {
+            "conv": [[int(config.get("conv1", 16)), 3], [int(config.get("conv2", 32)), 3]],
+            "fc": int(config.get("fc1", 64)),
+        }
+    )
+    lr = float(config.get("learning_rate", 1e-3))
+    dropout = float(config.get("dropout", 0.1))
+    epochs = max(1, int(config.get("n_iterations", 3)))
+
+    data = SyntheticClassification(image_size=image_size)
+    train, test = data.make_split(n_train, seed + 1), data.make_split(n_test, seed + 2)
+    key = jax.random.PRNGKey(seed)
+    params = init_cnn(key, arch, data.n_classes, image_size)
+    if config.get("arch_parent"):
+        parent_arch = json.loads(config["arch_parent"])
+        params = morph_params(key, init_cnn(key, parent_arch, data.n_classes, image_size),
+                              parent_arch, arch, data.n_classes, image_size)
+
+    # plain Adam, as in the paper
+    mu = jax.tree.map(jnp.zeros_like, params)
+    nu = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, mu, nu, t, x, y, dkey):
+        def loss_fn(p):
+            logits = cnn_forward(p, x, dropout, dkey)
+            lse = jax.nn.logsumexp(logits, -1)
+            return (lse - jnp.take_along_axis(logits, y[:, None], 1)[:, 0]).mean()
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        mu = jax.tree.map(lambda m, gr: 0.9 * m + 0.1 * gr, mu, g)
+        nu = jax.tree.map(lambda v, gr: 0.999 * v + 0.001 * gr * gr, nu, g)
+        mh = jax.tree.map(lambda m: m / (1 - 0.9 ** t), mu)
+        vh = jax.tree.map(lambda v: v / (1 - 0.999 ** t), nu)
+        params = jax.tree.map(lambda p, m, v: p - lr * m / (jnp.sqrt(v) + 1e-8), params, mh, vh)
+        return params, mu, nu, loss
+
+    n_batches = n_train // batch
+    t = 0
+    for ep in range(epochs):
+        perm = np.random.default_rng(seed + ep).permutation(n_train)
+        for i in range(n_batches):
+            idx = perm[i * batch : (i + 1) * batch]
+            t += 1
+            key, dkey = jax.random.split(key)
+            params, mu, nu, _ = step(
+                params, mu, nu, t, train["x"][idx], train["y"][idx], dkey
+            )
+
+    logits = cnn_forward(params, test["x"])
+    return float((logits.argmax(-1) == test["y"]).mean())

@@ -1,0 +1,28 @@
+"""Cross-entropy loss with optional z-loss and MoE aux weighting."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(
+    logits: jax.Array,   # (B, S, V) fp32
+    targets: jax.Array,  # (B, S) int32
+    mask: jax.Array,     # (B, S) float
+    z_loss: float = 0.0,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    lse = jax.nn.logsumexp(logits, axis=-1)                      # (B, S)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - tgt
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    metrics = {"ce_loss": loss}
+    if z_loss > 0:
+        zl = z_loss * ((lse * lse) * mask).sum() / denom
+        loss = loss + zl
+        metrics["z_loss"] = zl
+    acc = ((logits.argmax(-1) == targets) * mask).sum() / denom
+    metrics["accuracy"] = acc
+    return loss, metrics

@@ -1,0 +1,39 @@
+"""Serving: batched single-token decode (greedy or temperature sampling)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import transformer as T
+
+
+def make_serve_step(cfg: ModelConfig, temperature: float = 0.0) -> Callable:
+    """(params, cache, tokens (B,1), pos, [key]) -> (next_tokens (B,1), cache)."""
+
+    def serve_step(params, cache, tokens, pos, key=None):
+        logits, cache = T.decode_step(params, cache, tokens, pos, cfg)
+        last = logits[:, -1]
+        if temperature > 0.0 and key is not None:
+            nxt = jax.random.categorical(key, last / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(last, axis=-1)
+        return nxt[:, None].astype(jnp.int32), cache
+
+    return serve_step
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt: jax.Array, n_new: int, max_seq: int):
+    """Tiny reference generation loop (examples / tests)."""
+    B, P = prompt.shape
+    cache = T.init_cache(cfg, B, max_seq, dtype=jnp.float32)
+    step = jax.jit(make_serve_step(cfg))
+    tok = prompt[:, :1]
+    out = [tok]
+    for i in range(P + n_new - 1):
+        nxt, cache = step(params, cache, tok, i)
+        tok = prompt[:, i + 1 : i + 2] if i + 1 < P else nxt
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

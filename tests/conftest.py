@@ -1,0 +1,32 @@
+import os
+import sys
+
+# tests must see the real 1-CPU container (the dry-run's 512-device flag is
+# process-local to launch/dryrun.py); keep kernels on the ref path by default.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+ROSENBROCK_SPACE = [
+    {"name": "x", "type": "float", "range": [-2.0, 2.0]},
+    {"name": "y", "type": "float", "range": [-1.0, 3.0]},
+]
+
+
+def rosenbrock(cfg):
+    x, y = float(cfg["x"]), float(cfg["y"])
+    return -((1 - x) ** 2 + 100 * (y - x * x) ** 2)
+
+
+@pytest.fixture
+def rosenbrock_problem():
+    return ROSENBROCK_SPACE, rosenbrock

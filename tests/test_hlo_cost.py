@@ -1,0 +1,110 @@
+"""The trip-count-aware HLO analyzer must agree with hand-computed FLOPs on
+real compiled programs (scan multiplication is the whole point)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyse_hlo
+from repro.launch.hlo_stats import parse_collectives, shape_bytes
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    a = jnp.zeros((64, 128), jnp.float32)
+    b = jnp.zeros((128, 32), jnp.float32)
+    t = analyse_hlo(_compiled_text(lambda a, b: a @ b, a, b))
+    want = 2 * 64 * 128 * 32
+    assert abs(t.flops - want) / want < 0.01, (t.flops, want)
+
+
+def test_scan_multiplies_flops_by_trip_count():
+    a = jnp.zeros((32, 32), jnp.float32)
+
+    def once(x):
+        return x @ x
+
+    def scanned(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    t1 = analyse_hlo(_compiled_text(once, a))
+    t10 = analyse_hlo(_compiled_text(scanned, a))
+    assert t1.flops > 0
+    ratio = t10.flops / t1.flops
+    assert 9.0 <= ratio <= 11.0, f"scan x10 should cost ~10x, got {ratio}"
+
+
+def test_nested_scan_multiplies():
+    a = jnp.zeros((16, 16), jnp.float32)
+
+    def nested(x):
+        def inner(c, _):
+            return c @ c, None
+
+        def outer(c, _):
+            y, _ = jax.lax.scan(inner, c, None, length=4)
+            return y, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    def once(x):
+        return x @ x
+
+    t1 = analyse_hlo(_compiled_text(once, a))
+    t12 = analyse_hlo(_compiled_text(nested, a))
+    ratio = t12.flops / t1.flops
+    assert 11.0 <= ratio <= 13.5, f"3x4 nested scans should cost ~12x, got {ratio}"
+
+
+def test_bytes_track_memory_traffic():
+    a = jnp.zeros((1024, 1024), jnp.float32)  # 4 MB
+    t = analyse_hlo(_compiled_text(lambda x: x + 1.0, a))
+    # read 4MB + write 4MB, modest overhead allowed
+    assert 6e6 < t.bytes < 3e7, t.bytes
+
+
+def test_kernel_scope_attribution():
+    a = jnp.zeros((256, 256), jnp.float32)
+
+    def f(x):
+        with jax.named_scope("kernel_flash_attn"):
+            y = x @ x
+        return y + 1.0
+
+    t = analyse_hlo(_compiled_text(f, a))
+    want = 2 * 256**3
+    assert abs(t.kernel_flops - want) / want < 0.05, (t.kernel_flops, want)
+    assert t.kernel_bytes < t.bytes
+
+
+def test_shape_bytes_parsing():
+    assert shape_bytes("f32[2,3]{1,0}") == 24
+    assert shape_bytes("bf16[4,4] junk f32[2]") == 40
+    assert shape_bytes("pred[8]") == 8
+    assert shape_bytes("f32[]") == 4
+    assert shape_bytes("f32[2,2]", f32_as_bf16=True) == 8
+
+
+def test_collective_parser_on_synthetic_hlo():
+    hlo = """
+HloModule test
+
+ENTRY %main (p: f32[16,16]) -> f32[16,16] {
+  %p = f32[16,16]{1,0} parameter(0)
+  %ar = f32[16,16]{1,0} all-reduce(f32[16,16]{1,0} %p), replica_groups=[4,8]<=[32], to_apply=%add
+  ROOT %cp = f32[16,16]{1,0} collective-permute(f32[16,16]{1,0} %ar), source_target_pairs={{0,1}}
+}
+"""
+    st = parse_collectives(hlo, default_group=8)
+    assert st.per_op["all-reduce"]["count"] == 1
+    assert st.per_op["collective-permute"]["count"] == 1
+    # all-reduce over groups of 8: wire = 2*(7/8)*1024 bytes
+    assert abs(st.per_op["all-reduce"]["wire_bytes"] - 2 * (7 / 8) * 1024) < 1
+    assert st.per_op["collective-permute"]["wire_bytes"] == 1024

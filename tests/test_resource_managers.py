@@ -1,0 +1,183 @@
+"""Resource managers: subprocess (paper-faithful script protocol), mesh pool,
+elastic pool with node failure + scale-out, and search-space properties."""
+import os
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.experiment import Experiment
+from repro.core.resource.elastic import ElasticResourceManager
+from repro.core.resource.local import LocalResourceManager
+from repro.core.resource.mesh_pool import MeshPoolResourceManager
+from repro.core.search_space import ParamSpec, SearchSpace
+
+SPACE = [
+    {"name": "x", "type": "float", "range": [-2.0, 2.0]},
+    {"name": "y", "type": "float", "range": [-1.0, 3.0]},
+]
+
+
+def _exp_cfg(**over):
+    cfg = {"proposer": "random", "parameter_config": SPACE, "n_samples": 6,
+           "n_parallel": 2, "target": "max", "random_seed": 0}
+    cfg.update(over)
+    return cfg
+
+
+# ------------------------------------------------------------- subprocess RM
+def test_subprocess_script_protocol(tmp_path):
+    """Paper Code 3: self-executable script reads argv[1] JSON, print_result."""
+    script = tmp_path / "job.py"
+    script.write_text(textwrap.dedent(f"""\
+        #!{sys.executable}
+        import sys
+        sys.path.insert(0, {str(os.path.join(os.path.dirname(__file__), "..", "src"))!r})
+        from repro.core.basic_config import BasicConfig, print_result
+        config = BasicConfig(x=0.0, y=0.0)
+        config.load(sys.argv[1] if len(sys.argv) > 1 else None)
+        score = -((1 - config.x) ** 2 + 100 * (config.y - config.x ** 2) ** 2)
+        print_result(score)
+    """))
+    script.chmod(0o755)
+    exp = Experiment(
+        _exp_cfg(resource="subprocess", workdir=str(tmp_path), n_samples=4),
+        str(script),
+    )
+    best = exp.run()
+    assert best is not None and np.isfinite(best["score"])
+    statuses = [j.status.value for j in exp.job_log]
+    assert statuses.count("finished") == 4
+
+
+def test_subprocess_script_standalone(tmp_path):
+    """The same script must run WITHOUT the framework (usability claim)."""
+    import subprocess
+
+    script = tmp_path / "job.py"
+    script.write_text(textwrap.dedent(f"""\
+        import sys
+        sys.path.insert(0, {str(os.path.join(os.path.dirname(__file__), "..", "src"))!r})
+        from repro.core.basic_config import BasicConfig, print_result
+        config = BasicConfig(x=1.0, y=1.0).load(sys.argv[1] if len(sys.argv) > 1 else None)
+        print_result(-((1 - config.x) ** 2 + 100 * (config.y - config.x ** 2) ** 2))
+    """))
+    out = subprocess.run([sys.executable, str(script)], capture_output=True, text=True)
+    assert "#Auptimizer:" in out.stdout  # optimum of rosenbrock: score 0
+
+
+# ------------------------------------------------------------- mesh pool RM
+def test_mesh_pool_trials_see_their_slice():
+    rm = MeshPoolResourceManager(pod_shape=(4, 4), slice_shape=(2, 2), virtual=True)
+    assert rm.n_total() == 4
+    seen = []
+
+    def target(cfg, mesh_slice):
+        seen.append((cfg["x"], mesh_slice.slice_id, len(mesh_slice.devices)))
+        return cfg["x"]
+
+    exp = Experiment(_exp_cfg(n_samples=8, n_parallel=4), target, resource_manager=rm)
+    best = exp.run()
+    assert best is not None
+    assert len(seen) == 8
+    assert all(n == 4 for _, _, n in seen), "each trial gets a full 2x2 slice"
+    assert len({sid for _, sid, _ in seen}) >= 2, "trials spread across slices"
+
+
+def test_mesh_pool_real_device_trial():
+    """A trial actually jits on its slice's Mesh (1 device on this container)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    rm = MeshPoolResourceManager(pod_shape=(1, 1), slice_shape=(1, 1),
+                                 devices=jax.devices())
+
+    def target(cfg, mesh_slice):
+        mesh = mesh_slice.mesh(("data", "model"))
+        with mesh:
+            x = jnp.full((4, 4), float(cfg["x"]))
+            y = jax.jit(lambda a: (a * a).sum(),
+                        in_shardings=NamedSharding(mesh, P()))(x)
+        return float(y)
+
+    exp = Experiment(_exp_cfg(n_samples=3, n_parallel=1), target, resource_manager=rm)
+    best = exp.run()
+    assert best is not None and best["score"] >= 0
+
+
+# ------------------------------------------------------------- elastic RM
+def test_elastic_node_failure_and_scale_out():
+    inner = LocalResourceManager(n_parallel=2)
+    rm = ElasticResourceManager(inner)
+
+    def target(cfg):
+        time.sleep(0.05)
+        return cfg["x"]
+
+    exp = Experiment(_exp_cfg(n_samples=10, n_parallel=2, max_retries=3),
+                     target, resource_manager=rm)
+
+    import threading
+
+    chaos_err = []
+
+    def chaos():
+        try:
+            time.sleep(0.1)
+            rm.fail_resource("local0")        # node dies mid-experiment
+            time.sleep(0.1)
+            rm.scale_out(["extra0", "extra1"])  # scale-out replaces it
+        except Exception as e:  # surface thread errors to the assertion below
+            chaos_err.append(e)
+
+    t = threading.Thread(target=chaos, daemon=True)
+    t.start()
+    best = exp.run()
+    t.join()
+    assert not chaos_err, chaos_err
+    assert best is not None
+    assert rm.n_total() == 3, "pool = 2 - 1 failed + 2 added"
+    done = [j for j in exp.job_log if j.status.value == "finished"]
+    assert len(done) >= 10, "all sampled configs eventually finish despite failure"
+
+
+# ------------------------------------------------------------- search space
+@given(st.data())
+@settings(max_examples=100, deadline=None)
+def test_param_spec_samples_in_bounds(data):
+    kind = data.draw(st.sampled_from(["float", "int", "choice"]))
+    if kind == "choice":
+        values = data.draw(st.lists(st.integers(-5, 5), min_size=1, max_size=5))
+        spec = ParamSpec("p", "choice", values)
+    else:
+        lo = data.draw(st.floats(-100, 100, allow_nan=False))
+        width = data.draw(st.floats(0.001, 100, allow_nan=False))
+        scale = data.draw(st.sampled_from(["linear", "log"]))
+        if scale == "log":
+            lo = abs(lo) + 0.001
+        if kind == "int":
+            width = max(width, 1.0)  # int specs need an integer inside the range
+        spec = ParamSpec("p", kind, [lo, lo + width], scale=scale)
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    for _ in range(20):
+        v = spec.sample(rng)
+        if kind == "choice":
+            assert v in spec.range
+        else:
+            assert spec.range[0] <= v <= spec.range[1]
+            if kind == "int":
+                assert float(v) == int(v)
+
+
+def test_search_space_grid_monotone_cover():
+    spec = ParamSpec("lr", "float", [1e-4, 1e-1], scale="log", n_grid=4)
+    lrs = spec.grid()
+    assert len(lrs) == 4 and sorted(lrs) == lrs
+    assert abs(lrs[0] - 1e-4) < 1e-9 and abs(lrs[-1] - 1e-1) < 1e-9
+    # log spacing: constant ratio
+    ratios = [lrs[i + 1] / lrs[i] for i in range(3)]
+    assert max(ratios) / min(ratios) < 1.001

@@ -1,0 +1,108 @@
+"""Property tests for the logical-axis sharding layer (hypothesis) and the
+mesh-slice resource pool."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec
+
+import jax
+
+from repro.core.resource.mesh_pool import MeshSlice, tile_pod
+from repro.distributed.sharding import build_pspec, make_rules
+
+# the container has 1 real device; build a fake mesh over a device array of
+# labels for pspec math (Mesh only needs .shape through our code path)
+
+
+class _FakeMesh:
+    def __init__(self, shape_map):
+        self.shape = shape_map
+
+
+RULES = make_rules(("data", "model"))
+MESH = _FakeMesh({"data": 16, "model": 16})
+
+LOGICAL = ["batch", "embed", "vocab", "heads", "kv_heads", "ff", "expert",
+           "act_seq", "act_seq_attn", "act_embed", None]
+
+
+@given(
+    dims=st.lists(st.sampled_from([1, 2, 3, 8, 16, 24, 32, 128, 256, 4096]),
+                  min_size=1, max_size=5),
+    names=st.lists(st.sampled_from(LOGICAL), min_size=1, max_size=5),
+)
+@settings(max_examples=200, deadline=None)
+def test_build_pspec_legality(dims, names):
+    n = min(len(dims), len(names))
+    dims, names = dims[:n], names[:n]
+    spec = build_pspec(dims, names, RULES, MESH)
+    used = []
+    for dim, entry in zip(dims, spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in axes:
+            assert a not in used, "mesh axis used twice in one tensor"
+            used.append(a)
+            prod *= MESH.shape[a]
+        assert dim % prod == 0, "sharded dim must divide evenly"
+
+
+def test_heads_take_priority_over_seq():
+    # divisible heads: heads get the model axis, seq stays replicated
+    spec = build_pspec((32, 4096, 16, 128),
+                       ("batch", "act_seq_attn", "heads", None), RULES, MESH)
+    assert spec == PartitionSpec("data", None, "model", None)
+    # non-divisible heads (starcoder2's 24): Ulysses fallback — seq gets model
+    spec = build_pspec((32, 4096, 24, 128),
+                       ("batch", "act_seq_attn", "heads", None), RULES, MESH)
+    assert spec == PartitionSpec("data", "model", None, None)
+
+
+def test_fsdp_weight_spec():
+    spec = build_pspec((3072, 24, 128), ("embed", "heads", "head"), RULES, MESH)
+    assert spec == PartitionSpec("data", None, None)  # 24 heads can't shard
+    spec = build_pspec((3072, 12288), ("embed", "ff"), RULES, MESH)
+    assert spec == PartitionSpec("data", "model")
+
+
+def test_multipod_rules_fold_pod_axis():
+    rules = make_rules(("pod", "data", "model"))
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = build_pspec((256, 4096), ("batch", None), rules, mesh)
+    assert spec == PartitionSpec(("pod", "data"), None)
+    # FSDP params also fold pod in
+    spec = build_pspec((8192, 24576), ("embed", "ff"), rules, mesh)
+    assert spec == PartitionSpec(("pod", "data"), "model")
+
+
+# ------------------------------------------------------------------ mesh slices
+@given(
+    pr=st.sampled_from([1, 2, 4, 8, 16]),
+    pc=st.sampled_from([1, 2, 4, 8, 16]),
+    sr=st.sampled_from([1, 2, 4]),
+    sc=st.sampled_from([1, 2, 4]),
+)
+@settings(max_examples=100, deadline=None)
+def test_tile_pod_partitions_exactly(pr, pc, sr, sc):
+    if pr % sr or pc % sc:
+        with pytest.raises(ValueError):
+            tile_pod((pr, pc), (sr, sc), virtual=True)
+        return
+    slices = tile_pod((pr, pc), (sr, sc), virtual=True)
+    assert len(slices) == (pr // sr) * (pc // sc)
+    seen = set()
+    for s in slices:
+        assert len(s.devices) == sr * sc
+        for d in s.devices:
+            assert d not in seen, "chip assigned to two slices"
+            seen.add(d)
+    assert len(seen) == pr * pc, "every chip assigned"
+
+
+def test_real_device_slice_builds_mesh():
+    slices = tile_pod((1, 1), (1, 1), devices=jax.devices())
+    m = slices[0].mesh(("data", "model"))
+    assert isinstance(m, Mesh)
+    assert m.size == 1
