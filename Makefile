@@ -1,0 +1,21 @@
+# One-command entry points for the tier-1 suite and smoke benchmarks.
+#
+#   make test    — full tier-1 pytest run (hypothesis-based files skip
+#                  cleanly when hypothesis isn't installed)
+#   make bench   — smoke benchmarks: HPO trial-engine throughput (emits
+#                  BENCH_hpo_throughput.json) + extensibility LOC count
+#   make bench-all — every registered benchmark (slow: full roofline sweep)
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench bench-all
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+bench:
+	$(PYTHON) -m benchmarks.run --only hpo_throughput,extensibility
+
+bench-all:
+	$(PYTHON) -m benchmarks.run

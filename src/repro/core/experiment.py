@@ -17,7 +17,12 @@ plus the production features a thousand-node deployment needs:
   and re-queues the ones that were mid-flight at the crash;
 * **straggler mitigation** — per-job deadline -> kill -> retry;
 * **retries** — failed/LOST jobs are resubmitted up to ``max_retries`` before
-  the failure is surfaced to the proposer;
+  the failure is surfaced to the proposer; the retry budget is tracked per job
+  lineage (on the Job itself), so two proposals with identical params cannot
+  eat each other's retries;
+* **batched proposal draining** — each loop pass claims every free resource
+  and asks the proposer for that many configs at once (``get_params``), which
+  lets the vectorized resource manager fill a whole population per round;
 * **elasticity** — works with ElasticResourceManager; lost resources simply
   shrink the pool, lost jobs are retried.
 """
@@ -83,8 +88,10 @@ class Experiment:
         self._cond = threading.Condition()
         self._finished_q: List[Job] = []
         self._running: Dict[int, Job] = {}
-        self._retries: Dict[str, int] = {}
-        self._requeue: List[Dict[str, Any]] = []  # crash-resume / retry configs
+        # crash-resume / retry entries: (config, n_prior_retries).  Retries are
+        # counted per job lineage, NOT per config value — two proposals with
+        # identical params must not share a retry budget.
+        self._requeue: List[tuple] = []
         self.job_log: List[Job] = []
 
     # -- callback (fires on worker threads; keep it tiny) -----------------------
@@ -94,15 +101,15 @@ class Experiment:
             self._cond.notify_all()
 
     # -- helpers ------------------------------------------------------------------
-    def _config_key(self, cfg: Dict[str, Any]) -> str:
-        import json
-
-        return json.dumps({k: v for k, v in cfg.items() if k != "job_id"}, sort_keys=True, default=str)
-
-    def _next_config(self) -> Optional[Dict[str, Any]]:
-        if self._requeue:
-            return self._requeue.pop(0)
-        return self.proposer.get_param()
+    def _next_configs(self, k: int) -> List[tuple]:
+        """Up to ``k`` ``(config, n_prior_retries)`` pairs: requeued jobs first,
+        then a batched drain of the proposer (``get_params``) so synchronous
+        proposers can fill a whole population of resources per loop pass."""
+        out: List[tuple] = []
+        while self._requeue and len(out) < k:
+            out.append(self._requeue.pop(0))
+        out.extend((cfg, 0) for cfg in self.proposer.get_params(k - len(out)))
+        return out
 
     def _drain_finished_locked(self) -> None:
         """Process completed jobs: DB, retries, proposer update, release."""
@@ -123,12 +130,12 @@ class Experiment:
             if ok:
                 self.proposer.update(res.score, job)
             else:
-                key = self._config_key(job.config)
-                n = self._retries.get(key, 0)
+                # per-job retry counter rides on the Job itself: distinct
+                # proposals with identical params keep separate retry budgets
+                n = getattr(job, "retries", 0)
                 if n < self.max_retries:
-                    self._retries[key] = n + 1
                     cfg = {k: v for k, v in job.config.items() if k != "job_id"}
-                    self._requeue.append(cfg)
+                    self._requeue.append((cfg, n + 1))
                 else:
                     self.proposer.update(None, job)
 
@@ -158,28 +165,43 @@ class Experiment:
                     self._cond.wait(timeout=poll_interval)
                 continue
 
+            # batched proposal draining: claim every free resource this pass so
+            # a synchronous proposer can fill a whole population per round
+            resources = [res]
+            nxt = self.rm.get_available()
+            while nxt is not None:
+                resources.append(nxt)
+                nxt = self.rm.get_available()
+
             with self._cond:
                 self._drain_finished_locked()
-                cfg = None if self.proposer.finished() else self._next_config()
-            if cfg is None:
-                self.rm.release(res)
+                pairs = [] if self.proposer.finished() else self._next_configs(len(resources))
+            if not pairs:
+                for r in resources:
+                    self.rm.release(r)
                 with self._cond:
                     if self.proposer.finished() and not self._running and not self._requeue:
                         break
                     self._cond.wait(timeout=poll_interval)
                 continue
 
-            job_id = self._next_job_id
-            self._next_job_id += 1
-            cfg = dict(cfg)
-            cfg["job_id"] = job_id  # paper Code 1: job_id rides in the BasicConfig
-            bc = BasicConfig(**cfg)
-            job = Job(job_id, bc, res, self._on_job_done, deadline_s=self.deadline_s)
-            with self._cond:
-                self._running[job_id] = job
-            self.job_log.append(job)
-            self.db.record_job_start(self.exp_id, job_id, bc.to_json(), str(res))
-            self.rm.run(job, self.target)
+            for (cfg, retries), r in zip(pairs, resources):
+                job_id = self._next_job_id
+                self._next_job_id += 1
+                cfg = dict(cfg)
+                cfg["job_id"] = job_id  # paper Code 1: job_id rides in the BasicConfig
+                bc = BasicConfig(**cfg)
+                job = Job(job_id, bc, r, self._on_job_done, deadline_s=self.deadline_s)
+                job.retries = retries
+                with self._cond:
+                    self._running[job_id] = job
+                self.job_log.append(job)
+                self.db.record_job_start(self.exp_id, job_id, bc.to_json(), str(r))
+                self.rm.run(job, self.target)
+            # unused claims go back; for the vectorized manager this release is
+            # also the signal to flush a partial population batch
+            for r in resources[len(pairs):]:
+                self.rm.release(r)
 
         # aup.finish(): drain stragglers
         with self._cond:
@@ -214,7 +236,7 @@ class Experiment:
             max_id = max(max_id, int(r["job_id"]))
             if r["status"] == "running":  # mid-flight at crash -> re-queue
                 cfg = {k: v for k, v in r["config"].items() if k != "job_id"}
-                exp._requeue.append(cfg)
+                exp._requeue.append((cfg, 0))
                 db.record_job_end(exp_id, r["job_id"], "lost", None, None, "controller crash")
         exp._next_job_id = max_id + 1
         return exp

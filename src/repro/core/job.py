@@ -47,6 +47,7 @@ class Job:
         self.job_id = job_id
         self.config = config
         self.resource_id = resource_id
+        self.retries = 0  # how many prior attempts this lineage already burned
         self.status = JobStatus.PENDING
         self.result: Optional[JobResult] = None
         self.deadline_s = deadline_s

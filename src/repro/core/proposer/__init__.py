@@ -85,6 +85,22 @@ class Proposer(abc.ABC):
             self.n_proposed += 1
         return cfg
 
+    def get_params(self, k: int) -> List[Dict[str, Any]]:
+        """Up to ``k`` configs in one call (batched proposal draining).
+
+        The default just loops ``get_param`` and stops at the first None
+        (budget issued / rung barrier), so synchronous proposers fill a whole
+        population per round with no per-algorithm work.  Subclasses that can
+        propose a batch more cheaply (or atomically) may override.
+        """
+        out: List[Dict[str, Any]] = []
+        for _ in range(max(0, int(k))):
+            cfg = self.get_param()
+            if cfg is None:
+                break
+            out.append(cfg)
+        return out
+
     def update(self, score: Optional[float], job: Any = None) -> None:
         """Feed back one finished job.  ``job.config`` carries auxiliary keys."""
         config = dict(job.config) if job is not None else {}

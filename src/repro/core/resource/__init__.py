@@ -12,6 +12,8 @@ Implementations:
                    mesh *slices* of a pod; a trial is a pjit program on its slice
 * ``elastic``    — wraps another manager; slices join/leave mid-experiment
                    (EC2-autoscaling analogue + node-failure injection)
+* ``vectorized`` — K population slots; bound jobs are batched and executed as
+                   ONE vmapped device program (compile-once HPO hot path)
 """
 from __future__ import annotations
 
@@ -107,4 +109,4 @@ class ResourceManager(abc.ABC):
         pass
 
 
-from . import local, subprocess_rm, mesh_pool, elastic  # noqa: E402,F401
+from . import local, subprocess_rm, mesh_pool, elastic, vectorized  # noqa: E402,F401

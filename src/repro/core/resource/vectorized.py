@@ -1,0 +1,112 @@
+"""Vectorized resource manager — K population slots, one device program.
+
+Presents ``n_slots`` resources to Algorithm 1, but instead of launching each
+job on its own worker it *buffers* bound jobs and executes a whole batch in a
+single call — on the training substrate that call is one vmapped, jitted
+population step advancing every trial simultaneously (see
+``repro.train.population``).
+
+Batch protocol: if the experiment's ``target`` exposes
+
+    run_population(configs: list[dict]) -> list[score | (score, extra)]
+
+the buffered batch goes through it in one shot (scores come back positionally,
+one per config).  Otherwise the manager degrades gracefully to looping the
+scalar ``target(config)`` over the batch on one worker thread — same
+scheduling semantics, no vectorization.
+
+Flush policy:
+
+* the buffer flushes when all ``n_slots`` are bound (a full population), and
+* ``release()`` of an *unbound* slot while jobs are buffered flushes a partial
+  batch — that release is Algorithm 1 telling us the proposer has nothing
+  more right now (budget exhausted, rung/generation barrier), so waiting for
+  a full population would deadlock the loop.
+
+Per-job failure stays per-job: an exception inside ``run_population`` fails
+the whole batch (every job retries under the experiment's retry budget), but
+a diverged trial only reports its own sentinel score.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, List
+
+from . import ResourceManager, register
+from ..job import Job, JobResult, JobStatus
+
+
+@register("vectorized")
+class VectorizedResourceManager(ResourceManager):
+    def __init__(self, n_parallel: int = 8, resource_prefix: str = "slot", **kwargs):
+        super().__init__(**kwargs)
+        self.n_slots = int(n_parallel)
+        for i in range(self.n_slots):
+            self.add_resource(f"{resource_prefix}{i}")
+        self._pending: List[Job] = []
+        self._last_target: Any = None
+        self.n_batches = 0
+        self.batch_sizes: List[int] = []
+
+    # -- Algorithm 1 surface ----------------------------------------------------
+    def run(self, job: Job, target: Callable) -> None:
+        # jobs stay PENDING while buffered: the straggler deadline clock only
+        # starts when the batch actually executes (mark_running in _flush)
+        self.bind(job.resource_id, job)
+        with self._lock:
+            self._last_target = target
+            self._pending.append(job)
+            full = len(self._pending) >= self.n_slots
+        if full:
+            self._flush(target)
+
+    def release(self, res_id: Any) -> None:
+        super().release(res_id)
+        # an unbound slot coming back with jobs buffered == "no more proposals
+        # are coming before a callback fires" -> run the partial population
+        with self._lock:
+            has_pending = bool(self._pending)
+            target = self._last_target
+        if has_pending and target is not None:
+            self._flush(target)
+
+    def _flush(self, target: Callable) -> None:
+        with self._lock:
+            batch, self._pending = self._pending, []
+            if not batch:
+                return
+            self.n_batches += 1
+            self.batch_sizes.append(len(batch))
+
+        def _worker():
+            # anything no longer PENDING was killed/lost while buffered
+            live = [j for j in batch if j.status == JobStatus.PENDING]
+            if not live:
+                return
+            for job in live:
+                job.mark_running()
+            try:
+                runner = getattr(target, "run_population", None)
+                if runner is not None:
+                    outs = runner([dict(j.config) for j in live])
+                else:
+                    outs = [target(dict(j.config)) for j in live]
+                if len(outs) != len(live):
+                    raise ValueError(
+                        f"run_population returned {len(outs)} results for {len(live)} configs"
+                    )
+                for job, out in zip(live, outs):
+                    score, extra = out if isinstance(out, tuple) else (out, None)
+                    job.finish(JobResult(score=float(score), extra=extra))
+            except Exception as e:  # job error != framework error
+                for job in live:
+                    job.fail(f"{type(e).__name__}: {e}")
+
+        threading.Thread(
+            target=_worker, name=f"popbatch-{self.n_batches}", daemon=True
+        ).start()
+
+    def kill(self, job: Job) -> None:
+        # the batch thread cannot be interrupted; mark KILLED so the eventual
+        # positional result is dropped (Job.finish fires exactly once)
+        job.fail("killed by deadline", status=JobStatus.KILLED)

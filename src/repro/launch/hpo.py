@@ -12,11 +12,33 @@ paper's flexibility claim.
 Each trial trains the smoke config for --steps on the deterministic
 synthetic stream and reports -final_loss as the score.  All proposals and
 results land in the tracking DB (--db) for post-hoc analysis / resume.
+
+**Execution engines** (the HParams-as-traced-input contract):
+
+* default (``--vectorize 0``) — compile-once serial: per-trial hyperparameters
+  (lr / weight_decay / b2 / grad_clip / warmup / total steps) ride in a traced
+  ``HParams`` pytree, so all trials of the architecture share ONE compiled
+  step (``repro.train.train_step.get_compiled_train_step``) instead of paying
+  an XLA recompile each (the pre-refactor behavior survives as
+  ``make_trial`` / ``--legacy-recompile`` for benchmarking);
+* ``--vectorize K`` — population mode: K slots are presented to the loop by
+  ``VectorizedResourceManager``, the proposer is drained in batches
+  (``get_params``), and each batch trains as one ``jax.vmap``-ed jitted
+  program (``repro.train.population``) with divergence masking — a NaN trial
+  freezes and reports the sentinel score, the batch lives on.  Partial
+  batches are padded to K (padding trials get a 0-step budget) so the whole
+  experiment still compiles exactly once per (architecture, K).
+
+Vectorized mode is only valid when every proposal varies *traced* knobs: all
+trials must share the architecture and batch geometry.  Per-trial
+architecture params (d_model, n_layers, ... — e.g. the NAS/EAS space) change
+the compiled program shape and MUST use serial mode.  Per-trial budgets
+(``n_iterations`` from Hyperband/ASHA) are fine: ``hp.total_steps`` doubles
+as a step budget and exhausted trials freeze in place.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import sys
 import time
@@ -25,7 +47,12 @@ import numpy as np
 
 
 def make_trial(arch: str, steps: int, batch: int, seq: int, seed: int):
-    """A trial callable: config dict -> score (higher = better)."""
+    """Legacy trial callable: config dict -> score, recompiling per trial.
+
+    Bakes the proposal into the TrainConfig closure, so every call pays a
+    full XLA compile — kept as the baseline ``benchmarks/hpo_throughput.py``
+    measures against.  Use ``PopulationTrial`` for real runs.
+    """
 
     def trial(config: dict) -> float:
         import jax
@@ -62,6 +89,105 @@ def make_trial(arch: str, steps: int, batch: int, seq: int, seed: int):
     return trial
 
 
+class PopulationTrial:
+    """Compile-once trial executor for one architecture.
+
+    ``__call__(config)`` is the scalar protocol (local/subprocess managers);
+    ``run_population(configs)`` is the batch protocol the vectorized manager
+    uses — K trials advance in one vmapped jitted program.  Either way the
+    proposal's hyperparameters are *traced* inputs, so the experiment
+    compiles once per (architecture, population size), not once per trial.
+    """
+
+    DIVERGED_SCORE = -1e9
+
+    def __init__(self, arch: str, steps: int, batch: int, seq: int, seed: int,
+                 population: int = 0):
+        self.arch = arch
+        self.steps = int(steps)
+        self.batch = int(batch)
+        self.seq = int(seq)
+        self.seed = int(seed)
+        self.population = int(population)  # >0: pad batches to this fixed K
+        self._tc = None
+        self._data = None
+        import threading
+
+        self._setup_lock = threading.Lock()
+
+    # lazy so the Experiment can be constructed without importing jax; locked
+    # because local resource managers call trials from worker threads
+    def _setup(self):
+        with self._setup_lock:
+            if self._tc is None:
+                from ..configs import get_smoke_config
+                from ..configs.base import ParallelConfig, TrainConfig
+                from ..data.pipeline import SyntheticLM
+
+                cfg = get_smoke_config(self.arch)
+                self._data = SyntheticLM(cfg.vocab_size, self.seq, self.batch,
+                                         seed=self.seed)
+                self._tc = TrainConfig(model=cfg, parallel=ParallelConfig(remat="none"),
+                                       seed=self.seed)
+            return self._tc, self._data
+
+    def _hparams(self, config: dict, n_steps: int):
+        from ..optim.hparams import hparams_from_dict
+
+        tc, _ = self._setup()
+        return hparams_from_dict(dict(config, total_steps=n_steps), tc)
+
+    def _n_steps(self, config: dict) -> int:
+        return int(config.get("n_iterations", 1) * self.steps)
+
+    def __call__(self, config: dict) -> float:
+        """Serial protocol, sharing the process-wide compiled step."""
+        import jax
+
+        from ..train.train_step import get_compiled_train_step, init_train_state
+
+        tc, data = self._setup()
+        n_steps = self._n_steps(config)
+        hp = self._hparams(config, n_steps)
+        step_fn = get_compiled_train_step(tc)
+        state = init_train_state(jax.random.PRNGKey(self.seed), tc)
+        loss = float("inf")
+        for s in range(n_steps):
+            state, metrics = step_fn(state, data.make_batch(s), hp)
+            loss = float(metrics["loss"])
+            if not np.isfinite(loss):
+                return self.DIVERGED_SCORE
+        return -loss
+
+    def run_population(self, configs) -> list:
+        """Batch protocol: K trials in one vmapped device program."""
+        import jax
+
+        from ..optim.hparams import stack_hparams
+        from ..train.population import (
+            get_compiled_population_step,
+            init_population_state,
+            population_scores,
+        )
+
+        tc, data = self._setup()
+        budgets = [self._n_steps(c) for c in configs]
+        hps = [self._hparams(c, n) for c, n in zip(configs, budgets)]
+        k = max(self.population, len(hps))
+        # pad partial batches to the fixed population size with 0-budget
+        # trials (they freeze immediately) so K — and thus the compiled
+        # program — never varies across batches
+        while len(hps) < k:
+            hps.append(self._hparams({}, 0))
+        php = stack_hparams(hps)
+        pstep = get_compiled_population_step(tc, k)
+        pstate = init_population_state(jax.random.PRNGKey(self.seed), tc, k)
+        for s in range(max(budgets)):
+            pstate, _ = pstep(pstate, data.make_batch(s), php)
+        scores = np.asarray(population_scores(pstate, self.DIVERGED_SCORE))
+        return [float(x) for x in scores[: len(configs)]]
+
+
 SPACE = [
     {"name": "learning_rate", "type": "float", "range": [1e-4, 3e-2], "scale": "log"},
     {"name": "warmup_frac", "type": "float", "range": [0.02, 0.5]},
@@ -84,6 +210,10 @@ def main(argv=None) -> int:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--db", default="", help="sqlite path ('' = in-memory)")
     p.add_argument("--deadline", type=float, default=0.0, help="per-job seconds (straggler kill)")
+    p.add_argument("--vectorize", type=int, default=0, metavar="K",
+                   help="train K trials as one vmapped program (0 = serial compile-once)")
+    p.add_argument("--legacy-recompile", action="store_true",
+                   help="pre-refactor baseline: bake hparams into the closure, recompile per trial")
     args = p.parse_args(argv)
 
     from ..core.experiment import Experiment
@@ -102,7 +232,15 @@ def main(argv=None) -> int:
     if args.deadline:
         exp_cfg["job_deadline_s"] = args.deadline
 
-    trial = make_trial(args.arch, args.steps, args.batch, args.seq, args.seed)
+    if args.vectorize > 0:
+        exp_cfg["resource"] = "vectorized"
+        exp_cfg["n_parallel"] = args.vectorize
+        trial = PopulationTrial(args.arch, args.steps, args.batch, args.seq,
+                                args.seed, population=args.vectorize)
+    elif args.legacy_recompile:
+        trial = make_trial(args.arch, args.steps, args.batch, args.seq, args.seed)
+    else:
+        trial = PopulationTrial(args.arch, args.steps, args.batch, args.seq, args.seed)
     t0 = time.time()
     exp = Experiment(exp_cfg, trial)
     best = exp.run()
@@ -110,6 +248,7 @@ def main(argv=None) -> int:
     print(json.dumps({
         "proposer": args.proposer,
         "arch": args.arch,
+        "vectorize": args.vectorize,
         "best_score": best["score"],
         "best_config": {k: v for k, v in best["config"].items()
                         if not k.startswith(("hb_", "asha_", "pbt_")) and k != "job_id"},

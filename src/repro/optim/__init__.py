@@ -1,2 +1,3 @@
 from .adamw import adamw_update, init_opt_state, global_norm
+from .hparams import HParams, hparams_from_config, hparams_from_dict, stack_hparams
 from .schedule import warmup_cosine, constant

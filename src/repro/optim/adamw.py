@@ -47,12 +47,29 @@ def global_norm(tree) -> jax.Array:
 
 
 def adamw_update(
-    grads, params, state: OptState, lr: jax.Array, tc: TrainConfig
+    grads, params, state: OptState, lr: jax.Array, tc: TrainConfig,
+    hp: Optional["HParams"] = None,
 ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
-    b1, b2, eps, wd = tc.b1, tc.b2, tc.eps, tc.weight_decay
+    """One AdamW step.
+
+    ``b2`` / ``weight_decay`` / ``grad_clip`` come from ``hp`` when given — a
+    *traced* HParams pytree, so distinct trials share one compiled update —
+    and fall back to the static ``tc`` values otherwise (identical numerics:
+    the traced formulation constant-folds under jit).  ``b1`` and ``eps``
+    stay static.
+    """
+    b1, eps = tc.b1, tc.eps
+    if hp is None:
+        from .hparams import hparams_from_config
+
+        hp = hparams_from_config(tc)
+    b2 = jnp.asarray(hp.b2, jnp.float32)
+    wd = jnp.asarray(hp.weight_decay, jnp.float32)
+    gc = jnp.asarray(hp.grad_clip, jnp.float32)
     step = state["step"] + 1
     gnorm = global_norm(grads)
-    clip = jnp.minimum(1.0, tc.grad_clip / (gnorm + 1e-9)) if tc.grad_clip > 0 else 1.0
+    # traced grad_clip: gc <= 0 disables clipping without a Python branch
+    clip = jnp.where(gc > 0, jnp.minimum(1.0, gc / (gnorm + 1e-9)), 1.0)
 
     c1 = 1.0 - b1 ** step.astype(jnp.float32)
     c2 = 1.0 - b2 ** step.astype(jnp.float32)
@@ -65,7 +82,7 @@ def adamw_update(
         mh, vh = m_new / c1, v_new / c2
         delta = mh / (jnp.sqrt(vh) + eps)
         base = master.astype(jnp.float32)
-        if wd > 0 and p.ndim >= 2:  # decay matrices, not norms/biases
+        if p.ndim >= 2:  # decay matrices, not norms/biases (wd==0 is a no-op)
             delta = delta + wd * base
         new_master = base - lr * delta
         return (

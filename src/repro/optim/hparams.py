@@ -1,0 +1,82 @@
+"""Per-trial hyperparameters as a traced pytree.
+
+The HPO hot path used to bake ``learning_rate`` / ``weight_decay`` / ``b2`` /
+``grad_clip`` / schedule lengths into the ``TrainConfig`` closure, so every
+trial's ``jax.jit(make_train_step(tc))`` was a *different* Python callable and
+paid a full XLA recompile.  ``HParams`` moves those knobs into a pytree that is
+passed as a traced argument: one compiled step then serves every trial of a
+given architecture, and a whole population of trials can ride a leading
+``vmap`` axis (see ``repro.train.population``).
+
+Contract: anything in ``HParams`` may differ per trial without recompiling;
+anything still read from ``TrainConfig`` inside the step (model architecture,
+parallelism, dtypes, ``b1``, ``eps``, ``z_loss``) is static and keys the
+compile cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import TrainConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HParams:
+    """Traced per-trial hyperparameters (every field is a jnp scalar leaf)."""
+
+    learning_rate: Any
+    weight_decay: Any
+    b2: Any
+    grad_clip: Any          # <= 0 disables clipping (traced via jnp.where)
+    warmup_steps: Any       # float32; schedule math is already float
+    total_steps: Any
+
+
+def hparams_from_config(tc: TrainConfig) -> HParams:
+    """Lift the tunable knobs of a TrainConfig into a traced HParams."""
+    f32 = lambda v: jnp.asarray(v, jnp.float32)
+    return HParams(
+        learning_rate=f32(tc.learning_rate),
+        weight_decay=f32(tc.weight_decay),
+        b2=f32(tc.b2),
+        grad_clip=f32(tc.grad_clip),
+        warmup_steps=f32(max(tc.warmup_steps, 1)),
+        total_steps=f32(tc.total_steps),
+    )
+
+
+def hparams_from_dict(cfg: Dict[str, Any], tc: TrainConfig) -> HParams:
+    """Build HParams from an HPO proposal dict, defaulting to ``tc``'s values.
+
+    Recognised keys mirror the search space in ``repro.launch.hpo``:
+    ``learning_rate``, ``weight_decay``, ``b2``, ``grad_clip`` and either
+    explicit ``warmup_steps``/``total_steps`` or ``warmup_frac`` applied to
+    ``tc.total_steps``.
+    """
+    total = float(cfg.get("total_steps", tc.total_steps))
+    if "warmup_steps" in cfg:
+        warmup = float(cfg["warmup_steps"])
+    elif "warmup_frac" in cfg:
+        warmup = float(cfg["warmup_frac"]) * total
+    else:
+        warmup = float(tc.warmup_steps)
+    f32 = lambda v: jnp.asarray(float(v), jnp.float32)
+    return HParams(
+        learning_rate=f32(cfg.get("learning_rate", tc.learning_rate)),
+        weight_decay=f32(cfg.get("weight_decay", tc.weight_decay)),
+        b2=f32(cfg.get("b2", tc.b2)),
+        grad_clip=f32(cfg.get("grad_clip", tc.grad_clip)),
+        warmup_steps=f32(max(warmup, 1.0)),
+        total_steps=f32(total),
+    )
+
+
+def stack_hparams(hps: Sequence[HParams]) -> HParams:
+    """Stack per-trial HParams along a new leading population axis."""
+    assert hps, "empty population"
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *hps)

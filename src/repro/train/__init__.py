@@ -1,3 +1,16 @@
-from .train_step import init_train_state, make_eval_step, make_train_step, train_state_specs
+from .train_step import (
+    get_compiled_train_step,
+    init_train_state,
+    make_eval_step,
+    make_hparam_train_step,
+    make_train_step,
+    train_state_specs,
+)
+from .population import (
+    get_compiled_population_step,
+    init_population_state,
+    make_population_train_step,
+    population_scores,
+)
 from .serve_step import greedy_generate, make_serve_step
 from .loss import cross_entropy

@@ -1,0 +1,133 @@
+"""Vmapped population trial engine: K HPO trials in one device program.
+
+Serial HPO evaluates trials as independent Python jobs — each pays its own
+XLA compile and runs one small model at a time, leaving the accelerator
+mostly idle.  Because ``make_hparam_train_step`` takes the tunable knobs as a
+*traced* ``HParams`` pytree, a whole population of trials of one architecture
+can instead ride a leading ``vmap`` axis: one jitted program advances all K
+trials per step, amortizing both compilation (exactly one, regardless of how
+many trials the experiment runs) and per-step dispatch.
+
+Population state layout::
+
+    {"inner":     vmapped train state (leading axis K),
+     "diverged":  bool[K]   — latch; a NaN/inf loss freezes that trial,
+     "last_loss": f32[K]    — loss at each trial's last *applied* step}
+
+Semantics per jitted ``pop_step(pstate, batch, hp)``:
+
+* a trial is **active** while ``opt.step < hp.total_steps`` and not diverged —
+  ``hp.total_steps`` doubles as the per-trial step budget, so trials with
+  different budgets (e.g. Hyperband rungs) coexist in one batch: exhausted
+  trials freeze in place while the rest continue;
+* a non-finite loss at an active step sets the ``diverged`` latch and the
+  update is *not* applied — the sick trial freezes, the batch lives on
+  (vmapped divergence masking);
+* ``last_loss`` records the loss of the most recent applied update, i.e. each
+  trial's own final loss once it halts.
+
+The shared ``batch`` is broadcast to every trial (``in_axes=(0, None, 0)``),
+matching the serial driver where every trial consumes the same seeded stream.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import TrainConfig
+from ..optim.hparams import HParams
+from .train_step import init_train_state, make_hparam_train_step, static_step_key
+
+PopState = Dict[str, Any]
+
+
+def _per_trial(mask: jax.Array, new, old):
+    m = mask.reshape((-1,) + (1,) * (new.ndim - 1))
+    return jnp.where(m, new, old)
+
+
+def init_population_state(key, tc: TrainConfig, population: int) -> PopState:
+    """Initialize K identical trials from one PRNG key.
+
+    All trials start from the same weights (the serial driver inits every
+    trial with the same seed); only their traced hyperparameters differ.
+    Use ``init_population_state_from_keys`` for per-trial init seeds.
+    """
+    one = init_train_state(key, tc)
+    inner = jax.tree.map(lambda x: jnp.broadcast_to(x, (population,) + x.shape), one)
+    return _wrap(inner, population)
+
+
+def init_population_state_from_keys(keys, tc: TrainConfig) -> PopState:
+    """Initialize one trial per PRNG key (keys shape ``(K, 2)``)."""
+    inner = jax.vmap(lambda k: init_train_state(k, tc))(keys)
+    return _wrap(inner, int(keys.shape[0]))
+
+
+def _wrap(inner, k: int) -> PopState:
+    return {
+        "inner": inner,
+        "diverged": jnp.zeros((k,), bool),
+        "last_loss": jnp.full((k,), jnp.inf, jnp.float32),
+    }
+
+
+def make_population_train_step(tc: TrainConfig) -> Callable:
+    """``(pstate, batch, hp) -> (pstate, metrics)`` over a leading K axis.
+
+    ``hp`` is a stacked ``HParams`` (every leaf shape ``(K,)``); metrics come
+    back per-trial (leading K) plus an ``active`` mask.
+    """
+    step = make_hparam_train_step(tc)
+    vstep = jax.vmap(step, in_axes=(0, None, 0))
+
+    def pop_step(pstate: PopState, batch, hp: HParams):
+        inner = pstate["inner"]
+        in_budget = inner["opt"]["step"].astype(jnp.float32) < hp.total_steps
+        active = in_budget & ~pstate["diverged"]
+        new_inner, metrics = vstep(inner, batch, hp)
+        finite = jnp.isfinite(metrics["loss"])
+        applied = active & finite
+        merged = jax.tree.map(lambda n, o: _per_trial(applied, n, o), new_inner, inner)
+        return {
+            "inner": merged,
+            "diverged": pstate["diverged"] | (active & ~finite),
+            "last_loss": jnp.where(applied, metrics["loss"], pstate["last_loss"]),
+        }, dict(metrics, active=active)
+
+    return pop_step
+
+
+# -- compile-once cache (one entry per (static config, population size)) --------
+
+_POP_CACHE: Dict[Tuple, Any] = {}
+_POP_CACHE_LOCK = threading.Lock()
+
+
+def get_compiled_population_step(tc: TrainConfig, population: int):
+    """Memoized ``jax.jit`` of the population step with donated state."""
+    key = (static_step_key(tc), int(population))
+    with _POP_CACHE_LOCK:
+        fn = _POP_CACHE.get(key)
+        if fn is None:
+            fn = jax.jit(make_population_train_step(tc), donate_argnums=0)
+            _POP_CACHE[key] = fn
+    return fn
+
+
+def clear_population_cache() -> None:
+    with _POP_CACHE_LOCK:
+        _POP_CACHE.clear()
+
+
+def population_scores(pstate: PopState, diverged_score: float = -1e9):
+    """HPO convention: score = -final_loss, with a sentinel for diverged trials.
+
+    Trials that never applied a step (budget 0) also get the sentinel.
+    """
+    last = pstate["last_loss"]
+    ok = ~pstate["diverged"] & jnp.isfinite(last)
+    return jnp.where(ok, -last, jnp.float32(diverged_score))

@@ -11,9 +11,17 @@ suitable for ``jax.jit`` with explicit shardings.  Features:
 * AdamW update with dtype-configurable sharded state.
 
 State layout: ``{"params": ..., "opt": {"mu","nu","step"[,"master"]}}``.
+
+**Compile-once HPO path**: ``make_hparam_train_step(tc)`` takes the tunable
+hyperparameters (lr / wd / b2 / grad_clip / schedule) as a traced ``HParams``
+argument instead of closing over them, and ``get_compiled_train_step(tc)``
+memoizes the jitted step on the *static* parts of ``tc`` only — so an HPO
+experiment over N trials of one architecture compiles exactly once instead of
+N times.  ``donate_argnums=0`` donates the train state buffer.
 """
 from __future__ import annotations
 
+import threading
 from typing import Any, Callable, Dict, Tuple
 
 import jax
@@ -23,6 +31,7 @@ from ..configs.base import TrainConfig
 from ..models import transformer as T
 from ..models.layers import dtype_of
 from ..optim.adamw import adamw_update, init_opt_state
+from ..optim.hparams import HParams, hparams_from_config
 from ..optim.schedule import warmup_cosine
 
 
@@ -58,11 +67,17 @@ def _loss_fn(params, batch, tc: TrainConfig):
     return loss, metrics
 
 
-def make_train_step(tc: TrainConfig) -> Callable:
+def make_hparam_train_step(tc: TrainConfig) -> Callable:
+    """``(state, batch, hp: HParams) -> (state, metrics)`` with traced hparams.
+
+    Only the static parts of ``tc`` (model, parallel, b1, eps, z_loss) are
+    closed over; lr / wd / b2 / grad_clip / schedule ride in ``hp`` so one
+    compilation serves every trial of the architecture.
+    """
     mb = tc.parallel.microbatch
     acc_dt = dtype_of(tc.parallel.grad_allreduce_dtype)
 
-    def train_step(state, batch):
+    def train_step(state, batch, hp: HParams):
         params = state["params"]
 
         if mb and mb > 0:
@@ -99,15 +114,63 @@ def make_train_step(tc: TrainConfig) -> Callable:
 
         lr = warmup_cosine(
             state["opt"]["step"],
-            peak_lr=tc.learning_rate,
-            warmup_steps=tc.warmup_steps,
-            total_steps=tc.total_steps,
+            peak_lr=hp.learning_rate,
+            warmup_steps=hp.warmup_steps,
+            total_steps=hp.total_steps,
         )
-        new_params, new_opt, om = adamw_update(grads, params, state["opt"], lr, tc)
+        new_params, new_opt, om = adamw_update(grads, params, state["opt"], lr, tc, hp=hp)
         metrics = dict(metrics, **om, lr=lr)
         return {"params": new_params, "opt": new_opt}, metrics
 
     return train_step
+
+
+def make_train_step(tc: TrainConfig) -> Callable:
+    """Back-compat ``(state, batch) -> (state, metrics)``: hparams from ``tc``."""
+    step = make_hparam_train_step(tc)
+    hp = hparams_from_config(tc)
+
+    def train_step(state, batch):
+        return step(state, batch, hp)
+
+    return train_step
+
+
+# -- compile-once cache ---------------------------------------------------------
+#
+# Keyed on the static parts of TrainConfig only (frozen dataclasses hash by
+# value).  Distinct trials of one architecture share a single jitted step; the
+# per-trial knobs arrive as the traced HParams argument.
+
+_STEP_CACHE: Dict[Tuple, Any] = {}
+_STEP_CACHE_LOCK = threading.Lock()
+
+
+def static_step_key(tc: TrainConfig) -> Tuple:
+    """The compile-cache key: everything a trial may NOT vary per-proposal."""
+    return (tc.model, tc.parallel, tc.b1, tc.eps, tc.z_loss)
+
+
+def get_compiled_train_step(tc: TrainConfig):
+    """Memoized ``jax.jit(make_hparam_train_step(tc), donate_argnums=0)``.
+
+    Call ``fn._cache_size()`` (or compare ``id(fn)`` across trials) to verify
+    the compile-once property; ``clear_step_cache()`` resets between tests.
+    Thread-safe: trials running on resource-manager worker threads share one
+    jitted callable per static config.
+    """
+    key = static_step_key(tc)
+    with _STEP_CACHE_LOCK:
+        fn = _STEP_CACHE.get(key)
+        if fn is None:
+            fn = jax.jit(make_hparam_train_step(tc), donate_argnums=0)
+            _STEP_CACHE[key] = fn
+    return fn
+
+
+def clear_step_cache() -> None:
+    with _STEP_CACHE_LOCK:
+        _STEP_CACHE.clear()
 
 
 def make_eval_step(tc: TrainConfig) -> Callable:

@@ -1,0 +1,192 @@
+"""Compile-once + vmapped population trial engine (the HPO hot path).
+
+Covers the HParams-as-traced-input contract: N trials of one architecture
+share a single compiled step; a whole population trains in one vmapped
+program with divergence masking; the vectorized resource manager batches the
+Experiment loop's jobs; retries are budgeted per job lineage.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.core.experiment import Experiment
+from repro.core.proposer import make_proposer
+from repro.core.resource.vectorized import VectorizedResourceManager
+from repro.core.search_space import SearchSpace
+from repro.data.pipeline import SyntheticLM
+from repro.launch.hpo import PopulationTrial
+from repro.optim.hparams import hparams_from_dict, stack_hparams
+from repro.train import population as pop
+from repro.train import train_step as ts
+
+SEQ, BATCH, STEPS = 32, 4, 4
+
+
+@pytest.fixture(scope="module")
+def tc():
+    cfg = get_smoke_config("starcoder2-3b")
+    return TrainConfig(model=cfg, parallel=ParallelConfig(remat="none"),
+                       total_steps=STEPS)
+
+
+@pytest.fixture(scope="module")
+def data(tc):
+    return SyntheticLM(tc.model.vocab_size, SEQ, BATCH, seed=0)
+
+
+def _hp(tc, **over):
+    base = {"learning_rate": 1e-3, "weight_decay": 0.1, "b2": 0.95,
+            "grad_clip": 1.0, "warmup_steps": 2, "total_steps": STEPS}
+    base.update(over)
+    return hparams_from_dict(base, tc)
+
+
+# -- compile-once ---------------------------------------------------------------
+
+def test_three_trials_one_compile(tc, data):
+    ts.clear_step_cache()
+    fn = ts.get_compiled_train_step(tc)
+    losses = []
+    for lr in (1e-3, 3e-3, 1e-2):
+        st = ts.init_train_state(jax.random.PRNGKey(0), tc)
+        for s in range(STEPS):
+            st, m = fn(st, data.make_batch(s), _hp(tc, learning_rate=lr))
+        losses.append(float(m["loss"]))
+    assert ts.get_compiled_train_step(tc) is fn, "cache must return the same callable"
+    assert fn._cache_size() == 1, "3 trials with distinct hparams must compile exactly once"
+    assert len(set(losses)) == 3, "distinct lrs must produce distinct losses"
+
+
+def test_hparam_step_matches_legacy_closure(tc, data):
+    """Traced-hparams formulation is numerically identical to the closure."""
+    legacy_tc = TrainConfig(model=tc.model, parallel=tc.parallel,
+                            learning_rate=2e-3, warmup_steps=2,
+                            total_steps=STEPS, weight_decay=0.05, b2=0.97,
+                            grad_clip=0.5)
+    s_a = ts.init_train_state(jax.random.PRNGKey(0), legacy_tc)
+    s_b = ts.init_train_state(jax.random.PRNGKey(0), legacy_tc)
+    legacy = jax.jit(ts.make_train_step(legacy_tc))
+    hfn = ts.get_compiled_train_step(legacy_tc)
+    hp = _hp(legacy_tc, learning_rate=2e-3, weight_decay=0.05, b2=0.97,
+             grad_clip=0.5)
+    for s in range(STEPS):
+        s_a, m_a = legacy(s_a, data.make_batch(s))
+        s_b, m_b = hfn(s_b, data.make_batch(s), hp)
+    np.testing.assert_allclose(float(m_a["loss"]), float(m_b["loss"]), rtol=1e-6)
+
+
+# -- vmapped population ---------------------------------------------------------
+
+def test_vmapped_matches_serial(tc, data):
+    cfgs = [
+        {"learning_rate": 1e-3, "weight_decay": 0.1, "b2": 0.95, "grad_clip": 1.0},
+        {"learning_rate": 5e-3, "weight_decay": 0.0, "b2": 0.99, "grad_clip": 0.5},
+        {"learning_rate": 2e-3, "weight_decay": 0.2, "b2": 0.9, "grad_clip": 2.0},
+    ]
+    hps = [_hp(tc, **c) for c in cfgs]
+    fn = ts.get_compiled_train_step(tc)
+    serial = []
+    for hp in hps:
+        st = ts.init_train_state(jax.random.PRNGKey(0), tc)
+        for s in range(STEPS):
+            st, m = fn(st, data.make_batch(s), hp)
+        serial.append(-float(m["loss"]))
+
+    pstep = pop.get_compiled_population_step(tc, len(hps))
+    ps = pop.init_population_state(jax.random.PRNGKey(0), tc, len(hps))
+    php = stack_hparams(hps)
+    for s in range(STEPS):
+        ps, _ = pstep(ps, data.make_batch(s), php)
+    vec = np.asarray(pop.population_scores(ps))
+    np.testing.assert_allclose(vec, np.asarray(serial), rtol=1e-5, atol=1e-6)
+
+
+def test_divergence_freezes_one_trial_not_the_batch(tc, data):
+    hps = [_hp(tc), _hp(tc, learning_rate=1e9, grad_clip=0.0), _hp(tc, learning_rate=2e-3)]
+    pstep = pop.get_compiled_population_step(tc, 3)
+    ps = pop.init_population_state(jax.random.PRNGKey(0), tc, 3)
+    php = stack_hparams(hps)
+    for s in range(STEPS):
+        ps, _ = pstep(ps, data.make_batch(s), php)
+    diverged = np.asarray(ps["diverged"])
+    scores = np.asarray(pop.population_scores(ps))
+    assert diverged.tolist() == [False, True, False]
+    assert scores[1] == -1e9
+    assert np.isfinite(scores[[0, 2]]).all() and (scores[[0, 2]] > -1e8).all()
+    # healthy trials advanced their full budget; the sick one froze
+    steps_done = np.asarray(ps["inner"]["opt"]["step"])
+    assert steps_done[0] == STEPS and steps_done[2] == STEPS
+    assert steps_done[1] < STEPS
+
+
+def test_per_trial_budgets_coexist(tc, data):
+    """hp.total_steps doubles as the step budget (Hyperband-style rungs)."""
+    hps = [_hp(tc, total_steps=2), _hp(tc, total_steps=STEPS)]
+    pstep = pop.get_compiled_population_step(tc, 2)
+    ps = pop.init_population_state(jax.random.PRNGKey(0), tc, 2)
+    php = stack_hparams(hps)
+    for s in range(STEPS):
+        ps, _ = pstep(ps, data.make_batch(s), php)
+    steps_done = np.asarray(ps["inner"]["opt"]["step"])
+    assert steps_done.tolist() == [2, STEPS]
+
+
+# -- experiment integration -----------------------------------------------------
+
+SPACE_JSON = [
+    {"name": "learning_rate", "type": "float", "range": [1e-4, 1e-2], "scale": "log"},
+    {"name": "weight_decay", "type": "float", "range": [0.0, 0.2]},
+]
+
+
+def test_vectorized_experiment_batches_and_compiles_once():
+    ts.clear_step_cache()
+    pop.clear_population_cache()
+    trial = PopulationTrial("starcoder2-3b", steps=2, batch=2, seq=16, seed=0,
+                            population=3)
+    rm = VectorizedResourceManager(n_parallel=3)
+    exp = Experiment(
+        {"proposer": "random", "parameter_config": SPACE_JSON, "n_samples": 7,
+         "n_parallel": 3, "target": "max", "random_seed": 0},
+        trial, resource_manager=rm,
+    )
+    best = exp.run()
+    assert best is not None and best["score"] > -1e8
+    assert sum(rm.batch_sizes) == 7
+    assert max(rm.batch_sizes) == 3, "full populations must batch at K"
+    tc, _ = trial._setup()
+    assert pop.get_compiled_population_step(tc, 3)._cache_size() == 1, (
+        "partial batches are padded to K: one compile for the whole experiment"
+    )
+
+
+def test_get_params_batched_drain():
+    space = SearchSpace.from_json(SPACE_JSON)
+    prop = make_proposer("random", space, n_samples=5)
+    batch = prop.get_params(3)
+    assert len(batch) == 3
+    assert len(prop.get_params(10)) == 2, "drain stops at the sample budget"
+
+
+def test_retry_budget_is_per_job_not_per_config():
+    """Two proposals with identical params must not share a retry budget."""
+    attempts = []
+
+    def always_fail(cfg):
+        attempts.append(cfg["job_id"])
+        raise RuntimeError("boom")
+
+    exp = Experiment(
+        {"proposer": "grid", "n_samples": 2, "target": "max", "random_seed": 0,
+         "n_parallel": 1, "max_retries": 1,
+         # a two-value choice with identical values: grid proposes x=1.0 twice
+         "parameter_config": [{"name": "x", "type": "choice", "range": [1.0, 1.0]}]},
+        always_fail,
+    )
+    exp.run()
+    # identical-param proposals: each lineage gets 1 original + 1 retry
+    assert len(attempts) == 4, attempts
+    assert exp.proposer.n_failed == 2

@@ -2,6 +2,8 @@
 mesh-slice resource pool."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import Mesh, PartitionSpec
 
