@@ -5,11 +5,13 @@
 #   make bench   — smoke benchmarks: HPO trial-engine throughput (emits
 #                  BENCH_hpo_throughput.json) + extensibility LOC count
 #   make bench-all — every registered benchmark (slow: full roofline sweep)
+#   make docs-check — README/docs snippets compile, imports resolve, CLI
+#                  flags and make targets referenced in docs exist
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-all
+.PHONY: test bench bench-all docs-check
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -19,3 +21,6 @@ bench:
 
 bench-all:
 	$(PYTHON) -m benchmarks.run
+
+docs-check:
+	$(PYTHON) tools/docs_check.py

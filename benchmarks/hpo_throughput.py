@@ -1,32 +1,110 @@
-"""HPO trial-engine throughput: serial-recompile vs compile-once vs vmapped.
+"""HPO trial-engine throughput: serial-recompile vs compile-once vs vmapped
+vs mesh-sharded.
 
 The pre-refactor Experiment loop baked each proposal's hyperparameters into
 the ``TrainConfig`` closure, so every trial paid a full XLA compile and the
-device ran one small model at a time.  This benchmark quantifies the two
-fixes on the CPU smoke config:
+device ran one small model at a time.  This benchmark quantifies the fixes on
+the CPU smoke config:
 
 * **serial_recompile** — the legacy path: fresh ``jax.jit(make_train_step)``
   per trial (compiles grow O(n_trials));
 * **compile_once**     — hyperparameters as a traced ``HParams`` argument via
   ``get_compiled_train_step``: one compile serves every trial;
 * **vmapped**          — ``repro.train.population``: K trials advance in one
-  jitted ``vmap`` program (one compile per (arch, K), amortized dispatch).
+  jitted ``vmap`` program (one compile per (arch, K), amortized dispatch);
+* **sharded**          — the K-trial population axis split over an
+  8-virtual-device CPU mesh with ``shard_map`` (K/N trials per device, still
+  one compiled program).  Runs in a subprocess because the device count must
+  be forced before jax initializes; the same subprocess re-times the vmapped
+  engine so the sharded-vs-vmapped ratio is apples-to-apples.
+
+All engines fold a per-trial ``stream`` id into the batch PRNG (independent
+per-trial data streams), so scores must agree trial-for-trial across engines.
 
 Emits ``BENCH_hpo_throughput.json`` (repo root) and returns the result dict
 for ``benchmarks/run.py``.  Pass criteria: vmapped >= 3x serial trials/sec,
-compile-once and vmapped each compile exactly once, and vmapped scores match
-the compile-once scores within tolerance.
+sharded >= 1x the vmapped trials/sec on the same mesh, compile-once /
+vmapped / sharded each compile exactly once, and vmapped + sharded scores
+match the compile-once scores within tolerance.
 """
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
 
 OUT_PATH = "BENCH_hpo_throughput.json"
 SPEEDUP_FLOOR = 3.0
+SHARDED_FLOOR = 1.0  # sharded engine must not be slower than vmapped
 SCORE_TOL = 1e-3
+MESH_DEVICES = 8
+
+
+def _sample_configs(n_trials: int, seed: int):
+    from repro.core.search_space import SearchSpace
+    from repro.launch.hpo import SPACE
+
+    space = SearchSpace.from_json(SPACE)
+    rng = np.random.default_rng(seed)
+    # explicit per-trial stream ids: every engine (serial / vmapped / sharded)
+    # then trains trial i on the same independent data sequence
+    return [dict(space.sample(rng), stream=i) for i in range(n_trials)]
+
+
+def _probe_sharded(arch: str, n_trials: int, population: int, steps: int,
+                   batch: int, seq: int, seed: int) -> dict:
+    """Time vmapped + sharded inside a fresh process with a forced
+    MESH_DEVICES-wide virtual CPU mesh (must happen before jax init)."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + f" --xla_force_host_platform_device_count={MESH_DEVICES}"
+    ).strip()
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", "benchmarks.hpo_throughput", "--probe-sharded",
+           arch, str(n_trials), str(population), str(steps), str(batch),
+           str(seq), str(seed)]
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True, timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(f"sharded probe failed:\n{out.stderr[-2000:]}")
+    return json.loads(out.stdout.splitlines()[-1])
+
+
+def _probe_main(argv) -> None:
+    arch, n_trials, population, steps, batch, seq, seed = (
+        argv[0], *(int(x) for x in argv[1:]))
+    import jax
+
+    from repro.distributed.sharding import population_mesh
+    from repro.launch.hpo import PopulationTrial
+    from repro.train import population as pop
+
+    cfgs = _sample_configs(n_trials, seed)
+    trial = PopulationTrial(arch, steps, batch, seq, seed, population=population)
+    tc, _ = trial._setup()
+    mesh = population_mesh()
+    res = {"n_devices": jax.device_count()}
+    for name, kw in (("vmapped", {}), ("sharded", {"mesh": mesh})):
+        pop.clear_population_cache()
+        t0 = time.time()
+        scores = []
+        for i in range(0, n_trials, population):
+            scores.extend(trial.run_population(cfgs[i:i + population], **kw))
+        dt = time.time() - t0
+        if name == "sharded":
+            compiles = pop.get_compiled_sharded_population_step(
+                tc, population, mesh=mesh, per_trial_batch=True)._cache_size()
+        else:
+            compiles = pop.get_compiled_population_step(
+                tc, population, per_trial_batch=True)._cache_size()
+        res[name] = {"seconds": dt, "trials_per_sec": n_trials / dt,
+                     "population": population, "compiles": compiles,
+                     "scores": scores}
+    print(json.dumps(res))
 
 
 def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
@@ -35,15 +113,12 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
 
     from repro.configs import get_smoke_config
     from repro.configs.base import ParallelConfig, TrainConfig
-    from repro.core.search_space import SearchSpace
     from repro.data.pipeline import SyntheticLM
-    from repro.launch.hpo import SPACE, PopulationTrial
+    from repro.launch.hpo import PopulationTrial
     from repro.train import population as pop
     from repro.train import train_step as ts
 
-    space = SearchSpace.from_json(SPACE)
-    rng = np.random.default_rng(seed)
-    cfgs = [space.sample(rng) for _ in range(n_trials)]
+    cfgs = _sample_configs(n_trials, seed)
 
     results = {}
 
@@ -69,7 +144,7 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
         step_fn = jax.jit(ts.make_train_step(tc))
         score = -1e9
         for s in range(steps):
-            state, metrics = step_fn(state, data.make_batch(s))
+            state, metrics = step_fn(state, data.make_batch(s, stream=int(cfg["stream"])))
             loss = float(metrics["loss"])
             if not np.isfinite(loss):
                 break
@@ -104,16 +179,34 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
     tc_static, _ = vtrial._setup()
     results["vmapped"] = {
         "seconds": dt, "trials_per_sec": n_trials / dt, "population": population,
-        "compiles": pop.get_compiled_population_step(tc_static, population)._cache_size(),
+        "compiles": pop.get_compiled_population_step(
+            tc_static, population, per_trial_batch=True)._cache_size(),
     }
 
-    equiv = float(max(abs(a - b) for a, b in zip(once_scores, vmap_scores)))
+    # -- sharded: population axis over an 8-virtual-device CPU mesh ------------
+    probe = _probe_sharded(arch, n_trials, population, steps, batch, seq, seed)
+    sharded_scores = probe["sharded"].pop("scores")
+    probe_vmap_scores = probe["vmapped"].pop("scores")
+    results["sharded"] = dict(probe["sharded"], n_devices=probe["n_devices"],
+                              vmapped_same_mesh=probe["vmapped"])
+
+    def max_diff(a, b):
+        return float(max(abs(x - y) for x, y in zip(a, b)))
+
+    equiv = max(max_diff(once_scores, vmap_scores),
+                max_diff(once_scores, sharded_scores),
+                max_diff(once_scores, probe_vmap_scores))
     speedup_vmap = results["vmapped"]["trials_per_sec"] / results["serial_recompile"]["trials_per_sec"]
     speedup_once = results["compile_once"]["trials_per_sec"] / results["serial_recompile"]["trials_per_sec"]
+    # same-process, same-mesh comparison: sharded vs vmapped on 8 devices
+    sharded_vs_vmapped = (results["sharded"]["trials_per_sec"]
+                          / results["sharded"]["vmapped_same_mesh"]["trials_per_sec"])
     ok = (
         speedup_vmap >= SPEEDUP_FLOOR
+        and sharded_vs_vmapped >= SHARDED_FLOOR
         and results["compile_once"]["compiles"] == 1
         and results["vmapped"]["compiles"] == 1
+        and results["sharded"]["compiles"] == 1
         and equiv <= SCORE_TOL
     )
     out = {
@@ -122,11 +215,14 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
         "modes": results,
         "speedup_vmapped_vs_serial": speedup_vmap,
         "speedup_compile_once_vs_serial": speedup_once,
+        "sharded_vs_vmapped_same_mesh": sharded_vs_vmapped,
         "equivalence_max_abs_diff": equiv,
         "pass": bool(ok),
         "paper_claim": (
-            f"vmapped population engine: {speedup_vmap:.1f}x trials/sec over "
-            f"serial recompile (floor {SPEEDUP_FLOOR}x); compiles "
+            f"population engines: vmapped {speedup_vmap:.1f}x trials/sec over "
+            f"serial recompile (floor {SPEEDUP_FLOOR}x); sharded over "
+            f"{results['sharded']['n_devices']} devices {sharded_vs_vmapped:.2f}x "
+            f"vmapped on the same mesh; compiles "
             f"{results['serial_recompile']['compiles']} -> 1"
         ),
     }
@@ -136,4 +232,7 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
 
 
 if __name__ == "__main__":
-    print(json.dumps(run(), indent=1))
+    if len(sys.argv) > 1 and sys.argv[1] == "--probe-sharded":
+        _probe_main(sys.argv[2:])
+    else:
+        print(json.dumps(run(), indent=1))

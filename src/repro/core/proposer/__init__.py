@@ -16,6 +16,11 @@ Auxiliary keys the proposer places in the config (``n_iterations``,
 the mechanism the paper uses so Hyperband can resume/extend training
 (§III-A2).  ``replay(rows)`` rebuilds internal state from the tracking DB for
 crash-resume; it relies only on those auxiliary keys, never on in-memory state.
+
+Optional protocol: rung-based proposers (ASHA, Hyperband, BOHB) additionally
+expose ``inflight_hook(steps_per_unit)`` returning a stateless-per-flight
+early-stop rule the population engines apply *between* proposals — see
+``early_stop.InFlightSuccessiveHalving``.
 """
 from __future__ import annotations
 
@@ -86,10 +91,23 @@ class Proposer(abc.ABC):
         return cfg
 
     def get_params(self, k: int) -> List[Dict[str, Any]]:
-        """Up to ``k`` configs in one call (batched proposal draining).
+        """Up to ``k`` configs in one call — the batched-draining protocol.
 
-        The default just loops ``get_param`` and stops at the first None
-        (budget issued / rung barrier), so synchronous proposers fill a whole
+        The Experiment loop claims every free resource each pass and asks for
+        that many configs at once, which is how a whole population of lanes
+        (``VectorizedResourceManager`` / the sharded pool) fills per round.
+        The contract:
+
+        * the return value has **at most** ``k`` entries and may be empty;
+        * draining stops at the first ``None`` from ``get_param`` — a ``None``
+          mid-drain means "a barrier is outstanding" (rung/generation barrier,
+          budget issued), NOT "finished"; the loop must hand back the unused
+          resources and retry after a callback fires;
+        * every returned config counts as *proposed*: the caller is expected
+          to run each one and eventually feed ``update`` exactly once per
+          config (score or failure), or the proposer's accounting will stall.
+
+        The default loops ``get_param`` so synchronous proposers fill a whole
         population per round with no per-algorithm work.  Subclasses that can
         propose a batch more cheaply (or atomically) may override.
         """

@@ -34,6 +34,21 @@ class ASHAProposer(Proposer):
     def _budget(self, rung: int) -> int:
         return min(self.max_iter, int(round(self.min_iter * self.eta ** rung)))
 
+    def inflight_hook(self, steps_per_unit: int = 1):
+        """Rung rule as an in-flight lane-truncation hook (population engines).
+
+        Budgets/boundaries are scaled to raw train steps (``n_iterations`` is
+        in budget units; a unit is ``steps_per_unit`` steps).  The hook shares
+        no state with this proposer — thread-safe on the batch worker.
+        """
+        from .early_stop import InFlightSuccessiveHalving
+
+        return InFlightSuccessiveHalving(
+            eta=self.eta,
+            min_iter=self.min_iter * steps_per_unit,
+            max_iter=self.max_iter * steps_per_unit,
+        )
+
     def _promotable(self) -> Optional[tuple]:
         for k in range(self.n_rungs - 1):
             res = self.rung_results[k]

@@ -1,0 +1,101 @@
+"""In-flight successive halving — early-stop decisions *inside* a population.
+
+The rung-based proposers (ASHA, Hyperband) normally act only between jobs: a
+config runs its whole ``n_iterations`` budget, reports, and the proposer then
+decides whether it earns a promotion.  On the population engines that is
+wasteful — all K lanes of a flight stay busy until the *longest* budget
+finishes even when most lanes are clearly losing.
+
+``InFlightSuccessiveHalving`` moves the rung rule into the flight.  The
+population driver (``PopulationTrial.run_population``) calls the hook at every
+rung boundary with each lane's current loss; lanes outside the top ``1/eta``
+of still-active lanes get their traced ``hp.total_steps`` budget truncated to
+the current step, which freezes them in the next population step **without a
+recompile** (the budget is a traced leaf).  The host loop ends as soon as the
+surviving max budget is reached, so the flush returns early and the freed
+lanes go back to Algorithm 1 for the next batch — mid-flight lane reuse.
+
+The hook is deliberately *stateless across flights* and shares nothing with
+the proposer instance that spawned it (``ASHAProposer.inflight_hook()``), so
+it is safe to call from the resource manager's batch worker thread while the
+proposer keeps running on the experiment loop thread.  Truncated lanes report
+the loss at their truncation step — ordinary early-stop semantics: the score
+the proposer sees is simply measured at a smaller budget.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import numpy as np
+
+
+class InFlightSuccessiveHalving:
+    """Rung-boundary lane truncation with reduction factor ``eta``.
+
+    ``boundaries`` is the set of step counts at which the rule fires:
+    ``min_iter * eta**k`` for every rung below ``max_iter``.  At a boundary,
+    every lane that reached it (budget >= step, not diverged, not padding) is
+    ranked by current loss — including lanes whose budget *ends* here, exactly
+    like ASHA compares rung completers against promotions passing through.
+    The top ``ceil(n / eta)`` keep their budgets; ranked lanes below the cut
+    that still had budget left are truncated to the boundary step.  Diverged
+    lanes lose their remaining budget outright (they can never advance), so a
+    flight of frozen lanes does not keep the devices busy.  Lanes never gain
+    budget — promotions remain the proposer's decision between flights.
+    """
+
+    def __init__(self, eta: float = 3.0, min_iter: int = 1, max_iter: int = 27):
+        self.eta = float(eta)
+        self.min_iter = max(1, int(min_iter))
+        self.max_iter = int(max_iter)
+        n_rungs = int(
+            math.floor(math.log(max(self.max_iter / self.min_iter, 1.0))
+                       / math.log(self.eta))
+        ) + 1
+        self.boundaries = sorted(
+            {
+                min(self.max_iter, int(round(self.min_iter * self.eta ** k)))
+                for k in range(n_rungs)
+                if int(round(self.min_iter * self.eta ** k)) < self.max_iter
+            }
+        )
+        # across all flights, for tests/telemetry: lanes cut by the rung rule
+        # vs dead budget reclaimed from diverged lanes (a different mechanism)
+        self.n_truncated = 0
+        self.n_reclaimed = 0
+
+    def __call__(
+        self,
+        step: int,
+        losses: Sequence[float],
+        budgets: Sequence[float],
+        diverged: Sequence[bool],
+    ) -> np.ndarray:
+        """Return the (possibly truncated) per-lane budgets after ``step``.
+
+        ``losses`` are each lane's most recent applied-step losses
+        (``pstate["last_loss"]``); padding lanes arrive with budget 0 and are
+        never considered active.
+        """
+        budgets = np.asarray(budgets, np.float64).copy()
+        losses = np.asarray(losses, np.float64)
+        diverged = np.asarray(diverged, bool)
+        if step not in self.boundaries:
+            return budgets
+        # a diverged lane's remaining budget is dead weight — reclaim it so an
+        # all-frozen flight ends instead of stepping masked no-ops
+        dead = diverged & (budgets > step)
+        budgets[dead] = step
+        self.n_reclaimed += int(dead.sum())
+        ranked_mask = (budgets >= step) & (budgets > 0) & ~diverged & np.isfinite(losses)
+        n_ranked = int(ranked_mask.sum())
+        n_keep = int(math.ceil(n_ranked / self.eta))
+        if n_ranked <= 1 or n_keep >= n_ranked:
+            return budgets
+        idx = np.flatnonzero(ranked_mask)
+        ranked = idx[np.argsort(losses[idx])]  # ascending loss = best first
+        cut = [i for i in ranked[n_keep:] if budgets[i] > step]
+        budgets[cut] = step
+        self.n_truncated += len(cut)
+        return budgets

@@ -68,6 +68,17 @@ class HyperbandProposer(Proposer):
     def _sample_config(self) -> Dict[str, Any]:
         return self.space.sample(self.rng)
 
+    def inflight_hook(self, steps_per_unit: int = 1):
+        """Rung rule as an in-flight lane-truncation hook (population engines);
+        see ``ASHAProposer.inflight_hook``."""
+        from .early_stop import InFlightSuccessiveHalving
+
+        return InFlightSuccessiveHalving(
+            eta=self.eta,
+            min_iter=self.min_iter * steps_per_unit,
+            max_iter=self.max_iter * steps_per_unit,
+        )
+
     def _active_bracket(self) -> Optional[_Bracket]:
         for b in self.brackets:
             if not b.done():

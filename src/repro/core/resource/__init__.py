@@ -14,6 +14,9 @@ Implementations:
                    (EC2-autoscaling analogue + node-failure injection)
 * ``vectorized`` — K population slots; bound jobs are batched and executed as
                    ONE vmapped device program (compile-once HPO hot path)
+* ``sharded``    — vectorized slots become per-device *lanes* on a 1-D
+                   population mesh; a batch is ONE shard_map-ed program with
+                   K/N trials per device
 """
 from __future__ import annotations
 
@@ -109,4 +112,4 @@ class ResourceManager(abc.ABC):
         pass
 
 
-from . import local, subprocess_rm, mesh_pool, elastic, vectorized  # noqa: E402,F401
+from . import local, subprocess_rm, mesh_pool, elastic, vectorized, sharded  # noqa: E402,F401

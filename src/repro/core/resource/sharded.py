@@ -1,0 +1,74 @@
+"""Sharded population resource manager — mesh-aware lanes, one device program.
+
+The vectorized manager buffers K jobs and runs them as one vmapped program on
+a single device.  This subclass keeps that buffering machinery but presents
+**mesh-aware slots**: the device set (default: every local device) is tiled
+into 1-chip slices with ``mesh_pool.tile_pod``, a 1-D *population* mesh is
+built over it (``repro.distributed.sharding.population_mesh``), and each
+resource id names the lane AND the device it lands on::
+
+    slice[0:1,3:4]/lane2   ->  4th device, 3rd of its K/N population lanes
+
+``n_parallel`` is rounded up to a multiple of the device count so the
+population axis always divides over the mesh (the trial pads short batches
+with 0-budget lanes).  ``_run_batch`` forwards the mesh to the target's
+``run_population(configs, mesh=...)``, which executes the flight as ONE
+``shard_map``-ed jitted program — K/N trials per device, no cross-trial
+communication.  Targets without a ``mesh`` kwarg still work (single-device
+vmapped fallback), so the manager stays drop-in compatible with every
+existing population target.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional, Sequence
+
+from . import register
+from .mesh_pool import tile_pod
+from .vectorized import VectorizedResourceManager
+
+
+@register("sharded")
+class ShardedPopulationResourceManager(VectorizedResourceManager):
+    def __init__(
+        self,
+        n_parallel: int = 8,
+        devices: Optional[Sequence[Any]] = None,
+        axis: str = "pop",
+        **kwargs,
+    ):
+        from ...distributed.sharding import population_mesh
+
+        from ...train.population import pad_population
+
+        self.mesh = population_mesh(devices, axis=axis)
+        devs = list(self.mesh.devices.flat)
+        n_dev = len(devs)
+        # population axis must divide over the mesh: round lanes up (same rule
+        # the trial applies to its batch, so slot count and padded K agree)
+        n_slots = pad_population(int(n_parallel), self.mesh)
+        self.lanes_per_device = n_slots // n_dev
+        self.slices = {
+            s.slice_id: s for s in tile_pod((1, n_dev), (1, 1), devices=devs)
+        }
+        super().__init__(n_parallel=0, **kwargs)  # resources added below
+        self.n_slots = n_slots
+        for lane in range(self.lanes_per_device):
+            for sid in self.slices:
+                self.add_resource(f"{sid}/lane{lane}")
+
+    def _run_batch(self, runner: Callable, configs: List[dict]) -> List[Any]:
+        import inspect
+
+        # discriminate on the signature, not on a raised TypeError: an
+        # in-flight TypeError must propagate, never silently re-run the batch
+        # on the single-device engine
+        try:
+            params = inspect.signature(runner).parameters
+            takes_mesh = "mesh" in params or any(
+                p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+            )
+        except (TypeError, ValueError):  # builtins/callables without signatures
+            takes_mesh = True
+        if takes_mesh:
+            return runner(configs, mesh=self.mesh)
+        return runner(configs)

@@ -4,7 +4,10 @@ Presents ``n_slots`` resources to Algorithm 1, but instead of launching each
 job on its own worker it *buffers* bound jobs and executes a whole batch in a
 single call — on the training substrate that call is one vmapped, jitted
 population step advancing every trial simultaneously (see
-``repro.train.population``).
+``repro.train.population``).  ``ShardedPopulationResourceManager`` (in
+``sharded.py``) keeps this exact buffering/flush machinery but lands the
+batch on an N-device mesh: slots become per-device *lanes* and the batch call
+carries the mesh.
 
 Batch protocol: if the experiment's ``target`` exposes
 
@@ -88,7 +91,7 @@ class VectorizedResourceManager(ResourceManager):
             try:
                 runner = getattr(target, "run_population", None)
                 if runner is not None:
-                    outs = runner([dict(j.config) for j in live])
+                    outs = self._run_batch(runner, [dict(j.config) for j in live])
                 else:
                     outs = [target(dict(j.config)) for j in live]
                 if len(outs) != len(live):
@@ -105,6 +108,11 @@ class VectorizedResourceManager(ResourceManager):
         threading.Thread(
             target=_worker, name=f"popbatch-{self.n_batches}", daemon=True
         ).start()
+
+    def _run_batch(self, runner: Callable, configs: List[dict]) -> List[Any]:
+        """Execute one buffered batch.  Subclass hook: the sharded manager
+        passes its device mesh through to ``run_population`` here."""
+        return runner(configs)
 
     def kill(self, job: Job) -> None:
         # the batch thread cannot be interrupted; mark KILLED so the eventual

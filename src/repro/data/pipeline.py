@@ -8,11 +8,18 @@ entropy), cheap enough for CPU smoke training, and exactly reproducible from
 
 Host sharding: ``make_batch(step, shard, n_shards)`` yields that host's slice
 of the global batch; shards draw from disjoint seed streams.
+
+Per-trial streams (population HPO): ``stream`` folds an HPO trial's stream id
+into the PRNG seed so every trial of a population consumes an *independent*
+data sequence; ``make_population_batch`` stacks K such batches along a leading
+population axis for the vmapped/sharded engines.  ``stream=0`` reproduces the
+legacy shared stream bit-for-bit, so pre-stream checkpoints still resume on
+the same batch sequence.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
@@ -29,10 +36,15 @@ class SyntheticLM:
         # fixed pseudo-random bigram successor function
         return (a * 6364136223846793005 + b * 1442695040888963407 + 1013904223) % self.vocab_size
 
-    def make_batch(self, step: int, shard: int = 0, n_shards: int = 1) -> Dict[str, np.ndarray]:
+    def make_batch(
+        self, step: int, shard: int = 0, n_shards: int = 1, stream: int = 0
+    ) -> Dict[str, np.ndarray]:
         assert self.global_batch % n_shards == 0
         b = self.global_batch // n_shards
-        rng = np.random.default_rng((self.seed, step, shard))
+        # stream 0 keeps the legacy (seed, step, shard) entropy tuple so the
+        # shared-stream batch sequence is unchanged; nonzero streams extend it
+        entropy = (self.seed, step, shard) + ((int(stream),) if stream else ())
+        rng = np.random.default_rng(entropy)
         toks = np.empty((b, self.seq_len + 1), np.int32)
         toks[:, 0] = rng.integers(self.vocab_size, size=b)
         toks[:, 1] = rng.integers(self.vocab_size, size=b)
@@ -46,6 +58,18 @@ class SyntheticLM:
             "targets": toks[:, 1:].astype(np.int32),
             "mask": np.ones((b, self.seq_len), np.float32),
         }
+
+    def make_population_batch(
+        self, step: int, streams: Sequence[int]
+    ) -> Dict[str, np.ndarray]:
+        """K independent per-trial batches stacked on a leading population axis.
+
+        Trial ``i`` of the population consumes the stream ``streams[i]``
+        sequence — leaf shapes become ``(K, batch, ...)`` for the population
+        engines' ``per_trial_batch`` mode.
+        """
+        per = [self.make_batch(step, stream=s) for s in streams]
+        return {k: np.stack([p[k] for p in per]) for k in per[0]}
 
 
 @dataclasses.dataclass

@@ -1,3 +1,21 @@
-from .sharding import build_pspec, build_sharding, constrain, make_rules, map_specs, sharding_context
+from .sharding import (
+    build_pspec,
+    build_sharding,
+    constrain,
+    make_rules,
+    map_specs,
+    population_mesh,
+    population_specs,
+    sharding_context,
+)
 
-__all__ = ["build_pspec", "build_sharding", "constrain", "make_rules", "map_specs", "sharding_context"]
+__all__ = [
+    "build_pspec",
+    "build_sharding",
+    "constrain",
+    "make_rules",
+    "map_specs",
+    "population_mesh",
+    "population_specs",
+    "sharding_context",
+]

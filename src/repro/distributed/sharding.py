@@ -122,6 +122,27 @@ def build_sharding(tree_shapes, tree_specs, rules: Rules, mesh: Mesh):
     return map_specs(tree_shapes, tree_specs, one)
 
 
+# -- population (HPO trial) axis ------------------------------------------------------
+
+
+def population_mesh(devices: Optional[Sequence[Any]] = None, axis: str = "pop") -> Mesh:
+    """1-D mesh over ``devices`` (default: all) whose single axis is the HPO
+    *population* axis — K trials shard over it as K/N per device (see
+    ``repro.train.population.make_sharded_population_step``).  Distinct from
+    the (data, model) axes inside one trial: a population mesh parallelizes
+    *across* trials, a mesh-pool slice parallelizes *within* one."""
+    devs = list(devices) if devices is not None else jax.devices()
+    return Mesh(np.array(devs, dtype=object), axis_names=(axis,))
+
+
+def population_specs(tree: Any, mesh: Mesh, axis: str = "pop") -> Any:
+    """NamedSharding tree placing every leaf's leading (population) dim on
+    ``axis`` — used to put a population state / stacked HParams on the mesh
+    before the first sharded step so jit never has to reshard inputs."""
+    spec = NamedSharding(mesh, PartitionSpec(axis))
+    return jax.tree.map(lambda _: spec, tree)
+
+
 # -- activation constraints inside model code -----------------------------------------
 _CTX: contextvars.ContextVar[Optional[Tuple[Mesh, Rules]]] = contextvars.ContextVar(
     "sharding_ctx", default=None

@@ -27,10 +27,26 @@ results land in the tracking DB (--db) for post-hoc analysis / resume.
   program (``repro.train.population``) with divergence masking — a NaN trial
   freezes and reports the sentinel score, the batch lives on.  Partial
   batches are padded to K (padding trials get a 0-step budget) so the whole
-  experiment still compiles exactly once per (architecture, K).
+  experiment still compiles exactly once per (architecture, K);
+* ``--vectorize K --shard-population`` — the K-trial population axis is
+  additionally split over every local device (``shard_map`` on a 1-D
+  population mesh via ``ShardedPopulationResourceManager``): K/N trials per
+  device, still ONE compiled program, no cross-trial communication.
 
-Vectorized mode is only valid when every proposal varies *traced* knobs: all
-trials must share the architecture and batch geometry.  Per-trial
+Population trials consume **independent per-trial data streams** by default:
+each trial's stream id (its ``job_id``, or an explicit ``stream`` config key)
+is folded into the batch PRNG, in serial and population modes alike — so the
+engines stay score-equivalent trial-for-trial.  ``--shared-stream`` restores
+the legacy behavior where every trial sees the same seeded sequence.
+
+With ``--inflight-stop`` and a rung proposer (asha / hyperband / bohb), the
+proposer's successive-halving rule also runs *inside* each population flight:
+at every rung boundary, losing lanes get their traced step budget truncated
+mid-flight, the flush returns as soon as the survivors finish, and the freed
+lanes immediately take the next batch of proposals.
+
+Vectorized/sharded mode is only valid when every proposal varies *traced*
+knobs: all trials must share the architecture and batch geometry.  Per-trial
 architecture params (d_model, n_layers, ... — e.g. the NAS/EAS space) change
 the compiled program shape and MUST use serial mode.  Per-trial budgets
 (``n_iterations`` from Hyperband/ASHA) are fine: ``hp.total_steps`` doubles
@@ -93,22 +109,38 @@ class PopulationTrial:
     """Compile-once trial executor for one architecture.
 
     ``__call__(config)`` is the scalar protocol (local/subprocess managers);
-    ``run_population(configs)`` is the batch protocol the vectorized manager
-    uses — K trials advance in one vmapped jitted program.  Either way the
-    proposal's hyperparameters are *traced* inputs, so the experiment
-    compiles once per (architecture, population size), not once per trial.
+    ``run_population(configs, mesh=None)`` is the batch protocol the
+    vectorized/sharded managers use — K trials advance in one vmapped jitted
+    program, split over ``mesh``'s population axis when one is given.  Either
+    way the proposal's hyperparameters are *traced* inputs, so the experiment
+    compiles once per (architecture, population size, mesh), not once per
+    trial.
+
+    ``per_trial_streams`` (default on) folds each trial's stream id — the
+    ``stream`` config key, else its ``job_id``, else its lane position — into
+    the batch PRNG, in the scalar and batch protocols alike, so every trial
+    trains on its own independent data sequence and the engines remain
+    score-equivalent trial-for-trial.
+
+    ``early_stop`` may hold an in-flight hook (see
+    ``repro.core.proposer.early_stop``): between population steps, at the
+    hook's rung boundaries, losing lanes get their traced step budget
+    truncated so the flight ends as soon as the surviving lanes finish.
     """
 
     DIVERGED_SCORE = -1e9
 
     def __init__(self, arch: str, steps: int, batch: int, seq: int, seed: int,
-                 population: int = 0):
+                 population: int = 0, per_trial_streams: bool = True,
+                 early_stop=None):
         self.arch = arch
         self.steps = int(steps)
         self.batch = int(batch)
         self.seq = int(seq)
         self.seed = int(seed)
         self.population = int(population)  # >0: pad batches to this fixed K
+        self.per_trial_streams = bool(per_trial_streams)
+        self.early_stop = early_stop
         self._tc = None
         self._data = None
         import threading
@@ -140,6 +172,14 @@ class PopulationTrial:
     def _n_steps(self, config: dict) -> int:
         return int(config.get("n_iterations", 1) * self.steps)
 
+    def _stream_of(self, config: dict, fallback: int) -> int:
+        """Per-trial data stream id: explicit ``stream`` key, else the job id
+        (stable across serial vs population engines for the same proposal),
+        else ``fallback`` (lane position / 0)."""
+        if not self.per_trial_streams:
+            return 0
+        return int(config.get("stream", config.get("job_id", fallback)))
+
     def __call__(self, config: dict) -> float:
         """Serial protocol, sharing the process-wide compiled step."""
         import jax
@@ -148,42 +188,84 @@ class PopulationTrial:
 
         tc, data = self._setup()
         n_steps = self._n_steps(config)
+        stream = self._stream_of(config, 0)
         hp = self._hparams(config, n_steps)
         step_fn = get_compiled_train_step(tc)
         state = init_train_state(jax.random.PRNGKey(self.seed), tc)
         loss = float("inf")
         for s in range(n_steps):
-            state, metrics = step_fn(state, data.make_batch(s), hp)
+            state, metrics = step_fn(state, data.make_batch(s, stream=stream), hp)
             loss = float(metrics["loss"])
             if not np.isfinite(loss):
                 return self.DIVERGED_SCORE
         return -loss
 
-    def run_population(self, configs) -> list:
-        """Batch protocol: K trials in one vmapped device program."""
+    def run_population(self, configs, mesh=None) -> list:
+        """Batch protocol: K trials in one vmapped (optionally sharded) device
+        program.  With ``mesh`` the population axis splits over its devices;
+        K is padded so it divides evenly (padding lanes get a 0-step budget).
+        """
+        import dataclasses
+
         import jax
+        import jax.numpy as jnp
 
         from ..optim.hparams import stack_hparams
         from ..train.population import (
             get_compiled_population_step,
+            get_compiled_sharded_population_step,
             init_population_state,
+            pad_population,
             population_scores,
+            shard_population_state,
         )
 
         tc, data = self._setup()
-        budgets = [self._n_steps(c) for c in configs]
-        hps = [self._hparams(c, n) for c, n in zip(configs, budgets)]
-        k = max(self.population, len(hps))
+        budgets = np.array([float(self._n_steps(c)) for c in configs])
+        streams = [self._stream_of(c, i) for i, c in enumerate(configs)]
+        hps = [self._hparams(c, int(n)) for c, n in zip(configs, budgets)]
+        k = pad_population(max(self.population, len(hps)), mesh)
         # pad partial batches to the fixed population size with 0-budget
         # trials (they freeze immediately) so K — and thus the compiled
         # program — never varies across batches
         while len(hps) < k:
             hps.append(self._hparams({}, 0))
+        streams += [0] * (k - len(streams))
+        budgets = np.concatenate([budgets, np.zeros(k - len(budgets))])
         php = stack_hparams(hps)
-        pstep = get_compiled_population_step(tc, k)
+        if mesh is not None:
+            pstep = get_compiled_sharded_population_step(
+                tc, k, mesh=mesh, per_trial_batch=self.per_trial_streams)
+        else:
+            pstep = get_compiled_population_step(
+                tc, k, per_trial_batch=self.per_trial_streams)
         pstate = init_population_state(jax.random.PRNGKey(self.seed), tc, k)
-        for s in range(max(budgets)):
-            pstate, _ = pstep(pstate, data.make_batch(s), php)
+        if mesh is not None:
+            pstate = shard_population_state(pstate, mesh)
+        hook = self.early_stop
+        s = 0
+        while s < int(budgets.max()):
+            if self.per_trial_streams:
+                batch = data.make_population_batch(s, streams)
+            else:
+                batch = data.make_batch(s)
+            pstate, _ = pstep(pstate, batch, php)
+            s += 1
+            if hook is not None and s in hook.boundaries:
+                new_budgets = hook(
+                    s,
+                    np.asarray(pstate["last_loss"]),
+                    budgets,
+                    np.asarray(pstate["diverged"]),
+                )
+                if (new_budgets != budgets).any():
+                    # the budget is a *traced* leaf: truncating it freezes the
+                    # losing lanes on the next step without a recompile
+                    budgets = new_budgets
+                    php = dataclasses.replace(
+                        php, total_steps=jnp.asarray(budgets, jnp.float32))
+        # telemetry: how long the flight actually ran (in-flight stops shrink it)
+        self.last_flight_steps = s
         scores = np.asarray(population_scores(pstate, self.DIVERGED_SCORE))
         return [float(x) for x in scores[: len(configs)]]
 
@@ -212,6 +294,17 @@ def main(argv=None) -> int:
     p.add_argument("--deadline", type=float, default=0.0, help="per-job seconds (straggler kill)")
     p.add_argument("--vectorize", type=int, default=0, metavar="K",
                    help="train K trials as one vmapped program (0 = serial compile-once)")
+    p.add_argument("--shard-population", action="store_true",
+                   help="with --vectorize: split the K-trial population axis over "
+                        "all local devices (shard_map; K is padded to a multiple "
+                        "of the device count)")
+    p.add_argument("--shared-stream", action="store_true",
+                   help="legacy data mode: every trial consumes the same seeded "
+                        "batch stream (default: independent per-trial streams)")
+    p.add_argument("--inflight-stop", action="store_true",
+                   help="with --vectorize and asha/hyperband/bohb: apply the "
+                        "rung rule mid-flight, truncating losing lanes' budgets "
+                        "so they free up before the batch ends")
     p.add_argument("--legacy-recompile", action="store_true",
                    help="pre-refactor baseline: bake hparams into the closure, recompile per trial")
     args = p.parse_args(argv)
@@ -232,29 +325,50 @@ def main(argv=None) -> int:
     if args.deadline:
         exp_cfg["job_deadline_s"] = args.deadline
 
+    if args.vectorize <= 0 and (args.shard_population or args.inflight_stop):
+        p.error("--shard-population/--inflight-stop require --vectorize K "
+                "(they act on the population engines)")
+    per_trial_streams = not args.shared_stream
     if args.vectorize > 0:
-        exp_cfg["resource"] = "vectorized"
+        exp_cfg["resource"] = "sharded" if args.shard_population else "vectorized"
         exp_cfg["n_parallel"] = args.vectorize
         trial = PopulationTrial(args.arch, args.steps, args.batch, args.seq,
-                                args.seed, population=args.vectorize)
+                                args.seed, population=args.vectorize,
+                                per_trial_streams=per_trial_streams)
     elif args.legacy_recompile:
         trial = make_trial(args.arch, args.steps, args.batch, args.seq, args.seed)
     else:
-        trial = PopulationTrial(args.arch, args.steps, args.batch, args.seq, args.seed)
+        trial = PopulationTrial(args.arch, args.steps, args.batch, args.seq,
+                                args.seed, per_trial_streams=per_trial_streams)
     t0 = time.time()
     exp = Experiment(exp_cfg, trial)
+    if args.inflight_stop:
+        hook_factory = getattr(exp.proposer, "inflight_hook", None)
+        if hook_factory is None:
+            p.error(f"--inflight-stop needs a rung proposer (asha/hyperband/bohb), "
+                    f"got {args.proposer!r}")
+        trial.early_stop = hook_factory(steps_per_unit=args.steps)
     best = exp.run()
     dt = time.time() - t0
-    print(json.dumps({
+    engine = ("legacy-recompile" if args.legacy_recompile else
+              "serial" if args.vectorize == 0 else
+              "sharded" if args.shard_population else "vmapped")
+    out = {
         "proposer": args.proposer,
         "arch": args.arch,
+        "engine": engine,
         "vectorize": args.vectorize,
+    }
+    if getattr(trial, "early_stop", None) is not None:
+        out["inflight_truncated_lanes"] = trial.early_stop.n_truncated
+        out["inflight_reclaimed_diverged_lanes"] = trial.early_stop.n_reclaimed
+    print(json.dumps(dict(out, **{
         "best_score": best["score"],
         "best_config": {k: v for k, v in best["config"].items()
                         if not k.startswith(("hb_", "asha_", "pbt_")) and k != "job_id"},
         "n_jobs": best.get("n_jobs"),
         "seconds": round(dt, 1),
-    }, default=float, indent=1))
+    }), default=float, indent=1))
     return 0
 
 

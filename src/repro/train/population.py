@@ -1,4 +1,4 @@
-"""Vmapped population trial engine: K HPO trials in one device program.
+"""Population trial engines: K HPO trials in one (possibly sharded) program.
 
 Serial HPO evaluates trials as independent Python jobs — each pays its own
 XLA compile and runs one small model at a time, leaving the accelerator
@@ -7,6 +7,16 @@ mostly idle.  Because ``make_hparam_train_step`` takes the tunable knobs as a
 can instead ride a leading ``vmap`` axis: one jitted program advances all K
 trials per step, amortizing both compilation (exactly one, regardless of how
 many trials the experiment runs) and per-step dispatch.
+
+Two engines share the same population-step semantics:
+
+* **vmapped** (``get_compiled_population_step``) — all K trials on one device;
+* **sharded** (``get_compiled_sharded_population_step``) — the population axis
+  is split over an N-device mesh with ``shard_map`` (K % N == 0; callers pad
+  with 0-budget trials), so each device runs a K/N-wide vmapped step and the
+  whole population is still ONE compiled program.  There is no cross-trial
+  communication, so sharding the K axis is embarrassingly parallel — the mesh
+  only changes *where* each lane's compute lands.
 
 Population state layout::
 
@@ -19,25 +29,33 @@ Semantics per jitted ``pop_step(pstate, batch, hp)``:
 * a trial is **active** while ``opt.step < hp.total_steps`` and not diverged —
   ``hp.total_steps`` doubles as the per-trial step budget, so trials with
   different budgets (e.g. Hyperband rungs) coexist in one batch: exhausted
-  trials freeze in place while the rest continue;
+  trials freeze in place while the rest continue.  Because ``total_steps`` is
+  a *traced* leaf, the driver may also shrink it **mid-flight** (in-flight
+  early stopping — see ``repro.core.proposer.early_stop``) without recompiling;
 * a non-finite loss at an active step sets the ``diverged`` latch and the
   update is *not* applied — the sick trial freezes, the batch lives on
   (vmapped divergence masking);
 * ``last_loss`` records the loss of the most recent applied update, i.e. each
   trial's own final loss once it halts.
 
-The shared ``batch`` is broadcast to every trial (``in_axes=(0, None, 0)``),
-matching the serial driver where every trial consumes the same seeded stream.
+Batch layout: with ``per_trial_batch=False`` the ``batch`` is broadcast to
+every trial (``in_axes=(0, None, 0)``) — the legacy shared-stream mode.  With
+``per_trial_batch=True`` every batch leaf carries a leading K axis and trial
+``i`` consumes its own independently seeded stream
+(``SyntheticLM.make_population_batch``), matching the serial driver when it
+folds the same per-trial stream id into its PRNG.
 """
 from __future__ import annotations
 
 import threading
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec
 
 from ..configs.base import TrainConfig
+from ..distributed.sharding import population_mesh, population_specs
 from ..optim.hparams import HParams
 from .train_step import init_train_state, make_hparam_train_step, static_step_key
 
@@ -75,14 +93,16 @@ def _wrap(inner, k: int) -> PopState:
     }
 
 
-def make_population_train_step(tc: TrainConfig) -> Callable:
+def make_population_train_step(tc: TrainConfig, per_trial_batch: bool = False) -> Callable:
     """``(pstate, batch, hp) -> (pstate, metrics)`` over a leading K axis.
 
     ``hp`` is a stacked ``HParams`` (every leaf shape ``(K,)``); metrics come
-    back per-trial (leading K) plus an ``active`` mask.
+    back per-trial (leading K) plus an ``active`` mask.  ``per_trial_batch``
+    selects whether ``batch`` leaves carry a leading K axis (independent
+    per-trial data streams) or are broadcast to every trial.
     """
     step = make_hparam_train_step(tc)
-    vstep = jax.vmap(step, in_axes=(0, None, 0))
+    vstep = jax.vmap(step, in_axes=(0, 0 if per_trial_batch else None, 0))
 
     def pop_step(pstate: PopState, batch, hp: HParams):
         inner = pstate["inner"]
@@ -101,19 +121,99 @@ def make_population_train_step(tc: TrainConfig) -> Callable:
     return pop_step
 
 
-# -- compile-once cache (one entry per (static config, population size)) --------
+def make_sharded_population_step(
+    tc: TrainConfig,
+    mesh: Mesh,
+    per_trial_batch: bool = False,
+    axis: str = "pop",
+) -> Callable:
+    """Population step with the K axis split over ``mesh``'s ``axis``.
+
+    Wraps the vmapped step in ``shard_map``: each of the N devices advances a
+    contiguous K/N block of trials, every argument/output with a leading K
+    axis is partitioned on ``axis``, and the (shared-stream) batch replicates.
+    K must be divisible by N — ``pad_population`` gives the padded size and
+    callers top up with 0-budget trials that freeze immediately.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    step = make_population_train_step(tc, per_trial_batch=per_trial_batch)
+    pop = PartitionSpec(axis)
+    batch_spec = pop if per_trial_batch else PartitionSpec()
+    return shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(pop, batch_spec, pop),
+        out_specs=(pop, pop),
+    )
+
+
+def pad_population(k: int, mesh: Optional[Mesh]) -> int:
+    """Smallest population size >= k that divides evenly over ``mesh``."""
+    n = 1 if mesh is None else mesh.size
+    return ((max(k, 1) + n - 1) // n) * n
+
+
+def shard_population_state(pstate: PopState, mesh: Mesh, axis: str = "pop") -> PopState:
+    """Place a freshly initialized population state on the mesh (leading K dim
+    on ``axis``) so the first sharded step does not pay an input reshard."""
+    return jax.device_put(pstate, population_specs(pstate, mesh, axis))
+
+
+# -- compile-once caches --------------------------------------------------------
+#
+# vmapped: one entry per (static config, population size, batch mode);
+# sharded: additionally keyed on the mesh's device set and axis name.
 
 _POP_CACHE: Dict[Tuple, Any] = {}
 _POP_CACHE_LOCK = threading.Lock()
 
 
-def get_compiled_population_step(tc: TrainConfig, population: int):
+def get_compiled_population_step(
+    tc: TrainConfig, population: int, per_trial_batch: bool = False
+):
     """Memoized ``jax.jit`` of the population step with donated state."""
-    key = (static_step_key(tc), int(population))
+    key = (static_step_key(tc), int(population), bool(per_trial_batch))
     with _POP_CACHE_LOCK:
         fn = _POP_CACHE.get(key)
         if fn is None:
-            fn = jax.jit(make_population_train_step(tc), donate_argnums=0)
+            fn = jax.jit(
+                make_population_train_step(tc, per_trial_batch=per_trial_batch),
+                donate_argnums=0,
+            )
+            _POP_CACHE[key] = fn
+    return fn
+
+
+def get_compiled_sharded_population_step(
+    tc: TrainConfig,
+    population: int,
+    mesh: Optional[Mesh] = None,
+    per_trial_batch: bool = False,
+    axis: str = "pop",
+):
+    """Memoized jitted ``shard_map`` population step over ``mesh`` (default: a
+    1-D mesh over every local device).  Raises if K does not divide over the
+    mesh — pad with ``pad_population`` first."""
+    mesh = mesh if mesh is not None else population_mesh(axis=axis)
+    if population % mesh.size:
+        raise ValueError(
+            f"population {population} does not divide over {mesh.size} devices; "
+            f"pad to {pad_population(population, mesh)} with 0-budget trials"
+        )
+    key = (
+        static_step_key(tc), int(population), bool(per_trial_batch),
+        tuple(d.id for d in mesh.devices.flat), axis,
+    )
+    with _POP_CACHE_LOCK:
+        fn = _POP_CACHE.get(key)
+        if fn is None:
+            fn = jax.jit(
+                make_sharded_population_step(
+                    tc, mesh, per_trial_batch=per_trial_batch, axis=axis
+                ),
+                donate_argnums=0,
+            )
             _POP_CACHE[key] = fn
     return fn
 

@@ -1,9 +1,15 @@
 import os
 import sys
 
-# tests must see the real 1-CPU container (the dry-run's 512-device flag is
-# process-local to launch/dryrun.py); keep kernels on the ref path by default.
+# tests run on a virtual 8-device CPU mesh so the sharded population engine
+# (shard_map over the population axis) is exercised for real; this must be set
+# before jax initializes.  The dry-run's 512-device flag stays process-local
+# to launch/dryrun.py.  Keep kernels on the ref path by default.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 

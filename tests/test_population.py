@@ -158,7 +158,8 @@ def test_vectorized_experiment_batches_and_compiles_once():
     assert sum(rm.batch_sizes) == 7
     assert max(rm.batch_sizes) == 3, "full populations must batch at K"
     tc, _ = trial._setup()
-    assert pop.get_compiled_population_step(tc, 3)._cache_size() == 1, (
+    # PopulationTrial defaults to per-trial data streams -> per_trial_batch mode
+    assert pop.get_compiled_population_step(tc, 3, per_trial_batch=True)._cache_size() == 1, (
         "partial batches are padded to K: one compile for the whole experiment"
     )
 

@@ -1,0 +1,244 @@
+"""Mesh-sharded population engine, per-trial data streams, in-flight stops.
+
+Covers the distributed half of the population-engine story: the K-trial
+population axis splits over a device mesh (``shard_map``) with scores equal
+to the single-device vmapped engine; every trial consumes an independent
+seeded data stream that matches the serial driver trial-for-trial; and the
+ASHA/Hyperband rung rule truncates losing lanes' budgets mid-flight so a
+flight ends as soon as the survivors finish.
+
+conftest.py forces an 8-virtual-device CPU mesh (``XLA_FLAGS``); tests that
+need real sharding skip on a single-device backend.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.core.experiment import Experiment
+from repro.core.proposer import make_proposer
+from repro.core.proposer.early_stop import InFlightSuccessiveHalving
+from repro.core.resource.sharded import ShardedPopulationResourceManager
+from repro.data.pipeline import SyntheticLM
+from repro.distributed.sharding import population_mesh
+from repro.launch.hpo import PopulationTrial
+from repro.optim.hparams import hparams_from_dict, stack_hparams
+from repro.train import population as pop
+
+SEQ, BATCH, STEPS = 16, 2, 4
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2, reason="needs a multi-device (virtual CPU) mesh"
+)
+
+
+@pytest.fixture(scope="module")
+def tc():
+    cfg = get_smoke_config("starcoder2-3b")
+    return TrainConfig(model=cfg, parallel=ParallelConfig(remat="none"),
+                       total_steps=STEPS)
+
+
+def _cfgs(n):
+    rng = np.random.default_rng(1)
+    return [
+        {"learning_rate": float(lr), "weight_decay": float(rng.uniform(0, 0.2)),
+         "stream": i}
+        for i, lr in enumerate(np.geomspace(1e-4, 1e-2, n))
+    ]
+
+
+# -- sharded engine ---------------------------------------------------------------
+
+@multi_device
+def test_sharded_matches_vmapped(tc):
+    """K trials over N devices score identically to K trials on one device."""
+    n = jax.device_count()
+    trial = PopulationTrial("starcoder2-3b", steps=STEPS, batch=BATCH, seq=SEQ,
+                            seed=0, population=n)
+    cfgs = _cfgs(n)
+    vmapped = trial.run_population(cfgs)
+    sharded = trial.run_population(cfgs, mesh=population_mesh())
+    np.testing.assert_allclose(sharded, vmapped, rtol=1e-5, atol=1e-6)
+    assert np.isfinite(vmapped).all() and (np.asarray(vmapped) > -1e8).all()
+
+
+@multi_device
+def test_sharded_partial_batch_pads_to_mesh(tc):
+    """A batch smaller than the mesh pads with 0-budget lanes, scores intact."""
+    n = jax.device_count()
+    trial = PopulationTrial("starcoder2-3b", steps=STEPS, batch=BATCH, seq=SEQ,
+                            seed=0, population=n)
+    cfgs = _cfgs(n)
+    full = trial.run_population(cfgs, mesh=population_mesh())
+    part = trial.run_population(cfgs[: n - 1], mesh=population_mesh())
+    np.testing.assert_allclose(part, full[: n - 1], rtol=1e-5, atol=1e-6)
+
+
+@multi_device
+def test_sharded_step_rejects_indivisible_population(tc):
+    mesh = population_mesh()
+    k = mesh.size + 1
+    with pytest.raises(ValueError, match="does not divide"):
+        pop.get_compiled_sharded_population_step(tc, k, mesh=mesh)
+    assert pop.pad_population(k, mesh) == 2 * mesh.size
+    assert pop.pad_population(mesh.size, mesh) == mesh.size
+
+
+# -- per-trial data streams -------------------------------------------------------
+
+def test_stream_zero_is_legacy_shared_stream():
+    d = SyntheticLM(64, SEQ, BATCH, seed=3)
+    np.testing.assert_array_equal(
+        d.make_batch(5)["tokens"], d.make_batch(5, stream=0)["tokens"]
+    )
+
+
+def test_streams_are_independent_and_deterministic():
+    d = SyntheticLM(64, SEQ, BATCH, seed=3)
+    a, b = d.make_batch(5, stream=1), d.make_batch(5, stream=2)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(
+        a["tokens"], d.make_batch(5, stream=1)["tokens"]
+    )
+    pb = d.make_population_batch(5, streams=[0, 1, 2])
+    assert pb["tokens"].shape == (3, BATCH, SEQ)
+    np.testing.assert_array_equal(pb["tokens"][1], a["tokens"])
+
+
+def test_per_trial_streams_match_serial_trial_for_trial(tc):
+    """Serial driver and vmapped population consume identical per-trial data."""
+    cfgs = _cfgs(3)
+    trial = PopulationTrial("starcoder2-3b", steps=STEPS, batch=BATCH, seq=SEQ,
+                            seed=0, population=3)
+    serial = [trial(c) for c in cfgs]
+    vec = trial.run_population(cfgs)
+    np.testing.assert_allclose(vec, serial, rtol=1e-5, atol=1e-6)
+
+
+def test_same_hparams_distinct_streams_distinct_scores(tc):
+    cfgs = [{"learning_rate": 1e-3, "stream": 0}, {"learning_rate": 1e-3, "stream": 9}]
+    trial = PopulationTrial("starcoder2-3b", steps=STEPS, batch=BATCH, seq=SEQ,
+                            seed=0, population=2)
+    s = trial.run_population(cfgs)
+    assert s[0] != s[1], "independent streams must yield distinct trajectories"
+    shared = PopulationTrial("starcoder2-3b", steps=STEPS, batch=BATCH, seq=SEQ,
+                             seed=0, population=2, per_trial_streams=False)
+    s = shared.run_population(cfgs)
+    assert s[0] == s[1], "--shared-stream mode: identical hparams, identical data"
+
+
+# -- in-flight early stopping -----------------------------------------------------
+
+def test_inflight_hook_truncates_losers_at_boundary():
+    hook = InFlightSuccessiveHalving(eta=2.0, min_iter=2, max_iter=8)
+    assert hook.boundaries == [2, 4]
+    budgets = np.array([8.0, 8.0, 8.0, 8.0])
+    losses = np.array([1.0, 3.0, 2.0, 4.0])
+    out = hook(2, losses, budgets, np.zeros(4, bool))
+    # keep ceil(4/2)=2 best (lanes 0, 2); truncate lanes 1, 3 to step 2
+    assert out.tolist() == [8.0, 2.0, 8.0, 2.0]
+    assert hook.n_truncated == 2
+    # non-boundary steps and already-stopped lanes are left alone
+    assert hook(3, losses, out, np.zeros(4, bool)).tolist() == out.tolist()
+
+
+def test_inflight_hook_ignores_padding_and_diverged():
+    hook = InFlightSuccessiveHalving(eta=2.0, min_iter=2, max_iter=8)
+    budgets = np.array([8.0, 8.0, 0.0, 8.0])  # lane 2 = padding
+    losses = np.array([1.0, 2.0, np.inf, 3.0])
+    diverged = np.array([False, False, False, True])
+    out = hook(2, losses, budgets, diverged)
+    # lane 2 (padding) untouched; lane 3's dead budget reclaimed (diverged);
+    # of the two ranked lanes, only the best keeps its budget at eta=2
+    assert out.tolist() == [8.0, 2.0, 0.0, 2.0]
+    assert hook.n_truncated == 1 and hook.n_reclaimed == 1
+
+
+def test_inflight_stop_frees_lanes_early(tc):
+    """A losing long-budget lane is cut at the rung, ending the flight early."""
+    k = 4
+    trial = PopulationTrial("starcoder2-3b", steps=1, batch=BATCH, seq=SEQ,
+                            seed=0, population=k,
+                            early_stop=InFlightSuccessiveHalving(
+                                eta=2.0, min_iter=2, max_iter=8))
+    # three short rung-0 lanes with sane lrs + one 8-step lane with a terrible
+    # lr: at the step-2 boundary it ranks below the completers and is cut
+    cfgs = [dict(c, n_iterations=2) for c in _cfgs(3)]
+    cfgs.append({"learning_rate": 0.5, "stream": 3, "n_iterations": 8})
+    scores = trial.run_population(cfgs)
+    # the bad lane is cut by the rung rule, or reclaimed if it diverged first
+    assert trial.early_stop.n_truncated + trial.early_stop.n_reclaimed >= 1
+    assert trial.last_flight_steps < 8, "flight must end before the full budget"
+    assert all(s > -1e8 for s in scores[:3]), "healthy lanes still report scores"
+
+
+def test_asha_inflight_experiment_end_to_end():
+    """Vectorized ASHA with mid-flight stops: all jobs accounted, lanes reused."""
+    prop_space = [
+        {"name": "learning_rate", "type": "float", "range": [1e-4, 1e-2], "scale": "log"},
+    ]
+    trial = PopulationTrial("starcoder2-3b", steps=1, batch=BATCH, seq=SEQ,
+                            seed=0, population=4)
+    exp = Experiment(
+        {"proposer": "asha", "parameter_config": prop_space, "n_samples": 6,
+         "n_parallel": 4, "target": "max", "random_seed": 0, "max_iter": 8,
+         "min_iter": 2, "eta": 2.0, "resource": "vectorized"},
+        trial,
+    )
+    trial.early_stop = exp.proposer.inflight_hook(steps_per_unit=1)
+    best = exp.run()
+    assert best is not None and best["score"] > -1e8
+    assert exp.proposer.finished()
+    assert exp.rm.n_batches >= 2, "freed lanes must take follow-up batches"
+
+
+# -- sharded resource manager -----------------------------------------------------
+
+@multi_device
+def test_sharded_rm_mesh_aware_slots_and_flush():
+    n_dev = jax.device_count()
+    rm = ShardedPopulationResourceManager(n_parallel=n_dev + 1)
+    assert rm.n_slots % n_dev == 0 and rm.n_slots >= n_dev + 1
+    assert rm.mesh.size == n_dev
+    # resource ids name the device slice and the lane on it
+    res = rm.get_available()
+    assert "slice[" in str(res) and "/lane" in str(res)
+
+    seen = {}
+
+    class Target:
+        def run_population(self, configs, mesh=None):
+            seen["mesh"] = mesh
+            return [1.0] * len(configs)
+
+    from repro.core.job import Job
+
+    done = []
+    jobs = [Job(i, {"x": i}, None, done.append) for i in range(2)]
+    for j in jobs:
+        j.resource_id = rm.get_available()
+        rm.run(j, Target())
+    rm.release(rm.get_available())  # partial-batch flush signal
+    for j in jobs:
+        j.wait(5.0)
+    assert seen["mesh"] is rm.mesh
+    assert all(j.result.score == 1.0 for j in jobs)
+
+
+@multi_device
+def test_sharded_experiment_end_to_end():
+    trial = PopulationTrial("starcoder2-3b", steps=1, batch=BATCH, seq=SEQ,
+                            seed=0, population=jax.device_count())
+    exp = Experiment(
+        {"proposer": "random", "parameter_config": [
+            {"name": "learning_rate", "type": "float", "range": [1e-4, 1e-2],
+             "scale": "log"}],
+         "n_samples": 5, "n_parallel": jax.device_count(), "target": "max",
+         "random_seed": 0, "resource": "sharded"},
+        trial,
+    )
+    best = exp.run()
+    assert best is not None and best["score"] > -1e8

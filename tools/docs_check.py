@@ -1,0 +1,150 @@
+"""Validate that the user-facing docs actually match the code.
+
+Checks, over README.md and docs/*.md:
+
+* every fenced ``python`` block compiles, and every ``import repro...`` /
+  ``from repro... import ...`` statement in one resolves against the real
+  package (module importable, attributes present);
+* every ``--flag`` mentioned (inline code or fenced shell blocks) exists in
+  ``repro.launch.hpo``'s argparse --help;
+* every ``make <target>`` reference names a real Makefile target;
+* every repo-relative path in backticks or local markdown links exists
+  (paths are also tried relative to ``src/repro`` so docs can say
+  ``core/experiment.py``).
+
+Run via ``make docs-check``.  Exits non-zero with a list of findings.
+"""
+from __future__ import annotations
+
+import glob
+import importlib
+import io
+import os
+import re
+import sys
+from contextlib import redirect_stdout
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC_FILES = ["README.md"] + sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+
+FENCE_RE = re.compile(r"```(\w*)\n(.*?)```", re.S)
+INLINE_CODE_RE = re.compile(r"`([^`\n]+)`")
+LINK_RE = re.compile(r"\]\(([^)\s]+)\)")
+FLAG_RE = re.compile(r"(--[a-z][a-z0-9-]*)\b")
+MAKE_RE = re.compile(r"\bmake\s+([a-z][a-z0-9_-]*)")
+PATH_PREFIXES = ("src/", "docs/", "benchmarks/", "tests/", "examples/", "tools/")
+
+
+def _read(path: str) -> str:
+    with open(path, encoding="utf-8") as f:
+        return f.read()
+
+
+def _hpo_help() -> str:
+    from repro.launch import hpo
+
+    buf = io.StringIO()
+    try:
+        with redirect_stdout(buf):
+            hpo.main(["--help"])
+    except SystemExit:
+        pass
+    return buf.getvalue()
+
+
+def _check_python_block(code: str, where: str, errors: list) -> None:
+    try:
+        compile(code, where, "exec")
+    except SyntaxError as e:
+        errors.append(f"{where}: python block does not compile: {e}")
+        return
+    for line in code.splitlines():
+        line = line.strip()
+        m = re.match(r"from\s+(repro[\w.]*)\s+import\s+(.+)", line)
+        if m:
+            mod, names = m.group(1), m.group(2)
+            try:
+                module = importlib.import_module(mod)
+            except Exception as e:
+                errors.append(f"{where}: cannot import {mod}: {e}")
+                continue
+            for name in re.split(r"\s*,\s*", names.split("#")[0].strip()):
+                name = name.split(" as ")[0].strip()
+                if name and name != "*" and not hasattr(module, name):
+                    errors.append(f"{where}: {mod} has no attribute {name!r}")
+        elif re.match(r"import\s+repro[\w.]*", line):
+            mod = line.split()[1]
+            try:
+                importlib.import_module(mod)
+            except Exception as e:
+                errors.append(f"{where}: cannot import {mod}: {e}")
+
+
+def _check_paths(doc: str, text: str, errors: list) -> None:
+    doc_dir = os.path.join(ROOT, os.path.dirname(doc))
+    candidates = set()
+    for m in INLINE_CODE_RE.finditer(text):
+        tok = m.group(1).strip().rstrip(":,")
+        if "/" in tok and re.fullmatch(r"[A-Za-z0-9_./-]+", tok):
+            candidates.add(tok)
+    for m in LINK_RE.finditer(text):
+        tok = m.group(1).split("#")[0]
+        if tok and not tok.startswith(("http://", "https://", "mailto:")):
+            candidates.add(tok)
+    for tok in sorted(candidates):
+        if tok.startswith(PATH_PREFIXES) or tok in ("Makefile",) or tok.endswith(".md"):
+            # markdown links resolve relative to the doc itself first
+            roots = [doc_dir, ROOT]
+        elif tok.endswith((".py", "/")):
+            roots = [ROOT, os.path.join(ROOT, "src", "repro")]
+        else:
+            continue
+        if not any(os.path.exists(os.path.join(r, tok)) for r in roots):
+            errors.append(f"{doc}: referenced path {tok!r} does not exist")
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    errors: list = []
+    makefile = _read(os.path.join(ROOT, "Makefile"))
+    make_targets = set(re.findall(r"^([a-zA-Z][\w-]*)\s*:", makefile, re.M))
+    help_text = _hpo_help()
+
+    for path in DOC_FILES:
+        doc = os.path.relpath(path, ROOT)
+        text = _read(path)
+
+        flags, make_refs = set(), set()
+        for lang, body in FENCE_RE.findall(text):
+            where = f"{doc} ({lang or 'text'} block)"
+            if lang == "python":
+                _check_python_block(body, where, errors)
+            if lang in ("bash", "sh", "shell", "console", ""):
+                for line in body.splitlines():
+                    make_refs.update(MAKE_RE.findall(line))
+                    if "repro.launch.hpo" in line or line.strip().startswith("--"):
+                        flags.update(FLAG_RE.findall(line))
+        for m in INLINE_CODE_RE.finditer(text):
+            tok = m.group(1).strip()
+            flags.update(FLAG_RE.findall(tok))
+            make_refs.update(MAKE_RE.findall(tok))
+
+        for flag in sorted(flags):
+            if flag not in help_text:
+                errors.append(f"{doc}: flag {flag} not in `repro.launch.hpo --help`")
+        for target in sorted(make_refs):
+            if target not in make_targets:
+                errors.append(f"{doc}: `make {target}` is not a Makefile target")
+        _check_paths(doc, text, errors)
+
+    if errors:
+        print(f"docs-check: {len(errors)} problem(s)")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"docs-check: OK ({len(DOC_FILES)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
