@@ -1,7 +1,11 @@
 # One-command entry points for the tier-1 suite and smoke benchmarks.
 #
 #   make test    — full tier-1 pytest run (hypothesis-based files skip
-#                  cleanly when hypothesis isn't installed)
+#                  cleanly when hypothesis isn't installed).  Every test runs
+#                  under a timeout guard (pytest-timeout when installed, a
+#                  faulthandler watchdog otherwise — see tests/conftest.py)
+#                  so a deadlocked streaming-flush thread fails instead of
+#                  hanging CI; tune with PYTEST_TIMEOUT=<seconds>
 #   make bench   — smoke benchmarks: HPO trial-engine throughput (emits
 #                  BENCH_hpo_throughput.json) + extensibility LOC count
 #   make bench-all — every registered benchmark (slow: full roofline sweep)

@@ -64,6 +64,7 @@ class Experiment:
             not in (
                 "proposer", "parameter_config", "target", "resource", "script",
                 "n_parallel", "db_path", "workdir", "job_deadline_s", "max_retries",
+                "lane_refill",
             )
         }
         self.proposer = make_proposer(
@@ -78,7 +79,17 @@ class Experiment:
             rm_kwargs: Dict[str, Any] = {"n_parallel": int(self.exp_config.get("n_parallel", 1))}
             if self.exp_config.get("workdir"):
                 rm_kwargs["workdir"] = self.exp_config["workdir"]
+            if self.exp_config.get("lane_refill"):
+                rm_kwargs["lane_refill"] = True
             self.rm = rm_cls(**rm_kwargs)
+            # unknown kwargs are silently swallowed by ResourceManager.__init__;
+            # a streaming request that cannot stream must fail loudly instead
+            if rm_kwargs.get("lane_refill") and not getattr(self.rm, "lane_refill", False):
+                raise ValueError(
+                    f"lane_refill requested but resource "
+                    f"{self.exp_config.get('resource', 'local')!r} does not "
+                    f"support streaming flights (use 'vectorized' or 'sharded')"
+                )
 
         self.deadline_s = self.exp_config.get("job_deadline_s")
         self.max_retries = int(self.exp_config.get("max_retries", 1))
@@ -93,6 +104,18 @@ class Experiment:
         # identical params must not share a retry budget.
         self._requeue: List[tuple] = []
         self.job_log: List[Job] = []
+        # incremental result hooks: fired once per *settled* job (scored, or
+        # retries exhausted) as results drain — on the streaming engines this
+        # happens while the rest of the population batch is still running
+        self._result_callbacks: List[Callable[[Job], None]] = []
+
+    def add_result_callback(self, fn: Callable[[Job], None]) -> None:
+        """Register a hook fired for every settled job (finished with a score,
+        or failed for good after its retry budget).  Fires on the experiment
+        loop thread as soon as the result drains — with a streaming resource
+        manager that is mid-batch, not at flight end.  Keep it fast: it runs
+        under the experiment lock."""
+        self._result_callbacks.append(fn)
 
     # -- callback (fires on worker threads; keep it tiny) -----------------------
     def _on_job_done(self, job: Job) -> None:
@@ -129,6 +152,7 @@ class Experiment:
                 self.rm.release(job.resource_id)
             if ok:
                 self.proposer.update(res.score, job)
+                self._fire_result_callbacks(job)
             else:
                 # per-job retry counter rides on the Job itself: distinct
                 # proposals with identical params keep separate retry budgets
@@ -138,6 +162,14 @@ class Experiment:
                     self._requeue.append((cfg, n + 1))
                 else:
                     self.proposer.update(None, job)
+                    self._fire_result_callbacks(job)
+
+    def _fire_result_callbacks(self, job: Job) -> None:
+        for fn in self._result_callbacks:
+            try:
+                fn(job)
+            except Exception:  # observers must never break the loop
+                pass
 
     def _check_stragglers_locked(self) -> None:
         for job in list(self._running.values()):

@@ -63,11 +63,13 @@ class Job:
         self.status = JobStatus.RUNNING
         self.start_time = time.time()
 
-    def finish(self, result: JobResult, status: JobStatus = JobStatus.FINISHED) -> None:
-        """Complete the job and fire the callback exactly once (thread-safe)."""
+    def finish(self, result: JobResult, status: JobStatus = JobStatus.FINISHED) -> bool:
+        """Complete the job and fire the callback exactly once (thread-safe).
+        Returns True when this call delivered the result, False when the job
+        was already settled (e.g. killed by a deadline)."""
         with self._lock:
             if self._cb_fired:
-                return
+                return False
             self._cb_fired = True
             self.end_time = time.time()
             if self.start_time is not None:
@@ -78,6 +80,7 @@ class Job:
             self._callback(self)
         finally:
             self._done.set()
+        return True
 
     def fail(self, error: str, status: JobStatus = JobStatus.FAILED) -> None:
         self.finish(JobResult(score=None, error=error), status=status)

@@ -64,6 +64,9 @@ class InFlightSuccessiveHalving:
         # vs dead budget reclaimed from diverged lanes (a different mechanism)
         self.n_truncated = 0
         self.n_reclaimed = 0
+        # per-rung loss history for the staggered (lane-refill) rule: every
+        # loss ever observed at that boundary, across all lanes and flights
+        self._rung_history: dict = {}
 
     def __call__(
         self,
@@ -98,4 +101,48 @@ class InFlightSuccessiveHalving:
         cut = [i for i in ranked[n_keep:] if budgets[i] > step]
         budgets[cut] = step
         self.n_truncated += len(cut)
+        return budgets
+
+    def observe(
+        self,
+        local_steps: Sequence[float],
+        losses: Sequence[float],
+        budgets: Sequence[float],
+        diverged: Sequence[bool],
+    ) -> np.ndarray:
+        """Staggered-lane variant for the continuous refill engine.
+
+        With lane refill, lanes of one flight sit at *different* local steps
+        (a refilled lane restarted its own step 0 mid-flight), so there is no
+        synchronized cohort to rank at a boundary.  This is exactly the
+        asynchronous-SHA setting: a lane reaching rung ``b`` is compared
+        against the **history** of losses ever recorded at ``b`` — it keeps
+        its budget only while inside the top ``1/eta`` of that history, else
+        it is truncated to ``b``.  Early observations are optimistic (a lane
+        with few predecessors always survives), matching ASHA's eager
+        promotions; the history spans refills and flights, mirroring how ASHA
+        rungs accumulate across the whole experiment.
+
+        ``local_steps``/``budgets`` are lane-local; idle lanes carry budget 0
+        and are skipped.  Diverged lanes are skipped too — the refill engine
+        retires them directly (their budget is dead either way).
+        """
+        budgets = np.asarray(budgets, np.float64).copy()
+        local_steps = np.asarray(local_steps, np.float64)
+        losses = np.asarray(losses, np.float64)
+        diverged = np.asarray(diverged, bool)
+        for lane in np.flatnonzero((budgets > 0) & ~diverged):
+            st = int(local_steps[lane])
+            if st not in self.boundaries or st != local_steps[lane]:
+                continue
+            if not np.isfinite(losses[lane]):
+                continue
+            hist = self._rung_history.setdefault(st, [])
+            loss = float(losses[lane])
+            hist.append(loss)
+            n_keep = int(math.ceil(len(hist) / self.eta))
+            rank = sum(1 for x in hist if x < loss)  # ties keep the lane
+            if rank >= n_keep and budgets[lane] > st:
+                budgets[lane] = float(st)
+                self.n_truncated += 1
         return budgets

@@ -24,7 +24,7 @@ from typing import Any, Callable, List, Optional, Sequence
 
 from . import register
 from .mesh_pool import tile_pod
-from .vectorized import VectorizedResourceManager
+from .vectorized import VectorizedResourceManager, accepts_kwarg
 
 
 @register("sharded")
@@ -56,19 +56,14 @@ class ShardedPopulationResourceManager(VectorizedResourceManager):
             for sid in self.slices:
                 self.add_resource(f"{sid}/lane{lane}")
 
-    def _run_batch(self, runner: Callable, configs: List[dict]) -> List[Any]:
-        import inspect
-
+    def _run_batch(self, runner: Callable, configs: List[dict],
+                   scheduler=None) -> List[Any]:
         # discriminate on the signature, not on a raised TypeError: an
         # in-flight TypeError must propagate, never silently re-run the batch
         # on the single-device engine
-        try:
-            params = inspect.signature(runner).parameters
-            takes_mesh = "mesh" in params or any(
-                p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
-            )
-        except (TypeError, ValueError):  # builtins/callables without signatures
-            takes_mesh = True
-        if takes_mesh:
-            return runner(configs, mesh=self.mesh)
-        return runner(configs)
+        kwargs = {}
+        if accepts_kwarg(runner, "mesh"):
+            kwargs["mesh"] = self.mesh
+        if scheduler is not None:  # streaming (lane-refill) flight
+            kwargs["scheduler"] = scheduler
+        return runner(configs, **kwargs)

@@ -18,46 +18,204 @@ one per config).  Otherwise the manager degrades gracefully to looping the
 scalar ``target(config)`` over the batch on one worker thread — same
 scheduling semantics, no vectorization.
 
+Streaming protocol (``lane_refill=True``): when the target's
+``run_population`` also accepts a ``scheduler`` keyword, the flush hands it a
+``LaneScheduler`` instead of a positional batch.  The engine then *leases*
+jobs into population lanes one at a time and *completes* them individually as
+lanes retire (budget exhausted, rung-truncated, diverged) — each completion
+fires the job callback immediately, Algorithm 1 releases the slot, the
+proposer refills it, and ``run()`` offers the new job straight into the live
+flight.  Freed lanes are re-initialized **inside the compiled program**
+(``repro.train.population.make_reset_lanes``), so the whole experiment can be
+one continuous flight with no inter-batch bubble.
+
 Flush policy:
 
 * the buffer flushes when all ``n_slots`` are bound (a full population), and
 * ``release()`` of an *unbound* slot while jobs are buffered flushes a partial
   batch — that release is Algorithm 1 telling us the proposer has nothing
   more right now (budget exhausted, rung/generation barrier), so waiting for
-  a full population would deadlock the loop.
+  a full population would deadlock the loop.  While a streaming flight is
+  live, buffered jobs drain *into* it instead of opening a second flight.
 
-Per-job failure stays per-job: an exception inside ``run_population`` fails
-the whole batch (every job retries under the experiment's retry budget), but
-a diverged trial only reports its own sentinel score.
+Failure blast radius stays as small as the protocol allows: on the scalar
+fallback path every job is called (and caught) individually; on the batch
+path a malformed *result* fails only its own job, and only an exception from
+inside the single device program fails the whole batch.  A streaming flight
+that dies fails its leased jobs; jobs still queued go back to the buffer's
+retry path instead of being silently stranded.
 """
 from __future__ import annotations
 
+import inspect
 import threading
-from typing import Any, Callable, List
+import warnings
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 from . import ResourceManager, register
 from ..job import Job, JobResult, JobStatus
 
 
+def accepts_kwarg(fn: Callable, name: str) -> bool:
+    """True when ``fn`` can be called with keyword ``name`` (explicitly or via
+    ``**kwargs``).  Signature-less builtins count as True — an in-flight
+    ``TypeError`` must propagate rather than silently change the protocol."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return True
+    return name in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+    )
+
+
+class LaneScheduler:
+    """Host-side lane <-> job ledger for one streaming (lane-refill) flight.
+
+    The manager *offers* bound jobs; the population engine *leases* them into
+    freed lanes (``lease() -> (handle, config)``) and *completes* them
+    individually as lanes retire, so results stream out while the flight is
+    still running.  ``close()`` ends the flight: it stops further offers and
+    splits the ledger into jobs never leased (the manager re-buffers or fails
+    them) and leased-but-incomplete orphans (the engine died mid-lane).
+
+    Thread-safety: ``offer`` is called from Algorithm 1's loop thread,
+    ``lease``/``complete``/``fail`` from the flight worker thread, ``close``
+    from the flight worker after the engine returns.  All state is guarded by
+    one lock; job completion callbacks fire outside it.
+    """
+
+    def __init__(self, on_stream: Optional[Callable[[], None]] = None) -> None:
+        self._lock = threading.Lock()
+        self._queue: Deque[Job] = deque()
+        self._live: Dict[int, Job] = {}
+        self._next_handle = 0
+        self._on_stream = on_stream  # fired per streamed result, mid-flight
+        self.closed = False
+        self.n_leased = 0
+        self.n_streamed = 0
+
+    # -- manager side -----------------------------------------------------------
+    def offer(self, job: Job) -> bool:
+        """Queue a job for the flight; False once the flight is shutting down
+        (the caller keeps the job and flushes it into a fresh flight)."""
+        with self._lock:
+            if self.closed:
+                return False
+            self._queue.append(job)
+            return True
+
+    def close(self) -> Tuple[List[Job], List[Job]]:
+        """Stop accepting offers; return ``(never_leased, leased_incomplete)``."""
+        with self._lock:
+            self.closed = True
+            leftovers = [j for j in self._queue if j.status == JobStatus.PENDING]
+            self._queue.clear()
+            orphans = list(self._live.values())
+            self._live.clear()
+        return leftovers, orphans
+
+    # -- engine side ------------------------------------------------------------
+    def lease(self) -> Optional[Tuple[int, dict]]:
+        """Next queued job as ``(handle, config)``, or None when the queue is
+        empty.  Jobs killed/lost while buffered are skipped."""
+        with self._lock:
+            while self._queue:
+                job = self._queue.popleft()
+                if job.status != JobStatus.PENDING:
+                    continue
+                handle = self._next_handle
+                self._next_handle += 1
+                self._live[handle] = job
+                self.n_leased += 1
+                job.mark_running()
+                return handle, dict(job.config)
+            return None
+
+    def complete(self, handle: int, score: float, extra: Any = None) -> None:
+        """Retire a leased job with its score — fires the job callback now,
+        while the flight keeps running (the streaming-result path).  Jobs
+        already settled (deadline-killed mid-lane) do not count as streamed."""
+        with self._lock:
+            job = self._live.pop(handle, None)
+        if job is None or job.done:  # already settled: deadline-killed mid-lane
+            return
+        # count before finish: the finish callback can end the experiment, and
+        # readers of the counters must see this result included.  (A kill
+        # landing in between is a benign +-1 on telemetry.)
+        with self._lock:
+            self.n_streamed += 1
+        if self._on_stream is not None:
+            self._on_stream()
+        job.finish(JobResult(score=float(score), extra=extra))
+
+    def fail(self, handle: int, error: str) -> None:
+        with self._lock:
+            job = self._live.pop(handle, None)
+        if job is not None:
+            job.fail(str(error))
+
+
+class QueueFeedScheduler:
+    """Minimal streaming feed for driving ``run_population(scheduler=...)``
+    directly, without Algorithm 1 — a fixed config queue, results keyed by
+    lease order.  ``closed=True`` tells the flight no more jobs will ever
+    come, so it returns the moment the queue drains instead of lingering for
+    late offers.  This is the reference adapter the benchmarks and tests use;
+    ``LaneScheduler`` is the Algorithm-1 (Job-backed) implementation of the
+    same lease/complete protocol.
+    """
+
+    closed = True
+
+    def __init__(self, cfgs) -> None:
+        self._q: List[Tuple[int, dict]] = list(enumerate(dict(c) for c in cfgs))
+        self.scores: Dict[int, float] = {}
+        self.extras: Dict[int, Any] = {}
+
+    def lease(self) -> Optional[Tuple[int, dict]]:
+        return self._q.pop(0) if self._q else None
+
+    def complete(self, handle: int, score: float, extra: Any = None) -> None:
+        self.scores[handle] = float(score)
+        self.extras[handle] = extra
+
+    def ordered_scores(self, n: int) -> List[float]:
+        return [self.scores[i] for i in range(n)]
+
+
 @register("vectorized")
 class VectorizedResourceManager(ResourceManager):
-    def __init__(self, n_parallel: int = 8, resource_prefix: str = "slot", **kwargs):
+    def __init__(self, n_parallel: int = 8, resource_prefix: str = "slot",
+                 lane_refill: bool = False, **kwargs):
         super().__init__(**kwargs)
         self.n_slots = int(n_parallel)
         for i in range(self.n_slots):
             self.add_resource(f"{resource_prefix}{i}")
         self._pending: List[Job] = []
         self._last_target: Any = None
+        self.lane_refill = bool(lane_refill)
+        self._scheduler: Optional[LaneScheduler] = None
         self.n_batches = 0
         self.batch_sizes: List[int] = []
+        self.n_streamed = 0        # results delivered mid-flight (refill mode)
+        self.n_refill_flights = 0
+        self._warned_no_stream = False
+        # latched when a runner advertises a scheduler kwarg (e.g. **kwargs)
+        # but never leases from it — all later flushes take the batch path
+        self._streaming_broken = False
 
     # -- Algorithm 1 surface ----------------------------------------------------
     def run(self, job: Job, target: Callable) -> None:
         # jobs stay PENDING while buffered: the straggler deadline clock only
-        # starts when the batch actually executes (mark_running in _flush)
+        # starts when the batch actually executes (mark_running in the worker)
         self.bind(job.resource_id, job)
         with self._lock:
             self._last_target = target
+            sch = self._scheduler
+            if sch is not None and sch.offer(job):
+                return  # spliced straight into the live streaming flight
             self._pending.append(job)
             full = len(self._pending) >= self.n_slots
         if full:
@@ -74,13 +232,55 @@ class VectorizedResourceManager(ResourceManager):
             self._flush(target)
 
     def _flush(self, target: Callable) -> None:
+        """Claim the buffer atomically and start one batch/flight worker.
+
+        All buffer handoff happens under the lock: a concurrent ``run()`` /
+        ``release()`` pair can race into ``_flush`` freely — exactly one of
+        them claims the batch (the other finds the buffer empty or a live
+        flight absorbing it), so no job is ever double-flushed or stranded.
+        """
+        runner = getattr(target, "run_population", None)
         with self._lock:
+            sch = self._scheduler
+            if sch is not None:
+                # a streaming flight is live: drain the buffer into it.  Offers
+                # refused by a closing flight stay pending — the flight worker
+                # re-flushes after it clears ``_scheduler``.
+                self._pending = [j for j in self._pending if not sch.offer(j)]
+                return
             batch, self._pending = self._pending, []
             if not batch:
                 return
             self.n_batches += 1
             self.batch_sizes.append(len(batch))
+            streaming = (
+                self.lane_refill
+                and not self._streaming_broken
+                and runner is not None
+                and accepts_kwarg(runner, "scheduler")
+            )
+            if self.lane_refill and not streaming and not self._warned_no_stream:
+                # fall back to batch mode, but never silently: the user asked
+                # for streaming and this target cannot do it
+                self._warned_no_stream = True
+                warnings.warn(
+                    "lane_refill is enabled but the target does not accept a "
+                    "'scheduler' kwarg on run_population; falling back to "
+                    "batch-synchronous flights", stacklevel=2)
+            if streaming:
+                sch = LaneScheduler(on_stream=self._note_streamed)
+                for job in batch:
+                    sch.offer(job)
+                self._scheduler = sch
+                self.n_refill_flights += 1
+        if streaming:
+            self._start_streaming_worker(runner, target, sch)
+        else:
+            self._start_batch_worker(runner, target, batch)
 
+    # -- batch-synchronous worker (legacy protocol) ------------------------------
+    def _start_batch_worker(self, runner: Optional[Callable], target: Callable,
+                            batch: List[Job]) -> None:
         def _worker():
             # anything no longer PENDING was killed/lost while buffered
             live = [j for j in batch if j.status == JobStatus.PENDING]
@@ -89,29 +289,99 @@ class VectorizedResourceManager(ResourceManager):
             for job in live:
                 job.mark_running()
             try:
-                runner = getattr(target, "run_population", None)
                 if runner is not None:
                     outs = self._run_batch(runner, [dict(j.config) for j in live])
+                    if len(outs) != len(live):
+                        raise ValueError(
+                            f"run_population returned {len(outs)} results "
+                            f"for {len(live)} configs"
+                        )
                 else:
-                    outs = [target(dict(j.config)) for j in live]
-                if len(outs) != len(live):
-                    raise ValueError(
-                        f"run_population returned {len(outs)} results for {len(live)} configs"
-                    )
-                for job, out in zip(live, outs):
-                    score, extra = out if isinstance(out, tuple) else (out, None)
-                    job.finish(JobResult(score=float(score), extra=extra))
-            except Exception as e:  # job error != framework error
+                    # scalar fallback: per-job blast radius — one bad config
+                    # must not take down its batch siblings
+                    outs = []
+                    for job in live:
+                        try:
+                            outs.append(target(dict(job.config)))
+                        except Exception as e:
+                            outs.append(e)
+            except Exception as e:  # the one device program died: whole batch
                 for job in live:
+                    job.fail(f"{type(e).__name__}: {e}")
+                return
+            for job, out in zip(live, outs):
+                try:
+                    if isinstance(out, Exception):
+                        job.fail(f"{type(out).__name__}: {out}")
+                    else:
+                        score, extra = out if isinstance(out, tuple) else (out, None)
+                        job.finish(JobResult(score=float(score), extra=extra))
+                except Exception as e:  # malformed result fails only its job
                     job.fail(f"{type(e).__name__}: {e}")
 
         threading.Thread(
             target=_worker, name=f"popbatch-{self.n_batches}", daemon=True
         ).start()
 
-    def _run_batch(self, runner: Callable, configs: List[dict]) -> List[Any]:
-        """Execute one buffered batch.  Subclass hook: the sharded manager
-        passes its device mesh through to ``run_population`` here."""
+    # -- streaming worker (lane-refill protocol) ---------------------------------
+    def _start_streaming_worker(self, runner: Callable, target: Callable,
+                                sch: LaneScheduler) -> None:
+        def _worker():
+            err: Optional[Exception] = None
+            try:
+                self._run_batch(runner, [], scheduler=sch)
+            except Exception as e:
+                err = e
+            leftovers, orphans = sch.close()
+            with self._lock:
+                self._scheduler = None
+                if err is None and sch.n_leased == 0 and leftovers:
+                    # the runner took a 'scheduler' kwarg (**kwargs?) but never
+                    # leased a job: it cannot actually stream.  Without this
+                    # latch the re-flush below would pick streaming again and
+                    # livelock on zero-progress flights.
+                    self._streaming_broken = True
+                if err is None:
+                    # offers that landed after the flight's last lease check
+                    # seed the next flight instead of being stranded
+                    self._pending = leftovers + self._pending
+                has_pending = bool(self._pending)
+                broken = self._streaming_broken
+            if err is not None:
+                msg = f"{type(err).__name__}: {err}"
+                for job in orphans:
+                    job.fail(f"streaming flight died mid-lane: {msg}")
+                # never-leased jobs fail too (bounded per-lineage retries in
+                # the Experiment), rather than looping a broken engine forever
+                for job in leftovers:
+                    job.fail(f"streaming flight died before lease: {msg}")
+            else:
+                for job in orphans:  # engine returned without completing a lease
+                    job.fail("streaming flight ended without completing the lane")
+                if broken and not self._warned_no_stream:
+                    self._warned_no_stream = True
+                    warnings.warn(
+                        "lane_refill is enabled but the target's run_population "
+                        "never leased from the scheduler; falling back to "
+                        "batch-synchronous flights", stacklevel=2)
+                if has_pending:
+                    self._flush(target)
+
+        threading.Thread(
+            target=_worker, name=f"popflight-{self.n_batches}", daemon=True
+        ).start()
+
+    def _note_streamed(self) -> None:
+        # live counter: the experiment loop reads it while flights still run
+        with self._lock:
+            self.n_streamed += 1
+
+    def _run_batch(self, runner: Callable, configs: List[dict],
+                   scheduler: Optional[LaneScheduler] = None) -> List[Any]:
+        """Execute one buffered batch (or streaming flight).  Subclass hook:
+        the sharded manager passes its device mesh through here."""
+        if scheduler is not None:
+            return runner(configs, scheduler=scheduler)
         return runner(configs)
 
     def kill(self, job: Job) -> None:

@@ -42,8 +42,12 @@ class SyntheticLM:
         assert self.global_batch % n_shards == 0
         b = self.global_batch // n_shards
         # stream 0 keeps the legacy (seed, step, shard) entropy tuple so the
-        # shared-stream batch sequence is unchanged; nonzero streams extend it
-        entropy = (self.seed, step, shard) + ((int(stream),) if stream else ())
+        # shared-stream batch sequence is unchanged; nonzero streams extend it.
+        # Negative streams are reserved sentinels (idle/padding population
+        # lanes) — masking to uint64 keeps SeedSequence happy and lands them
+        # far away from any real (small, non-negative) trial stream.
+        stream = int(stream) & 0xFFFFFFFFFFFFFFFF
+        entropy = (self.seed, step, shard) + ((stream,) if stream else ())
         rng = np.random.default_rng(entropy)
         toks = np.empty((b, self.seq_len + 1), np.int32)
         toks[:, 0] = rng.integers(self.vocab_size, size=b)
@@ -60,15 +64,20 @@ class SyntheticLM:
         }
 
     def make_population_batch(
-        self, step: int, streams: Sequence[int]
+        self, step, streams: Sequence[int]
     ) -> Dict[str, np.ndarray]:
         """K independent per-trial batches stacked on a leading population axis.
 
         Trial ``i`` of the population consumes the stream ``streams[i]``
         sequence — leaf shapes become ``(K, batch, ...)`` for the population
-        engines' ``per_trial_batch`` mode.
+        engines' ``per_trial_batch`` mode.  ``step`` may be a single int (all
+        lanes at the same cursor — the batch-synchronous engines) or one int
+        per lane: a *refilled* lane joined the flight late, so it replays its
+        own stream from its own local step 0 while older lanes are further in.
         """
-        per = [self.make_batch(step, stream=s) for s in streams]
+        steps = [int(step)] * len(streams) if np.isscalar(step) else [int(s) for s in step]
+        assert len(steps) == len(streams)
+        per = [self.make_batch(st, stream=s) for st, s in zip(steps, streams)]
         return {k: np.stack([p[k] for p in per]) for k in per[0]}
 
 

@@ -45,6 +45,17 @@ at every rung boundary, losing lanes get their traced step budget truncated
 mid-flight, the flush returns as soon as the survivors finish, and the freed
 lanes immediately take the next batch of proposals.
 
+``--lane-refill`` goes further: the flight never has to end for a freed lane
+to be reused.  A retired lane (budget exhausted, rung-truncated, or diverged)
+streams its result out immediately and is reset *in place* — a traced
+per-lane mask re-inits its weights inside the compiled program — so the next
+proposal starts training while the rest of the population keeps running.
+This is Auptimizer Algorithm 1's every-resource-busy invariant enforced down
+to individual population lanes: one continuous flight per experiment instead
+of batch-synchronous flushes.  ``--per-trial-init`` additionally gives every
+trial its own init weights (stream id folded into the init key, identically
+in serial and population modes).
+
 Vectorized/sharded mode is only valid when every proposal varies *traced*
 knobs: all trials must share the architecture and batch geometry.  Per-trial
 architecture params (d_model, n_layers, ... — e.g. the NAS/EAS space) change
@@ -126,13 +137,25 @@ class PopulationTrial:
     ``repro.core.proposer.early_stop``): between population steps, at the
     hook's rung boundaries, losing lanes get their traced step budget
     truncated so the flight ends as soon as the surviving lanes finish.
+
+    ``per_trial_init`` folds each trial's stream id into its *init* PRNG key
+    as well, so every trial starts from its own weights — in serial and
+    population modes alike (the engines stay score-equivalent).  Default off:
+    the legacy behavior inits every trial from ``PRNGKey(seed)``.
+
+    ``run_population(configs=[], scheduler=...)`` is the **streaming** (lane
+    refill) protocol: instead of a positional batch, the engine leases jobs
+    from the scheduler into freed lanes mid-flight (resetting the lane's
+    train state inside the compiled program) and streams each job's result
+    back the moment its lane retires.  See ``_run_streaming``.
     """
 
     DIVERGED_SCORE = -1e9
 
     def __init__(self, arch: str, steps: int, batch: int, seq: int, seed: int,
                  population: int = 0, per_trial_streams: bool = True,
-                 early_stop=None):
+                 early_stop=None, per_trial_init: bool = False,
+                 refill_idle_grace_s: float = 0.25):
         self.arch = arch
         self.steps = int(steps)
         self.batch = int(batch)
@@ -140,9 +163,15 @@ class PopulationTrial:
         self.seed = int(seed)
         self.population = int(population)  # >0: pad batches to this fixed K
         self.per_trial_streams = bool(per_trial_streams)
+        self.per_trial_init = bool(per_trial_init)
         self.early_stop = early_stop
+        # how long an empty streaming flight lingers for late proposals before
+        # returning its lanes (0 for self-contained feeds, e.g. benchmarks)
+        self.refill_idle_grace_s = float(refill_idle_grace_s)
+        self.n_refills = 0          # lanes reused within a streaming flight
         self._tc = None
         self._data = None
+        self._serial_seq = 0  # fallback stream counter for anonymous configs
         import threading
 
         self._setup_lock = threading.Lock()
@@ -175,35 +204,72 @@ class PopulationTrial:
     def _stream_of(self, config: dict, fallback: int) -> int:
         """Per-trial data stream id: explicit ``stream`` key, else the job id
         (stable across serial vs population engines for the same proposal),
-        else ``fallback`` (lane position / 0)."""
+        else ``fallback`` (lane position / serial call order)."""
         if not self.per_trial_streams:
             return 0
         return int(config.get("stream", config.get("job_id", fallback)))
 
-    def __call__(self, config: dict) -> float:
-        """Serial protocol, sharing the process-wide compiled step."""
+    def _serial_stream_of(self, config: dict) -> int:
+        """Stream id for a serial call or a streaming lease.  Anonymous
+        configs — no ``stream`` and no ``job_id`` — get distinct streams by
+        call/lease order instead of all colliding on stream 0 (or on a reused
+        lane's index), which silently re-shared data across trials despite
+        ``per_trial_streams=True``."""
+        if not self.per_trial_streams:
+            return 0
+        if "stream" in config or "job_id" in config:
+            return self._stream_of(config, 0)
+        with self._setup_lock:
+            sid = self._serial_seq
+            self._serial_seq += 1
+        return sid
+
+    def _init_key(self, stream: int):
+        """Init PRNG key for a trial: the shared ``PRNGKey(seed)`` by default,
+        or — with ``per_trial_init`` — the trial's stream id folded in, so the
+        serial driver and every population engine derive the *same* per-trial
+        weights (masked to uint32: sentinel streams are negative)."""
         import jax
 
+        base = jax.random.PRNGKey(self.seed)
+        if not self.per_trial_init:
+            return base
+        return jax.random.fold_in(base, int(stream) & 0xFFFFFFFF)
+
+    def __call__(self, config: dict) -> float:
+        """Serial protocol, sharing the process-wide compiled step."""
+        return self.serial_score_at(config, None)
+
+    def serial_score_at(self, config: dict, steps=None) -> float:
+        """Serial driver score measured after ``steps`` applied steps (default:
+        the config's full budget).  The LR schedule still spans the config's
+        own total budget — so ``steps < budget`` reproduces exactly what a
+        rung-truncated population lane reports: the ordinary trajectory, cut
+        at the truncation step."""
         from ..train.train_step import get_compiled_train_step, init_train_state
 
         tc, data = self._setup()
         n_steps = self._n_steps(config)
-        stream = self._stream_of(config, 0)
+        run_steps = n_steps if steps is None else min(int(steps), n_steps)
+        stream = self._serial_stream_of(config)
         hp = self._hparams(config, n_steps)
         step_fn = get_compiled_train_step(tc)
-        state = init_train_state(jax.random.PRNGKey(self.seed), tc)
+        state = init_train_state(self._init_key(stream), tc)
         loss = float("inf")
-        for s in range(n_steps):
+        for s in range(run_steps):
             state, metrics = step_fn(state, data.make_batch(s, stream=stream), hp)
             loss = float(metrics["loss"])
             if not np.isfinite(loss):
                 return self.DIVERGED_SCORE
         return -loss
 
-    def run_population(self, configs, mesh=None) -> list:
+    def run_population(self, configs, mesh=None, scheduler=None) -> list:
         """Batch protocol: K trials in one vmapped (optionally sharded) device
         program.  With ``mesh`` the population axis splits over its devices;
         K is padded so it divides evenly (padding lanes get a 0-step budget).
+        With ``scheduler`` the call switches to the streaming lane-refill
+        protocol (``configs`` must be empty — jobs arrive via ``lease()`` and
+        results leave via ``complete()``).
         """
         import dataclasses
 
@@ -215,10 +281,18 @@ class PopulationTrial:
             get_compiled_population_step,
             get_compiled_sharded_population_step,
             init_population_state,
+            init_population_state_from_keys,
             pad_population,
             population_scores,
             shard_population_state,
         )
+
+        if scheduler is not None:
+            if configs:
+                raise ValueError(
+                    "streaming mode: seed proposals through the scheduler, not configs"
+                )
+            return self._run_streaming(mesh, scheduler)
 
         tc, data = self._setup()
         budgets = np.array([float(self._n_steps(c)) for c in configs])
@@ -227,10 +301,11 @@ class PopulationTrial:
         k = pad_population(max(self.population, len(hps)), mesh)
         # pad partial batches to the fixed population size with 0-budget
         # trials (they freeze immediately) so K — and thus the compiled
-        # program — never varies across batches
+        # program — never varies across batches; padding lanes get distinct
+        # negative *sentinel* streams instead of all duplicating stream 0
         while len(hps) < k:
             hps.append(self._hparams({}, 0))
-        streams += [0] * (k - len(streams))
+        streams += [-(i + 1) for i in range(len(streams), k)]
         budgets = np.concatenate([budgets, np.zeros(k - len(budgets))])
         php = stack_hparams(hps)
         if mesh is not None:
@@ -239,7 +314,11 @@ class PopulationTrial:
         else:
             pstep = get_compiled_population_step(
                 tc, k, per_trial_batch=self.per_trial_streams)
-        pstate = init_population_state(jax.random.PRNGKey(self.seed), tc, k)
+        if self.per_trial_init:
+            keys = jnp.stack([self._init_key(s) for s in streams])
+            pstate = init_population_state_from_keys(keys, tc)
+        else:
+            pstate = init_population_state(jax.random.PRNGKey(self.seed), tc, k)
         if mesh is not None:
             pstate = shard_population_state(pstate, mesh)
         hook = self.early_stop
@@ -268,6 +347,204 @@ class PopulationTrial:
         self.last_flight_steps = s
         scores = np.asarray(population_scores(pstate, self.DIVERGED_SCORE))
         return [float(x) for x in scores[: len(configs)]]
+
+    def _run_streaming(self, mesh, scheduler) -> list:
+        """Continuous lane-refill flight (Algorithm 1's busy-resource invariant
+        *inside* one compiled program).
+
+        Lane lifecycle: a lane **leases** a job from the scheduler, is reset
+        in place to that trial's init weights (``reset_lanes`` — a traced
+        per-lane mask, no recompile), trains on its own data stream from its
+        own local step 0, and **retires** when its budget runs out, the rung
+        rule truncates it, or it diverges.  Retirement streams the job's
+        result out immediately (``scheduler.complete``) and frees the lane
+        for the next lease — so losing lanes hand their device time to fresh
+        proposals mid-flight instead of idling until the whole batch drains.
+
+        The scheduler needs three things: ``lease() -> (handle, config) |
+        None``, ``complete(handle, score, extra)``, and optionally a
+        ``closed`` attribute (True = no more jobs are ever coming, skip the
+        idle grace wait).  ``core.resource.vectorized.LaneScheduler`` is the
+        Algorithm-1 adapter; benchmarks drive this with a plain queue.
+        """
+        import time as _time
+
+        import jax
+        import jax.numpy as jnp
+
+        from ..optim.hparams import stack_hparams
+        from ..train.population import (
+            get_compiled_population_step,
+            get_compiled_reset_lanes,
+            get_compiled_sharded_population_step,
+            get_compiled_sharded_reset_lanes,
+            init_population_state_from_keys,
+            pad_population,
+            shard_population_state,
+        )
+
+        if not self.per_trial_streams:
+            raise ValueError(
+                "lane refill requires per-trial data streams: a refilled lane "
+                "must replay its own stream from its own step 0 (drop "
+                "--shared-stream)"
+            )
+        tc, data = self._setup()
+        k = pad_population(max(self.population, 1), mesh)
+        if mesh is not None:
+            pstep = get_compiled_sharded_population_step(
+                tc, k, mesh=mesh, per_trial_batch=True)
+            reset_fn = get_compiled_sharded_reset_lanes(tc, k, mesh=mesh)
+        else:
+            pstep = get_compiled_population_step(tc, k, per_trial_batch=True)
+            reset_fn = get_compiled_reset_lanes(tc, k)
+
+        # host-side lane table (all lane-local: budgets/steps restart per lease)
+        handles: list = [None] * k
+        used = [False] * k
+        starts = np.zeros(k, np.int64)       # global step of the lane's local 0
+        budgets = np.zeros(k, np.float64)
+        streams = [-(i + 1) for i in range(k)]     # idle = sentinel stream
+        hps = [self._hparams({}, 0) for _ in range(k)]
+        lane_keys = [self._init_key(s) for s in streams]
+        # every lane — initial fill and refill alike — takes the vmapped
+        # from-keys init path, so a refilled lane is bit-identical to the same
+        # trial run in a fresh flight
+        pstate = init_population_state_from_keys(jnp.stack(lane_keys), tc)
+        if mesh is not None:
+            pstate = shard_population_state(pstate, mesh)
+        php = stack_hparams(hps)
+        hook = self.early_stop
+        s = 0
+        idle_deadline = None
+        # idle lanes consume a constant sentinel batch (stream -(lane+1) at
+        # step 0, never applied) — synthesize it once per lane, not per step
+        idle_cache: dict = {}
+        # Retirements and rung boundaries happen at *host-known* global steps
+        # (starts + budgets / starts + boundary), so the loop only materializes
+        # device flags at those event steps instead of syncing every step —
+        # between events it just dispatches compiled steps back-to-back.
+        # Divergence is the one async event; a capped gap bounds how long a
+        # diverged (frozen, masked) lane can occupy its slot before reclaim.
+        DIVERGE_CHECK_EVERY = 8
+        next_event = 0
+
+        def _next_event_step() -> int:
+            ev = s + DIVERGE_CHECK_EVERY
+            for lane in range(k):
+                if handles[lane] is None:
+                    continue
+                local = s - starts[lane]
+                ev = min(ev, int(starts[lane] + budgets[lane]))
+                if hook is not None:
+                    # next rung boundary this lane can still reach (<= budget:
+                    # completers feed the rung history too)
+                    for b in hook.boundaries:
+                        if local < b <= budgets[lane]:
+                            ev = min(ev, int(starts[lane] + b))
+                            break
+            return max(ev, s + 1)
+
+        while True:
+            live = [i for i in range(k) if handles[i] is not None]
+            php_dirty = False
+            # 1) at an event step: apply the rung rule, then retire lanes whose
+            # budget is exhausted (incl. just-truncated) or that diverged
+            if live and s >= next_event:
+                diverged = np.asarray(pstate["diverged"])
+                last = np.asarray(pstate["last_loss"])
+                # the device-side optimizer step counter is the exact number
+                # of *applied* steps — a diverged lane froze there, however
+                # late the capped divergence poll noticed it
+                applied = np.asarray(pstate["inner"]["opt"]["step"])
+                if hook is not None:
+                    local = np.array(
+                        [s - starts[i] if handles[i] is not None else 0
+                         for i in range(k)], np.float64)
+                    budgets = np.asarray(
+                        hook.observe(local, last, budgets, diverged), np.float64)
+                for lane in live:
+                    local_s = int(s - starts[lane])
+                    if diverged[lane] or local_s >= budgets[lane]:
+                        bad = bool(diverged[lane]) or not np.isfinite(last[lane])
+                        score = self.DIVERGED_SCORE if bad else -float(last[lane])
+                        if (hook is not None and diverged[lane]
+                                and budgets[lane] > applied[lane]):
+                            # same telemetry the batch engine keeps: a diverged
+                            # lane's remaining budget is dead weight reclaimed
+                            hook.n_reclaimed += 1
+                        scheduler.complete(handles[lane], score, extra={
+                            "steps": int(applied[lane]),
+                            "diverged": bool(diverged[lane]),
+                            "lane": lane,
+                        })
+                        handles[lane] = None
+                        budgets[lane] = 0.0
+                        streams[lane] = -(lane + 1)
+                        hps[lane] = self._hparams({}, 0)
+                        php_dirty = True  # restack so the retired lane freezes
+            # 2) splice pending proposals into freed lanes (one traced reset
+            # covers every splice this round; no device sync needed)
+            if any(h is None for h in handles):
+                reset_mask = np.zeros(k, bool)
+                for lane in range(k):
+                    if handles[lane] is not None:
+                        continue
+                    lease = scheduler.lease()
+                    if lease is None:
+                        break
+                    handle, cfg = lease
+                    # same resolution as the serial driver: explicit stream /
+                    # job id, else a distinct lease-order stream — never the
+                    # lane index, which repeats across refills of one lane
+                    sid = self._serial_stream_of(cfg)
+                    handles[lane] = handle
+                    starts[lane] = s
+                    budgets[lane] = float(self._n_steps(cfg))
+                    streams[lane] = sid
+                    hps[lane] = self._hparams(cfg, int(budgets[lane]))
+                    lane_keys[lane] = self._init_key(sid)
+                    reset_mask[lane] = True
+                    if used[lane]:
+                        self.n_refills += 1
+                    used[lane] = True
+                    php_dirty = True
+                if reset_mask.any():
+                    pstate = reset_fn(
+                        pstate, jnp.asarray(reset_mask), jnp.stack(lane_keys))
+                live = [i for i in range(k) if handles[i] is not None]
+            if php_dirty:
+                php = stack_hparams(hps)
+            if not live:
+                # 3) flight idle: linger briefly for late proposals (Algorithm 1
+                # may be mid-callback), then return the lanes
+                if getattr(scheduler, "closed", False):
+                    break
+                now = _time.time()
+                if idle_deadline is None:
+                    idle_deadline = now + self.refill_idle_grace_s
+                if now >= idle_deadline:
+                    break
+                _time.sleep(0.002)
+                continue
+            idle_deadline = None
+            next_event = _next_event_step()
+            # 4) one population step: lane i consumes ITS OWN stream at ITS OWN
+            # local step (refilled lanes replay from 0 mid-flight)
+            per = []
+            for i in range(k):
+                if handles[i] is not None:
+                    per.append(data.make_batch(int(s - starts[i]), stream=streams[i]))
+                else:
+                    b = idle_cache.get(i)
+                    if b is None:
+                        b = idle_cache[i] = data.make_batch(0, stream=streams[i])
+                    per.append(b)
+            batch = {key: np.stack([p[key] for p in per]) for key in per[0]}
+            pstate, _ = pstep(pstate, batch, php)
+            s += 1
+        self.last_flight_steps = s
+        return []
 
 
 SPACE = [
@@ -305,6 +582,17 @@ def main(argv=None) -> int:
                    help="with --vectorize and asha/hyperband/bohb: apply the "
                         "rung rule mid-flight, truncating losing lanes' budgets "
                         "so they free up before the batch ends")
+    p.add_argument("--lane-refill", action="store_true",
+                   help="with --vectorize: continuous streaming flights — a "
+                        "retired lane (budget done / rung-truncated / diverged) "
+                        "is reset in place inside the compiled program and "
+                        "immediately takes the next proposal; results stream "
+                        "out per lane instead of at flight end")
+    p.add_argument("--per-trial-init", action="store_true",
+                   help="fold each trial's stream/job id into its init PRNG "
+                        "key so trials start from distinct weights (serial and "
+                        "population engines fold identically; default: shared "
+                        "init from --seed)")
     p.add_argument("--legacy-recompile", action="store_true",
                    help="pre-refactor baseline: bake hparams into the closure, recompile per trial")
     args = p.parse_args(argv)
@@ -325,23 +613,35 @@ def main(argv=None) -> int:
     if args.deadline:
         exp_cfg["job_deadline_s"] = args.deadline
 
-    if args.vectorize <= 0 and (args.shard_population or args.inflight_stop):
-        p.error("--shard-population/--inflight-stop require --vectorize K "
-                "(they act on the population engines)")
+    if args.vectorize <= 0 and (args.shard_population or args.inflight_stop
+                                or args.lane_refill):
+        p.error("--shard-population/--inflight-stop/--lane-refill require "
+                "--vectorize K (they act on the population engines)")
+    if args.lane_refill and args.shared_stream:
+        p.error("--lane-refill needs per-trial data streams (a refilled lane "
+                "replays its own stream from step 0); drop --shared-stream")
     per_trial_streams = not args.shared_stream
     if args.vectorize > 0:
         exp_cfg["resource"] = "sharded" if args.shard_population else "vectorized"
         exp_cfg["n_parallel"] = args.vectorize
+        if args.lane_refill:
+            exp_cfg["lane_refill"] = True
         trial = PopulationTrial(args.arch, args.steps, args.batch, args.seq,
                                 args.seed, population=args.vectorize,
-                                per_trial_streams=per_trial_streams)
+                                per_trial_streams=per_trial_streams,
+                                per_trial_init=args.per_trial_init)
     elif args.legacy_recompile:
         trial = make_trial(args.arch, args.steps, args.batch, args.seq, args.seed)
     else:
         trial = PopulationTrial(args.arch, args.steps, args.batch, args.seq,
-                                args.seed, per_trial_streams=per_trial_streams)
+                                args.seed, per_trial_streams=per_trial_streams,
+                                per_trial_init=args.per_trial_init)
     t0 = time.time()
     exp = Experiment(exp_cfg, trial)
+    # incremental result telemetry: with streaming flights, results land while
+    # the batch is still running — record when each settles
+    result_times: list = []
+    exp.add_result_callback(lambda job: result_times.append(time.time()))
     if args.inflight_stop:
         hook_factory = getattr(exp.proposer, "inflight_hook", None)
         if hook_factory is None:
@@ -356,12 +656,19 @@ def main(argv=None) -> int:
     out = {
         "proposer": args.proposer,
         "arch": args.arch,
-        "engine": engine,
+        "engine": engine + ("+refill" if args.lane_refill else ""),
         "vectorize": args.vectorize,
     }
     if getattr(trial, "early_stop", None) is not None:
         out["inflight_truncated_lanes"] = trial.early_stop.n_truncated
         out["inflight_reclaimed_diverged_lanes"] = trial.early_stop.n_reclaimed
+    if args.lane_refill:
+        out["lane_refills"] = trial.n_refills
+        out["streamed_results"] = exp.rm.n_streamed
+        out["refill_flights"] = exp.rm.n_refill_flights
+    if result_times:
+        out["first_result_s"] = round(result_times[0] - t0, 2)
+        out["last_result_s"] = round(result_times[-1] - t0, 2)
     print(json.dumps(dict(out, **{
         "best_score": best["score"],
         "best_config": {k: v for k, v in best["config"].items()

@@ -32,6 +32,10 @@ Semantics per jitted ``pop_step(pstate, batch, hp)``:
   trials freeze in place while the rest continue.  Because ``total_steps`` is
   a *traced* leaf, the driver may also shrink it **mid-flight** (in-flight
   early stopping — see ``repro.core.proposer.early_stop``) without recompiling;
+* a retired lane can be **refilled** in place: ``make_reset_lanes`` re-inits a
+  masked subset of lanes from per-lane PRNG keys (vmapped ``init_train_state``),
+  so the host loop swaps the next proposal into a freed lane while the rest of
+  the population keeps training — still the same compiled step program;
 * a non-finite loss at an active step sets the ``diverged`` latch and the
   update is *not* applied — the sick trial freezes, the batch lives on
   (vmapped divergence masking);
@@ -119,6 +123,45 @@ def make_population_train_step(tc: TrainConfig, per_trial_batch: bool = False) -
         }, dict(metrics, active=active)
 
     return pop_step
+
+
+def make_reset_lanes(tc: TrainConfig) -> Callable:
+    """``(pstate, mask, keys) -> pstate`` with masked lanes re-initialized.
+
+    The in-place lane *refill* primitive: when the host loop retires a lane
+    (budget exhausted, rung-truncated, or diverged) it can splice the next
+    proposal into that lane **without leaving the compiled program** — the
+    reset re-inits the lane's inner train state (params, optimizer moments,
+    step counter) from its own PRNG key via a vmapped ``init_train_state``,
+    clears the divergence latch, and restores the ``last_loss`` sentinel.
+    ``mask`` is ``bool[K]`` (True = reset this lane); ``keys`` is ``(K, 2)``
+    per-lane init keys, so a refilled lane starts from exactly the weights a
+    fresh serial trial with the same key would — unmasked lanes keep training
+    state untouched.
+    """
+
+    def reset(pstate: PopState, mask: jax.Array, keys: jax.Array) -> PopState:
+        fresh = jax.vmap(lambda k: init_train_state(k, tc))(keys)
+        inner = jax.tree.map(
+            lambda f, o: _per_trial(mask, f, o), fresh, pstate["inner"]
+        )
+        return {
+            "inner": inner,
+            "diverged": jnp.where(mask, False, pstate["diverged"]),
+            "last_loss": jnp.where(mask, jnp.float32(jnp.inf), pstate["last_loss"]),
+        }
+
+    return reset
+
+
+def make_sharded_reset_lanes(tc: TrainConfig, mesh: Mesh, axis: str = "pop") -> Callable:
+    """Lane reset with the K axis split over ``mesh`` (mirrors the sharded
+    population step): each device re-inits only its own K/N block of lanes."""
+    from jax.experimental.shard_map import shard_map
+
+    reset = make_reset_lanes(tc)
+    pop = PartitionSpec(axis)
+    return shard_map(reset, mesh=mesh, in_specs=(pop, pop, pop), out_specs=pop)
 
 
 def make_sharded_population_step(
@@ -213,6 +256,46 @@ def get_compiled_sharded_population_step(
                     tc, mesh, per_trial_batch=per_trial_batch, axis=axis
                 ),
                 donate_argnums=0,
+            )
+            _POP_CACHE[key] = fn
+    return fn
+
+
+def get_compiled_reset_lanes(tc: TrainConfig, population: int):
+    """Memoized ``jax.jit`` of the lane-refill reset with donated state."""
+    key = (static_step_key(tc), int(population), "reset")
+    with _POP_CACHE_LOCK:
+        fn = _POP_CACHE.get(key)
+        if fn is None:
+            fn = jax.jit(make_reset_lanes(tc), donate_argnums=0)
+            _POP_CACHE[key] = fn
+    return fn
+
+
+def get_compiled_sharded_reset_lanes(
+    tc: TrainConfig,
+    population: int,
+    mesh: Optional[Mesh] = None,
+    axis: str = "pop",
+):
+    """Memoized jitted ``shard_map`` lane reset over ``mesh`` (keyed like the
+    sharded population step, so one refill flight compiles exactly two
+    programs: step + reset)."""
+    mesh = mesh if mesh is not None else population_mesh(axis=axis)
+    if population % mesh.size:
+        raise ValueError(
+            f"population {population} does not divide over {mesh.size} devices; "
+            f"pad to {pad_population(population, mesh)} with 0-budget trials"
+        )
+    key = (
+        static_step_key(tc), int(population), "reset",
+        tuple(d.id for d in mesh.devices.flat), axis,
+    )
+    with _POP_CACHE_LOCK:
+        fn = _POP_CACHE.get(key)
+        if fn is None:
+            fn = jax.jit(
+                make_sharded_reset_lanes(tc, mesh, axis=axis), donate_argnums=0
             )
             _POP_CACHE[key] = fn
     return fn

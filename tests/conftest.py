@@ -1,3 +1,4 @@
+import importlib.util
 import os
 import sys
 
@@ -15,6 +16,39 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 import pytest
+
+# -- per-test timeout guard ---------------------------------------------------
+# The streaming population engines run flush/flight worker *threads*; a
+# regression that deadlocks one must fail the suite, not hang CI.  Prefer the
+# real pytest-timeout plugin when installed (requirements-dev.txt); otherwise
+# fall back to a faulthandler watchdog that dumps every thread's stack and
+# aborts the process.  Tune with PYTEST_TIMEOUT (seconds, 0 disables).
+_HAVE_PYTEST_TIMEOUT = importlib.util.find_spec("pytest_timeout") is not None
+_TEST_TIMEOUT_S = float(os.environ.get("PYTEST_TIMEOUT") or "600")
+
+
+def pytest_configure(config):
+    if not (_HAVE_PYTEST_TIMEOUT and _TEST_TIMEOUT_S > 0):
+        return
+    try:
+        explicit = config.getoption("timeout")
+    except ValueError:  # plugin present but disabled (-p no:timeout)
+        return
+    if explicit is None:  # 0 is an explicit opt-out (e.g. pdb sessions)
+        config.option.timeout = _TEST_TIMEOUT_S
+        config.option.timeout_method = "thread"
+
+
+if not _HAVE_PYTEST_TIMEOUT and _TEST_TIMEOUT_S > 0:
+    import faulthandler
+
+    @pytest.hookimpl(hookwrapper=True)
+    def pytest_runtest_protocol(item, nextitem):
+        faulthandler.dump_traceback_later(_TEST_TIMEOUT_S, exit=True)
+        try:
+            yield
+        finally:
+            faulthandler.cancel_dump_traceback_later()
 
 
 @pytest.fixture

@@ -1,0 +1,566 @@
+"""Continuous lane-refill engine + the PR's bugfix sweep.
+
+Covers the streaming half of the population-engine story: a retired lane
+(budget exhausted, rung-truncated, diverged) is reset *inside* the compiled
+program (``make_reset_lanes``) and immediately leases the next proposal,
+with its result streamed out the moment the lane retires instead of at
+flight end.  Plus regression tests for the satellite fixes: per-trial init
+seeds, the serial fallback-stream collision, sentinel padding streams, and
+the vectorized manager's flush blast radius / double-flush races.
+
+conftest.py forces an 8-virtual-device CPU mesh; tests that need real
+sharding skip on a single-device backend.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.core.experiment import Experiment
+from repro.core.job import Job, JobStatus
+from repro.core.proposer.early_stop import InFlightSuccessiveHalving
+from repro.core.resource.vectorized import (
+    LaneScheduler,
+    QueueFeedScheduler,
+    VectorizedResourceManager,
+)
+from repro.data.pipeline import SyntheticLM
+from repro.distributed.sharding import population_mesh
+from repro.launch.hpo import PopulationTrial
+from repro.optim.hparams import hparams_from_dict, stack_hparams
+from repro.train import population as pop
+
+SEQ, BATCH, STEPS = 16, 2, 4
+ARCH = "starcoder2-3b"
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2, reason="needs a multi-device (virtual CPU) mesh"
+)
+
+
+@pytest.fixture(scope="module")
+def tc():
+    cfg = get_smoke_config(ARCH)
+    return TrainConfig(model=cfg, parallel=ParallelConfig(remat="none"),
+                       total_steps=STEPS)
+
+
+# the shared streaming-feed adapter (fixed queue, flight ends when drained)
+FeedScheduler = QueueFeedScheduler
+
+
+def _cfgs(n, budgets=None):
+    rng = np.random.default_rng(1)
+    out = [
+        {"learning_rate": float(lr), "weight_decay": float(rng.uniform(0, 0.2)),
+         "stream": i}
+        for i, lr in enumerate(np.geomspace(1e-4, 1e-2, n))
+    ]
+    if budgets is not None:
+        for c, b in zip(out, budgets):
+            c["n_iterations"] = b
+    return out
+
+
+# -- the traced reset op ----------------------------------------------------------
+
+def test_reset_lanes_reinitializes_masked_lanes_only(tc):
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        jax.random.PRNGKey(0), jnp.arange(2, dtype=jnp.uint32))
+    pstate = pop.init_population_state_from_keys(keys, tc)
+    fresh = pop.init_population_state_from_keys(keys, tc)
+    step = pop.make_population_train_step(tc, per_trial_batch=False)
+    data = SyntheticLM(tc.model.vocab_size, SEQ, BATCH, seed=0)
+    hp = stack_hparams([hparams_from_dict({"learning_rate": 1e-3,
+                                           "total_steps": STEPS}, tc)] * 2)
+    for s in range(2):
+        pstate, _ = step(pstate, data.make_batch(s), hp)
+    # lanes trained: both differ from fresh init now
+    p0 = jax.tree.leaves(pstate["inner"]["params"])[0]
+    f0 = jax.tree.leaves(fresh["inner"]["params"])[0]
+    assert not np.array_equal(np.asarray(p0[0]), np.asarray(f0[0]))
+
+    reset = pop.make_reset_lanes(tc)
+    mask = jnp.array([False, True])
+    out = reset(pstate, mask, keys)
+    # lane 1 is bit-identical to a fresh from-keys init; lane 0 untouched
+    for got, want in zip(jax.tree.leaves(out["inner"]), jax.tree.leaves(fresh["inner"])):
+        np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    for got, kept in zip(jax.tree.leaves(out["inner"]), jax.tree.leaves(pstate["inner"])):
+        np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(kept[0]))
+    assert not bool(out["diverged"][1])
+    assert np.isinf(np.asarray(out["last_loss"])[1])
+    assert np.asarray(out["last_loss"])[0] == np.asarray(pstate["last_loss"])[0]
+
+
+# -- streaming engine equivalence -------------------------------------------------
+
+def test_refilled_lane_matches_fresh_flight_and_serial():
+    """The headline refill contract: a config spliced into a *used* lane
+    mid-flight scores bit-for-bit what it scores as an initial lane of a
+    fresh flight (same stream, same init key), and matches the serial
+    driver trial-for-trial."""
+    cfgs = [
+        {"learning_rate": 1e-3, "stream": 0, "n_iterations": 2},
+        {"learning_rate": 2e-3, "stream": 1, "n_iterations": 4},
+        {"learning_rate": 3e-3, "stream": 2, "n_iterations": 2},
+    ]
+    trial = PopulationTrial(ARCH, steps=1, batch=BATCH, seq=SEQ, seed=0,
+                            population=2, refill_idle_grace_s=0.0,
+                            per_trial_init=True)
+    sch = FeedScheduler(cfgs)
+    assert trial.run_population([], scheduler=sch) == []
+    assert len(sch.scores) == 3
+    assert trial.n_refills >= 1, "config 2 must have refilled a freed lane"
+    # config 2 rode a refilled lane; rerun it as an initial lane of a fresh
+    # flight — identical compiled program, identical init path => bit-equal
+    fresh = trial.run_population([cfgs[2]])
+    assert sch.scores[2] == fresh[0]
+    # and the serial driver (same stream id + same folded init key) agrees
+    serial = trial(dict(cfgs[2]))
+    np.testing.assert_allclose(sch.scores[2], serial, rtol=1e-5, atol=1e-6)
+    # streamed telemetry: per-job effective budgets ride in extra
+    assert sch.extras[0]["steps"] == 2 and sch.extras[1]["steps"] == 4
+
+
+def test_streaming_matches_batch_engine_across_the_board():
+    cfgs = _cfgs(5, budgets=[1, 2, 1, 2, 1])
+    trial = PopulationTrial(ARCH, steps=2, batch=BATCH, seq=SEQ, seed=0,
+                            population=2, refill_idle_grace_s=0.0)
+    sch = FeedScheduler(cfgs)
+    trial.run_population([], scheduler=sch)
+    batch_scores = []
+    for c in cfgs:  # one at a time: every trial is an initial lane
+        batch_scores.extend(trial.run_population([c]))
+    np.testing.assert_allclose(sch.ordered_scores(5), batch_scores,
+                               rtol=1e-5, atol=1e-6)
+
+
+@multi_device
+def test_sharded_refill_matches_vmapped():
+    n = jax.device_count()
+    cfgs = _cfgs(n + 3, budgets=[1 + (i % 3) for i in range(n + 3)])
+    trial = PopulationTrial(ARCH, steps=1, batch=BATCH, seq=SEQ, seed=0,
+                            population=n, refill_idle_grace_s=0.0)
+    s1 = FeedScheduler(cfgs)
+    trial.run_population([], scheduler=s1)
+    s2 = FeedScheduler(cfgs)
+    trial.run_population([], mesh=population_mesh(), scheduler=s2)
+    np.testing.assert_allclose(s2.ordered_scores(len(cfgs)),
+                               s1.ordered_scores(len(cfgs)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_streaming_requires_per_trial_streams():
+    trial = PopulationTrial(ARCH, steps=1, batch=BATCH, seq=SEQ, seed=0,
+                            population=2, per_trial_streams=False)
+    with pytest.raises(ValueError, match="per-trial data streams"):
+        trial.run_population([], scheduler=FeedScheduler([]))
+    with pytest.raises(ValueError, match="streaming mode"):
+        PopulationTrial(ARCH, steps=1, batch=BATCH, seq=SEQ, seed=0,
+                        population=2).run_population(
+            [{"learning_rate": 1e-3}], scheduler=FeedScheduler([]))
+
+
+def test_streaming_truncation_via_staggered_rung_rule():
+    """A terrible long-budget lane is cut at its rung against the history of
+    better completers, freeing the lane mid-flight."""
+    hook = InFlightSuccessiveHalving(eta=2.0, min_iter=2, max_iter=8)
+    cfgs = [dict(c, n_iterations=2) for c in _cfgs(3)]
+    cfgs.append({"learning_rate": 0.5, "stream": 3, "n_iterations": 8})
+    trial = PopulationTrial(ARCH, steps=1, batch=BATCH, seq=SEQ, seed=0,
+                            population=2, refill_idle_grace_s=0.0,
+                            early_stop=hook)
+    sch = FeedScheduler(cfgs)
+    trial.run_population([], scheduler=sch)
+    assert len(sch.scores) == 4
+    # the bad lane was truncated by the rung rule or froze on divergence
+    assert hook.n_truncated >= 1 or sch.extras[3]["diverged"]
+    assert sch.extras[3]["steps"] < 8
+    assert all(sch.scores[i] > -1e8 for i in range(3))
+
+
+def test_observe_staggered_rung_history_rule():
+    hook = InFlightSuccessiveHalving(eta=2.0, min_iter=2, max_iter=8)
+    budgets = np.array([8.0, 8.0, 0.0, 8.0])
+    # lane 0 at its rung-2 boundary with the best loss seen there: survives
+    out = hook.observe([2, 1, 0, 3], [1.0, 2.0, np.inf, 3.0],
+                       budgets, np.zeros(4, bool))
+    assert out.tolist() == budgets.tolist() and hook.n_truncated == 0
+    # lane 1 reaches the same rung later with a worse loss: cut to the rung
+    out = hook.observe([3, 2, 0, 4], [1.0, 2.0, np.inf, 3.0],
+                       out, np.zeros(4, bool))
+    assert out.tolist() == [8.0, 2.0, 0.0, 8.0] and hook.n_truncated == 1
+    # diverged and idle lanes are never ranked
+    out2 = hook.observe([2, 2, 2, 2], [0.1, 0.2, 0.3, 0.4],
+                        np.array([0.0, 8.0, 8.0, 8.0]),
+                        np.array([False, True, False, False]))
+    assert out2[0] == 0.0 and out2[1] == 8.0
+
+
+# -- streaming through Algorithm 1 ------------------------------------------------
+
+def test_streaming_experiment_with_asha_and_refill():
+    trial = PopulationTrial(ARCH, steps=1, batch=BATCH, seq=SEQ, seed=0,
+                            population=4)
+    exp = Experiment(
+        {"proposer": "asha", "parameter_config": [
+            {"name": "learning_rate", "type": "float", "range": [1e-4, 1e-2],
+             "scale": "log"}],
+         "n_samples": 6, "n_parallel": 4, "target": "max", "random_seed": 0,
+         "max_iter": 8, "min_iter": 2, "eta": 2.0,
+         "resource": "vectorized", "lane_refill": True},
+        trial,
+    )
+    trial.early_stop = exp.proposer.inflight_hook(steps_per_unit=1)
+    settled = []
+    exp.add_result_callback(lambda job: settled.append(job.job_id))
+    best = exp.run()
+    assert best is not None and best["score"] > -1e8
+    assert exp.proposer.finished()
+    assert exp.rm.n_streamed > 0, "results must stream out mid-flight"
+    assert exp.rm.n_refill_flights >= 1
+    assert len(settled) == len(set(settled)) >= 6, "every job settles exactly once"
+    # every logged job reached a terminal state — nothing stranded in a lane
+    assert all(j.done for j in exp.job_log)
+
+
+def test_lane_refill_smoke_cli():
+    """The CI smoke entry (`REPRO_LANE_REFILL_SMOKE=1`) runs the full CLI with
+    --lane-refill; locally we keep a lighter always-on variant."""
+    from repro.launch.hpo import main
+
+    heavy = os.environ.get("REPRO_LANE_REFILL_SMOKE") == "1"
+    argv = ["--proposer", "asha", "--vectorize", "4", "--inflight-stop",
+            "--lane-refill", "--n-samples", "6" if heavy else "4",
+            "--steps", "2", "--batch", "2", "--seq", "16"]
+    assert main(argv) == 0
+
+
+# -- LaneScheduler / manager races ------------------------------------------------
+
+def _job(i, cb=lambda j: None):
+    return Job(i, {"x": i}, None, cb)
+
+
+def test_lane_scheduler_offer_lease_complete_close():
+    sch = LaneScheduler()
+    done = []
+    jobs = [Job(i, {"x": i}, None, done.append) for i in range(4)]
+    assert all(sch.offer(j) for j in jobs)
+    jobs[1].fail("killed while buffered", status=JobStatus.KILLED)
+    h0, c0 = sch.lease()
+    h1, c1 = sch.lease()
+    assert (c0["x"], c1["x"]) == (0, 2), "killed job is skipped at lease"
+    assert jobs[0].status == JobStatus.RUNNING
+    sch.complete(h0, 1.5, extra={"steps": 3})
+    assert jobs[0].result.score == 1.5 and jobs[0].status == JobStatus.FINISHED
+    sch.fail(h1, "lane diverged hard")
+    assert jobs[2].status == JobStatus.FAILED
+    leftovers, orphans = sch.close()
+    assert [j.job_id for j in leftovers] == [3] and orphans == []
+    assert not sch.offer(_job(9)), "closed scheduler refuses offers"
+    assert sch.n_streamed == 1 and sch.n_leased == 2
+    # double-complete of a finished handle is a no-op
+    sch.complete(h0, 99.0)
+    assert jobs[0].result.score == 1.5
+
+
+def test_flush_race_stress_no_job_stranded_or_doubled():
+    """Concurrent run()/release() hammering: every job settles exactly once
+    with its own score — the atomic buffer claim means no double-flush and
+    no stranded pending job."""
+    n_jobs, n_slots = 24, 4
+    rm = VectorizedResourceManager(n_parallel=n_slots)
+    settled = []
+    lock = threading.Lock()
+
+    def on_done(job):
+        with lock:
+            settled.append(job.job_id)
+        rm.release(job.resource_id)  # Algorithm 1 returns the slot
+
+    def target(cfg):
+        time.sleep(0.001)
+        if cfg["x"] % 7 == 3:
+            raise RuntimeError("boom")  # per-job blast radius
+        return cfg["x"] * 2.0
+
+    jobs = [Job(i, {"x": i}, None, on_done) for i in range(n_jobs)]
+    queue = list(jobs)
+
+    def producer():
+        while True:
+            with lock:
+                if not queue:
+                    return
+                job = queue.pop(0)
+            while True:
+                res = rm.get_available()
+                if res is not None:
+                    break
+                time.sleep(0.001)
+            job.resource_id = res
+            rm.run(job, target)
+
+    threads = [threading.Thread(target=producer) for _ in range(3)]
+    for t in threads:
+        t.start()
+    # the idle-release pump Algorithm 1 performs when the proposer is dry —
+    # it is what flushes trailing partial batches
+    deadline = time.time() + 30
+    while time.time() < deadline and not all(j.done for j in jobs):
+        res = rm.get_available()
+        if res is not None:
+            rm.release(res)
+        time.sleep(0.002)
+    for t in threads:
+        t.join(timeout=10)
+    assert all(j.done for j in jobs), "a job was stranded in the buffer"
+    assert sorted(settled) == list(range(n_jobs)), "each job settles exactly once"
+    for j in jobs:
+        if j.job_id % 7 == 3:
+            assert j.status == JobStatus.FAILED, "only the raising job fails"
+        else:
+            assert j.status == JobStatus.FINISHED
+            assert j.result.score == j.job_id * 2.0
+
+
+def test_streaming_flush_race_with_fake_engine():
+    """run()/release() racing against a live streaming flight: offers splice
+    into the flight, late offers seed a follow-up flight, all exactly-once."""
+
+    class FakeStreamTarget:
+        def run_population(self, configs, scheduler=None, mesh=None):
+            assert configs == []
+            idle = 0
+            while idle < 40:
+                lease = scheduler.lease()
+                if lease is None:
+                    if getattr(scheduler, "closed", False):
+                        break
+                    time.sleep(0.002)
+                    idle += 1
+                    continue
+                idle = 0
+                h, cfg = lease
+                scheduler.complete(h, cfg["x"] * 3.0)
+            return []
+
+    n_jobs, n_slots = 30, 4
+    rm = VectorizedResourceManager(n_parallel=n_slots, lane_refill=True)
+    target = FakeStreamTarget()
+    settled = []
+    lock = threading.Lock()
+
+    def on_done(job):
+        with lock:
+            settled.append(job.job_id)
+        rm.release(job.resource_id)
+
+    jobs = [Job(i, {"x": i}, None, on_done) for i in range(n_jobs)]
+    queue = list(jobs)
+
+    def producer():
+        while True:
+            with lock:
+                if not queue:
+                    return
+                job = queue.pop(0)
+            while True:
+                res = rm.get_available()
+                if res is not None:
+                    break
+                time.sleep(0.001)
+            job.resource_id = res
+            rm.run(job, target)
+
+    threads = [threading.Thread(target=producer) for _ in range(3)]
+    for t in threads:
+        t.start()
+    deadline = time.time() + 30
+    while time.time() < deadline and not all(j.done for j in jobs):
+        res = rm.get_available()
+        if res is not None:
+            rm.release(res)
+        time.sleep(0.002)
+    for t in threads:
+        t.join(timeout=10)
+    assert all(j.done for j in jobs)
+    assert sorted(settled) == list(range(n_jobs))
+    assert all(j.result.score == j.job_id * 3.0 for j in jobs)
+    assert rm.n_streamed == n_jobs
+    assert rm.n_refill_flights >= 1
+
+
+def test_diverged_lane_reports_exact_applied_steps():
+    """extra['steps'] is the device-side applied-step count, not the step at
+    which the capped divergence poll happened to notice the freeze."""
+    cfgs = [{"learning_rate": 1e6, "stream": 0, "n_iterations": 16}]
+    trial = PopulationTrial(ARCH, steps=1, batch=BATCH, seq=SEQ, seed=0,
+                            population=2, refill_idle_grace_s=0.0)
+    sch = FeedScheduler(cfgs)
+    trial.run_population([], scheduler=sch)
+    assert sch.extras[0]["diverged"]
+    assert sch.scores[0] <= -1e8
+    # the lane exploded after 4 applied updates; the divergence *poll* only
+    # fires at step 8 (DIVERGE_CHECK_EVERY) — reporting >= 8 would mean we
+    # recorded poll time, not the device-side applied-step counter
+    assert sch.extras[0]["steps"] < 8
+
+
+def test_lane_refill_requires_streaming_capable_manager():
+    with pytest.raises(ValueError, match="does not support streaming"):
+        Experiment(
+            {"proposer": "random", "parameter_config": [
+                {"name": "x", "type": "float", "range": [0.0, 1.0]}],
+             "n_samples": 1, "n_parallel": 1, "target": "max",
+             "resource": "local", "lane_refill": True},
+            lambda cfg: 0.0,
+        )
+
+
+def test_lane_refill_kwargs_target_falls_back_instead_of_livelocking():
+    """A runner whose **kwargs swallow 'scheduler' without leasing must latch
+    over to batch mode (zero-progress streaming flights must not loop)."""
+    rm = VectorizedResourceManager(n_parallel=2, lane_refill=True)
+
+    class KwargsBatchTarget:
+        def run_population(self, configs, **kwargs):
+            return [float(c["x"]) for c in configs]
+
+    done = []
+    jobs = [Job(i, {"x": i}, f"slot{i}", done.append) for i in range(2)]
+    with pytest.warns(UserWarning, match="never leased"):
+        for j in jobs:
+            rm._busy[j.resource_id] = None
+            rm.run(j, KwargsBatchTarget())
+        for j in jobs:
+            assert j.wait(10.0)
+    assert all(j.status == JobStatus.FINISHED for j in jobs)
+    assert [j.result.score for j in jobs] == [0.0, 1.0]
+    assert rm._streaming_broken
+
+
+def test_lane_refill_warns_on_batch_only_target():
+    rm = VectorizedResourceManager(n_parallel=1, lane_refill=True)
+
+    class BatchOnly:
+        def run_population(self, configs):
+            return [1.0] * len(configs)
+
+    job = Job(0, {"x": 0}, "slot0", lambda j: None)
+    rm._busy["slot0"] = None
+    with pytest.warns(UserWarning, match="falling back"):
+        rm.run(job, BatchOnly())
+    assert job.wait(10.0) and job.result.score == 1.0
+
+
+def test_streaming_flight_failure_blast_radius():
+    """An engine that dies mid-flight fails its leased job; queued jobs fail
+    with a distinct reason instead of hanging the experiment."""
+
+    class DyingTarget:
+        def run_population(self, configs, scheduler=None, mesh=None):
+            scheduler.lease()  # takes one job, then the program explodes
+            raise RuntimeError("XLA fell over")
+
+    rm = VectorizedResourceManager(n_parallel=2, lane_refill=True)
+    done = []
+    jobs = [Job(i, {"x": i}, f"slot{i}", done.append) for i in range(2)]
+    for j in jobs:
+        rm._busy[j.resource_id] = None  # claim as get_available would
+        rm.run(j, DyingTarget())
+    for j in jobs:
+        assert j.wait(10.0)
+    assert all(j.status == JobStatus.FAILED for j in jobs)
+    assert "died mid-lane" in jobs[0].result.error
+    assert "died before lease" in jobs[1].result.error
+
+
+# -- satellite bugfix regressions -------------------------------------------------
+
+def test_streaming_anonymous_configs_get_distinct_streams():
+    """Two anonymous configs refilled through the SAME lane must not share a
+    data stream (the lane-index fallback would repeat across refills)."""
+    trial = PopulationTrial(ARCH, steps=2, batch=BATCH, seq=SEQ, seed=0,
+                            population=1, refill_idle_grace_s=0.0)
+    sch = FeedScheduler([{"learning_rate": 1e-3}, {"learning_rate": 1e-3}])
+    trial.run_population([], scheduler=sch)
+    assert sch.scores[0] != sch.scores[1]
+
+
+def test_serial_fallback_streams_are_distinct():
+    trial = PopulationTrial(ARCH, steps=2, batch=BATCH, seq=SEQ, seed=0)
+    a = trial({"learning_rate": 1e-3})
+    b = trial({"learning_rate": 1e-3})
+    assert a != b, "anonymous serial trials must not share stream 0"
+    shared = PopulationTrial(ARCH, steps=2, batch=BATCH, seq=SEQ, seed=0,
+                             per_trial_streams=False)
+    assert shared({"learning_rate": 1e-3}) == shared({"learning_rate": 1e-3})
+
+
+def test_negative_sentinel_streams_are_valid_and_distinct():
+    d = SyntheticLM(64, SEQ, BATCH, seed=3)
+    m0 = d.make_batch(1)
+    m1 = d.make_batch(1, stream=-1)
+    m2 = d.make_batch(1, stream=-2)
+    assert not np.array_equal(m1["tokens"], m0["tokens"])
+    assert not np.array_equal(m1["tokens"], m2["tokens"])
+    np.testing.assert_array_equal(m1["tokens"], d.make_batch(1, stream=-1)["tokens"])
+    # per-lane step cursors for refilled lanes
+    pb = d.make_population_batch([0, 3], [5, 6])
+    np.testing.assert_array_equal(pb["tokens"][0], d.make_batch(0, stream=5)["tokens"])
+    np.testing.assert_array_equal(pb["tokens"][1], d.make_batch(3, stream=6)["tokens"])
+
+
+def test_padding_lanes_do_not_disturb_scores():
+    cfgs = _cfgs(2)
+    wide = PopulationTrial(ARCH, steps=2, batch=BATCH, seq=SEQ, seed=0,
+                           population=4)
+    narrow = PopulationTrial(ARCH, steps=2, batch=BATCH, seq=SEQ, seed=0,
+                             population=2)
+    np.testing.assert_allclose(wide.run_population(cfgs),
+                               narrow.run_population(cfgs),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_per_trial_init_serial_population_equivalence():
+    cfgs = [{"learning_rate": 1e-3, "stream": 3}, {"learning_rate": 2e-3, "stream": 7}]
+    t = PopulationTrial(ARCH, steps=3, batch=BATCH, seq=SEQ, seed=0,
+                        population=2, per_trial_init=True)
+    serial = [t(dict(c)) for c in cfgs]
+    vec = t.run_population(cfgs)
+    np.testing.assert_allclose(vec, serial, rtol=1e-5, atol=1e-6)
+    shared_init = PopulationTrial(ARCH, steps=3, batch=BATCH, seq=SEQ, seed=0,
+                                  population=2).run_population(cfgs)
+    assert not np.allclose(shared_init, vec), \
+        "per-trial init must start trials from different weights"
+
+
+def test_scalar_batch_per_job_blast_radius():
+    """On the scalar fallback path, one raising config fails only its job."""
+    rm = VectorizedResourceManager(n_parallel=3)
+    done = []
+
+    def target(cfg):
+        if cfg["x"] == 1:
+            raise ValueError("bad config")
+        return float(cfg["x"])
+
+    jobs = [Job(i, {"x": i}, f"slot{i}", done.append) for i in range(3)]
+    for j in jobs:
+        rm._busy[j.resource_id] = None
+        rm.run(j, target)
+    for j in jobs:
+        assert j.wait(10.0)
+    assert jobs[1].status == JobStatus.FAILED
+    assert jobs[0].status == JobStatus.FINISHED and jobs[0].result.score == 0.0
+    assert jobs[2].status == JobStatus.FINISHED and jobs[2].result.score == 2.0
