@@ -26,7 +26,21 @@ the CPU smoke config:
   compiled program and immediately leases the next trial, so the inter-flight
   bubble disappears.  Wall-clock must be <= the inflight_stop row, and each
   trial's score must match the serial driver replayed at the trial's
-  *effective* budget (truncations included).
+  *effective* budget (truncations included);
+* **pbt_stream**       — Population-Based Training on the streaming engine
+  (``--pbt-streaming``): members live in lanes, exploit is a compiled donor
+  clone (``make_lane_clone``) and weights never visit the host — measured
+  against the generation-barriered *serial* PBT driver (``run_pbt_serial``:
+  one member at a time, host checkpoint restore + save every round) at equal
+  total train steps and shared decision RNG.  Scores must match per
+  (member, round); wall-clock must beat the serial driver by
+  ``PBT_STREAM_FLOOR`` on the 8-virtual-device mesh; the streaming side must
+  report ZERO host checkpoint round-trips;
+* **sha_rule_compare** — the cohort rung rule (batch-synchronous
+  ``--inflight-stop`` flights) vs the staggered history rule (the refill
+  engine's ``observe``) on a longer-horizon ASHA ladder: both are valid SHA
+  variants that can cut *different* lanes; this row quantifies how far their
+  cut counts and scores drift (informational — no pass criterion).
 
 All engines fold a per-trial ``stream`` id into the batch PRNG (independent
 per-trial data streams), so scores must agree trial-for-trial across engines.
@@ -68,6 +82,40 @@ REFILL_LADDER = [1] * 8 + [2] * 4 + [4] * 2 + [8] * 2
 # loss only orders by lr reliably from ~8 steps on (earlier it is transient
 # noise and the rule would cut at random)
 REFILL_MIN_ITER_UNITS = 4
+
+# streaming PBT vs the generation-barriered serial driver: equal total steps,
+# shared RNG.  The serial baseline runs K*ROUNDS rounds one member at a time
+# with 2 host checkpoint round-trips each; streaming runs ROUNDS*STEPS pop
+# steps with exploit as a device clone.  The committed 8-virtual-device run
+# shows well above the floor.
+PBT_STREAM_FLOOR = 1.2
+PBT_ROUNDS = 3
+PBT_ROUND_STEPS = 4
+# the PBT row times the dispatch/checkpoint overheads the streaming engine
+# eliminates, so it uses a smaller batch geometry than the throughput rows
+# (per-step compute on the 2-core CPU container would otherwise drown them);
+# the vmapped engine runs the flight — on virtual devices the sharded twin
+# adds only cross-device dispatch overhead at this scale and is covered by
+# the equivalence tests instead
+PBT_BATCH = 2
+PBT_SEQ = 16
+# streaming PBT reproduces the generation-barriered serial driver bit-for-bit
+# on this workload (shared decision RNG, shared per-member streams/init keys,
+# donor copies at round boundaries) — gate at the acceptance tolerance, well
+# below the engine-equivalence SCORE_TOL
+PBT_SCORE_TOL = 1e-6
+# lr capped below the divergence zone so the comparison is not hostage to a
+# borderline NaN flipping between engines
+PBT_SPACE = [
+    {"name": "learning_rate", "type": "float", "range": [1e-4, 5e-3], "scale": "log"},
+    {"name": "weight_decay", "type": "float", "range": [0.0, 0.2]},
+    {"name": "b2", "type": "float", "range": [0.9, 0.99]},
+]
+
+# longer-horizon ladder for the cohort-vs-staggered rung-rule comparison
+# (units of REFILL_UNIT steps; boundaries at 2/6/18 steps with eta=3)
+LONG_LADDER = [1] * 6 + [3] * 3 + [9] * 2 + [27] * 1
+LONG_MIN_ITER_UNITS = 1
 
 
 def _sample_configs(n_trials: int, seed: int):
@@ -111,6 +159,31 @@ def _refill_hook():
     return InFlightSuccessiveHalving(
         eta=2.0, min_iter=REFILL_MIN_ITER_UNITS * REFILL_UNIT,
         max_iter=max(REFILL_LADDER) * REFILL_UNIT)
+
+
+_LONG_LR = {1: 2e-4, 3: 5e-4, 9: 1e-3, 27: 2e-3}
+
+
+def _long_ladder_workload(seed: int):
+    """Longer-horizon mixed-budget configs for the rung-rule comparison."""
+    cfgs = _sample_configs(len(LONG_LADDER), seed + 2)
+    order = np.random.default_rng(seed + 2).permutation(len(LONG_LADDER))
+    units = np.asarray(LONG_LADDER)[order]
+    bad_promotion = int(np.flatnonzero(units == max(LONG_LADDER))[-1])
+    for i, (c, u) in enumerate(zip(cfgs, units)):
+        c["n_iterations"] = int(u)
+        c["learning_rate"] = _LONG_LR[int(u)] * (1.0 + 0.05 * (i % 3))
+        c["warmup_frac"] = 0.05
+    cfgs[bad_promotion]["learning_rate"] = _LONG_LR[1]
+    return cfgs
+
+
+def _long_hook():
+    from repro.core.proposer.early_stop import InFlightSuccessiveHalving
+
+    return InFlightSuccessiveHalving(
+        eta=3.0, min_iter=LONG_MIN_ITER_UNITS * REFILL_UNIT,
+        max_iter=max(LONG_LADDER) * REFILL_UNIT)
 
 
 def _feed_scheduler(cfgs):
@@ -172,11 +245,20 @@ def _probe_main(argv) -> None:
 
     # -- inflight-stop flights vs one continuous refill flight (same mesh) -----
     lcfgs = _ladder_workload(seed)
-    # warm the step + reset compiles so both rows time pre-compiled programs
+    # warm the step + lane-op compiles so both rows time pre-compiled programs
+    # (the streaming engine uses the masked init for multi-lane rounds and the
+    # single-lane splice for one-at-a-time refills — warm both)
     warm = PopulationTrial(arch, REFILL_UNIT, batch, seq, seed,
                            population=population, refill_idle_grace_s=0.0)
     warm.run_population([], mesh=mesh, scheduler=_feed_scheduler(
         _sample_configs(2, seed)))
+    wkeys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        jax.random.PRNGKey(0),
+        jax.numpy.arange(population, dtype=jax.numpy.uint32))
+    wst = pop.shard_population_state(
+        pop.init_population_state_from_keys(wkeys, tc), mesh)
+    pop.get_compiled_lane_op(tc, population, "splice", mesh=mesh)(
+        wst, jax.numpy.asarray(0, jax.numpy.int32), jax.random.PRNGKey(1))
 
     itrial = PopulationTrial(arch, REFILL_UNIT, batch, seq, seed,
                              population=population, early_stop=_refill_hook())
@@ -209,6 +291,118 @@ def _probe_main(argv) -> None:
         "scores": feed.ordered_scores(len(lcfgs)),
         "eff_steps": [int(feed.extras[i]["steps"]) for i in range(len(lcfgs))],
         "diverged": [bool(feed.extras[i]["diverged"]) for i in range(len(lcfgs))],
+    }
+
+    # -- streaming PBT vs generation-barriered serial PBT ----------------------
+    from repro.core.experiment import Experiment
+    from repro.core.proposer import make_proposer
+    from repro.core.search_space import SearchSpace
+    from repro.launch.hpo import run_pbt_serial
+
+    pbt_space = SearchSpace.from_json(PBT_SPACE)
+
+    def _pbt_proposer():
+        return make_proposer(
+            "pbt", pbt_space, maximize=True, seed=seed + 3,
+            population=population, n_generations=PBT_ROUNDS, streaming=True,
+            quantile=0.25)
+
+    def _pbt_stream(n_generations):
+        trial = PopulationTrial(arch, PBT_ROUND_STEPS, PBT_BATCH, PBT_SEQ,
+                                seed, population=population,
+                                per_trial_init=True)
+        exp = Experiment({
+            "proposer": "pbt", "parameter_config": PBT_SPACE,
+            "n_samples": population * n_generations, "n_parallel": population,
+            "target": "max", "seed": seed + 3, "population": population,
+            "n_generations": n_generations, "streaming": True,
+            "quantile": 0.25, "resource": "vectorized", "lane_refill": True},
+            trial)
+        scores = {}
+        exp.add_result_callback(lambda job: scores.__setitem__(
+            (job.config.get("pbt_member"), job.config.get("pbt_round")),
+            job.result.score if job.result else None))
+        t0 = time.time()
+        exp.run()
+        return time.time() - t0, scores, trial, exp
+
+    # warm every compiled program both drivers touch so the row times steady
+    # state: a one-round streaming experiment (pop step + splice + clone at
+    # the PBT batch geometry) and one serial hparam-step call
+    _pbt_stream(1)
+    wtrial = PopulationTrial(arch, PBT_ROUND_STEPS, PBT_BATCH, PBT_SEQ, seed,
+                             per_trial_init=True)
+    wtrial.serial_score_at({"learning_rate": 1e-3, "stream": -7}, 1)
+    wstate = pop.init_population_state_from_keys(
+        jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            jax.random.PRNGKey(0),
+            jax.numpy.arange(population, dtype=jax.numpy.uint32)), tc)
+    pop.get_compiled_lane_op(tc, population, "clone")(
+        wstate, jax.numpy.zeros(population, bool),
+        jax.numpy.arange(population, dtype=jax.numpy.int32))
+
+    ptrial_serial = PopulationTrial(arch, PBT_ROUND_STEPS, PBT_BATCH, PBT_SEQ,
+                                    seed, per_trial_init=True)
+    t0 = time.time()
+    serial_pbt = run_pbt_serial(ptrial_serial, _pbt_proposer())
+    dt_serial = time.time() - t0
+
+    dt_stream, stream_pbt, ptrial, exp = _pbt_stream(PBT_ROUNDS)
+    pbt_equiv = max(
+        abs(stream_pbt[k2] - serial_pbt[k2]) for k2 in serial_pbt
+    ) if set(stream_pbt) == set(serial_pbt) else float("inf")
+    res["pbt_stream"] = {
+        "serial_seconds": dt_serial, "stream_seconds": dt_stream,
+        "speedup": dt_serial / dt_stream,
+        "members": population, "rounds": PBT_ROUNDS,
+        "round_steps": PBT_ROUND_STEPS,
+        "batch": PBT_BATCH, "seq": PBT_SEQ,
+        "clones": ptrial.n_clones, "splices": ptrial.n_splices,
+        "keeps": exp.proposer.lifecycle_hook().n_keeps,
+        "donor_waits": ptrial.n_donor_waits
+                       + exp.proposer.lifecycle_hook().n_donor_waits,
+        "serial_host_ckpt_roundtrips": ptrial_serial.n_host_ckpt_roundtrips,
+        "stream_host_ckpt_roundtrips": ptrial.n_host_ckpt_roundtrips,
+        "equivalence_max_abs_diff": pbt_equiv,
+    }
+
+    # -- cohort vs staggered rung rule on the longer-horizon ladder ------------
+    long_cfgs = _long_ladder_workload(seed)
+    chook = _long_hook()
+    ctrial = PopulationTrial(arch, REFILL_UNIT, batch, seq, seed,
+                             population=population, early_stop=chook)
+    t0 = time.time()
+    cohort_scores = []
+    for i in range(0, len(long_cfgs), population):
+        cohort_scores.extend(
+            ctrial.run_population(long_cfgs[i:i + population], mesh=mesh))
+    dt_cohort = time.time() - t0
+    shook = _long_hook()
+    strial2 = PopulationTrial(arch, REFILL_UNIT, batch, seq, seed,
+                              population=population, early_stop=shook,
+                              refill_idle_grace_s=0.0)
+    sfeed = _feed_scheduler(long_cfgs)
+    t0 = time.time()
+    strial2.run_population([], mesh=mesh, scheduler=sfeed)
+    dt_stag = time.time() - t0
+    stag_scores = sfeed.ordered_scores(len(long_cfgs))
+    n_disagree = sum(1 for a, b in zip(cohort_scores, stag_scores)
+                     if abs(a - b) > 1e-3)
+    res["sha_rule_compare"] = {
+        "trials": len(long_cfgs), "population": population,
+        "ladder_units": LONG_LADDER,
+        "cohort": {"seconds": dt_cohort, "truncated": chook.n_truncated,
+                   "reclaimed": chook.n_reclaimed,
+                   "best_trial": int(np.argmax(cohort_scores)),
+                   "best_score": float(max(cohort_scores))},
+        "staggered": {"seconds": dt_stag, "truncated": shook.n_truncated,
+                      "reclaimed": shook.n_reclaimed,
+                      "best_trial": int(np.argmax(stag_scores)),
+                      "best_score": float(max(stag_scores)),
+                      "eff_steps": [int(sfeed.extras[i]["steps"])
+                                    for i in range(len(long_cfgs))]},
+        "n_score_disagreements": n_disagree,
+        "same_best_trial": int(np.argmax(cohort_scores)) == int(np.argmax(stag_scores)),
     }
     print(json.dumps(res))
 
@@ -296,6 +490,10 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
     results["sharded"] = dict(probe["sharded"], n_devices=probe["n_devices"],
                               vmapped_same_mesh=probe["vmapped"])
 
+    # -- streaming PBT + rung-rule comparison (same 8-device subprocess) -------
+    results["pbt_stream"] = dict(probe["pbt_stream"])
+    results["sha_rule_compare"] = dict(probe["sha_rule_compare"])
+
     # -- inflight-stop flights vs one continuous refill flight -----------------
     results["inflight_stop"] = dict(probe["inflight_stop"])
     refill = dict(probe["refill"])
@@ -331,6 +529,7 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
                           / results["sharded"]["vmapped_same_mesh"]["trials_per_sec"])
     refill_vs_inflight = (results["inflight_stop"]["seconds"]
                           / results["refill"]["seconds"])
+    pbt = results["pbt_stream"]
     ok = (
         speedup_vmap >= SPEEDUP_FLOOR
         and sharded_vs_vmapped >= SHARDED_FLOOR
@@ -340,6 +539,9 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
         and equiv <= SCORE_TOL
         and refill_vs_inflight >= REFILL_FLOOR
         and refill_equiv <= SCORE_TOL
+        and pbt["speedup"] >= PBT_STREAM_FLOOR
+        and pbt["equivalence_max_abs_diff"] <= PBT_SCORE_TOL
+        and pbt["stream_host_ckpt_roundtrips"] == 0
     )
     out = {
         "arch": arch, "n_trials": n_trials, "steps": steps,
@@ -349,8 +551,10 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
         "speedup_compile_once_vs_serial": speedup_once,
         "sharded_vs_vmapped_same_mesh": sharded_vs_vmapped,
         "refill_vs_inflight_stop_speedup": refill_vs_inflight,
+        "pbt_stream_vs_serial_speedup": pbt["speedup"],
         "equivalence_max_abs_diff": equiv,
         "refill_equivalence_max_abs_diff": refill_equiv,
+        "pbt_equivalence_max_abs_diff": pbt["equivalence_max_abs_diff"],
         "pass": bool(ok),
         "paper_claim": (
             f"population engines: vmapped {speedup_vmap:.1f}x trials/sec over "
@@ -359,7 +563,11 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
             f"vmapped on the same mesh; continuous lane refill "
             f"{refill_vs_inflight:.2f}x the inflight-stop flights on the same "
             f"ASHA ladder (scores = serial driver at effective budgets); "
-            f"compiles {results['serial_recompile']['compiles']} -> 1"
+            f"streaming PBT {pbt['speedup']:.1f}x the generation-barriered "
+            f"serial PBT driver at equal total steps (scores equal, "
+            f"{pbt['serial_host_ckpt_roundtrips']} -> 0 host checkpoint "
+            f"round-trips); compiles "
+            f"{results['serial_recompile']['compiles']} -> 1"
         ),
     }
     with open(OUT_PATH, "w") as f:

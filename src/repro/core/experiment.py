@@ -90,6 +90,26 @@ class Experiment:
                     f"{self.exp_config.get('resource', 'local')!r} does not "
                     f"support streaming flights (use 'vectorized' or 'sharded')"
                 )
+        if (self.exp_config.get("lane_refill")
+                and getattr(target, "per_trial_streams", True) is False):
+            # refill was an *implicit* per-trial-stream assumption once; a
+            # shared-stream target must fail at construction, not mid-flight
+            # (a refilled lane has to replay its own stream from its step 0)
+            raise ValueError(
+                "lane_refill requires per-trial data streams: the target was "
+                "built with per_trial_streams=False (drop --shared-stream)"
+            )
+
+        # lifecycle passthrough: a streaming proposer (PBT) exposes the
+        # engine-facing half of its exploit/explore rule via lifecycle_hook();
+        # targets with a `lifecycle` slot (PopulationTrial) get it wired here
+        # so the lane-refill engine can execute keep/clone directives as
+        # compiled lane ops.
+        hook_factory = getattr(self.proposer, "lifecycle_hook", None)
+        if hook_factory is not None and hasattr(self.target, "lifecycle"):
+            hook = hook_factory()
+            if hook is not None and getattr(self.target, "lifecycle") is None:
+                self.target.lifecycle = hook
 
         self.deadline_s = self.exp_config.get("job_deadline_s")
         self.max_retries = int(self.exp_config.get("max_retries", 1))
@@ -235,9 +255,13 @@ class Experiment:
             for r in resources[len(pairs):]:
                 self.rm.release(r)
 
-        # aup.finish(): drain stragglers
+        # aup.finish(): drain stragglers, then let the resource manager close
+        # any live streaming flight instead of lingering on its idle grace
         with self._cond:
             self._drain_finished_locked()
+        rm_finish = getattr(self.rm, "finish", None)
+        if rm_finish is not None:
+            rm_finish()
         self.db.finish_experiment(self.exp_id)
         self.wall_time_s = time.time() - t0
         return self.best()

@@ -17,10 +17,16 @@ the mechanism the paper uses so Hyperband can resume/extend training
 (§III-A2).  ``replay(rows)`` rebuilds internal state from the tracking DB for
 crash-resume; it relies only on those auxiliary keys, never on in-memory state.
 
-Optional protocol: rung-based proposers (ASHA, Hyperband, BOHB) additionally
+Optional protocols: rung-based proposers (ASHA, Hyperband, BOHB) additionally
 expose ``inflight_hook(steps_per_unit)`` returning a stateless-per-flight
 early-stop rule the population engines apply *between* proposals — see
-``early_stop.InFlightSuccessiveHalving``.
+``early_stop.InFlightSuccessiveHalving``.  Lifecycle proposers (streaming
+PBT) expose ``lifecycle_hook()`` returning the shared decision/registry
+object (``pbt.PBTLifecycle``) the lane-refill engine and ``LaneScheduler``
+consult on lane retirement and lease, so a losing member is refilled in
+place as a donor-clone (compiled ``make_lane_clone``) instead of through a
+host checkpoint.  The Experiment wires the hook onto targets exposing a
+``lifecycle`` attribute automatically.
 """
 from __future__ import annotations
 

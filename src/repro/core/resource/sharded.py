@@ -17,6 +17,15 @@ with 0-budget lanes).  ``_run_batch`` forwards the mesh to the target's
 communication.  Targets without a ``mesh`` kwarg still work (single-device
 vmapped fallback), so the manager stays drop-in compatible with every
 existing population target.
+
+The streaming protocols ride through unchanged from the vectorized base: a
+lane-refill flight leases jobs into mesh lanes and refills them with the
+*sharded* lane-lifecycle twins (``get_compiled_lane_op(..., mesh=...)`` —
+masked init / single-lane splice / donor clone), and streaming PBT's
+clone/splice dispatch plus donor lease pinning (the ``lifecycle`` hook handed
+to the ``LaneScheduler`` in ``_flush``) work across mesh boundaries: the
+sharded clone ``all_gather``s the population axis, so a donor's weights can
+live on a different device than the lane inheriting them.
 """
 from __future__ import annotations
 

@@ -29,6 +29,15 @@ flight.  Freed lanes are re-initialized **inside the compiled program**
 (``repro.train.population.make_reset_lanes``), so the whole experiment can be
 one continuous flight with no inter-batch bubble.
 
+Lifecycle dispatch (streaming PBT): when the target carries a ``lifecycle``
+hook (``core.proposer.pbt.PBTLifecycle``, wired by the Experiment from the
+proposer's ``lifecycle_hook()``), the flush hands it to the ``LaneScheduler``
+so jobs carrying lane-lifecycle directives are sequenced safely: a *donor*
+member whose weights a pending clone still needs is deferred at lease time
+(donor lease pinning) until the engine executes the compiled clone/splice op
+— the engine-side half of the dispatch lives in
+``PopulationTrial._run_streaming``.
+
 Flush policy:
 
 * the buffer flushes when all ``n_slots`` are bound (a full population), and
@@ -84,17 +93,28 @@ class LaneScheduler:
     ``lease``/``complete``/``fail`` from the flight worker thread, ``close``
     from the flight worker after the engine returns.  All state is guarded by
     one lock; job completion callbacks fire outside it.
+
+    ``lifecycle`` (optional) is a lane-lifecycle hook (e.g. the streaming PBT
+    proposer's ``PBTLifecycle``): jobs it reports ``lease_blocked`` — a
+    ``keep`` round for a member pinned as a pending clone's donor — are
+    rotated to the back of the queue instead of leased, so the donor's lane
+    cannot resume training (and drift its weights) before the clone's device
+    copy executes.  ``n_donor_waits`` counts those deferrals.
     """
 
-    def __init__(self, on_stream: Optional[Callable[[], None]] = None) -> None:
+    def __init__(self, on_stream: Optional[Callable[[], None]] = None,
+                 lifecycle: Any = None) -> None:
         self._lock = threading.Lock()
         self._queue: Deque[Job] = deque()
         self._live: Dict[int, Job] = {}
         self._next_handle = 0
         self._on_stream = on_stream  # fired per streamed result, mid-flight
+        self._lifecycle = lifecycle
         self.closed = False
         self.n_leased = 0
         self.n_streamed = 0
+        self.n_donor_waits = 0
+        self._donor_waited: set = set()  # job ids counted once, not per poll
 
     # -- manager side -----------------------------------------------------------
     def offer(self, job: Job) -> bool:
@@ -118,12 +138,25 @@ class LaneScheduler:
 
     # -- engine side ------------------------------------------------------------
     def lease(self) -> Optional[Tuple[int, dict]]:
-        """Next queued job as ``(handle, config)``, or None when the queue is
-        empty.  Jobs killed/lost while buffered are skipped."""
+        """Next leasable job as ``(handle, config)``, or None when the queue
+        holds nothing leasable right now.  Jobs killed/lost while buffered are
+        skipped (a dead clone releases its donor pin); jobs the lifecycle hook
+        blocks — a donor's next round while its weights await a pending clone
+        copy — rotate to the back and stay queued."""
         with self._lock:
-            while self._queue:
+            for _ in range(len(self._queue)):
                 job = self._queue.popleft()
                 if job.status != JobStatus.PENDING:
+                    # killed/lost while buffered: the Experiment's retry path
+                    # re-offers the same config, so any donor pin stays held
+                    # until the retried clone executes (or fails for good)
+                    continue
+                if self._lifecycle is not None and self._lifecycle.lease_blocked(
+                        dict(job.config)):
+                    self._queue.append(job)
+                    if job.job_id not in self._donor_waited:
+                        self._donor_waited.add(job.job_id)
+                        self.n_donor_waits += 1
                     continue
                 handle = self._next_handle
                 self._next_handle += 1
@@ -205,6 +238,7 @@ class VectorizedResourceManager(ResourceManager):
         # latched when a runner advertises a scheduler kwarg (e.g. **kwargs)
         # but never leases from it — all later flushes take the batch path
         self._streaming_broken = False
+        self._flight_thread: Optional[threading.Thread] = None
 
     # -- Algorithm 1 surface ----------------------------------------------------
     def run(self, job: Job, target: Callable) -> None:
@@ -268,7 +302,10 @@ class VectorizedResourceManager(ResourceManager):
                     "'scheduler' kwarg on run_population; falling back to "
                     "batch-synchronous flights", stacklevel=2)
             if streaming:
-                sch = LaneScheduler(on_stream=self._note_streamed)
+                sch = LaneScheduler(
+                    on_stream=self._note_streamed,
+                    lifecycle=getattr(target, "lifecycle", None),
+                )
                 for job in batch:
                     sch.offer(job)
                 self._scheduler = sch
@@ -367,9 +404,12 @@ class VectorizedResourceManager(ResourceManager):
                 if has_pending:
                     self._flush(target)
 
-        threading.Thread(
+        t = threading.Thread(
             target=_worker, name=f"popflight-{self.n_batches}", daemon=True
-        ).start()
+        )
+        with self._lock:
+            self._flight_thread = t
+        t.start()
 
     def _note_streamed(self) -> None:
         # live counter: the experiment loop reads it while flights still run
@@ -383,6 +423,25 @@ class VectorizedResourceManager(ResourceManager):
         if scheduler is not None:
             return runner(configs, scheduler=scheduler)
         return runner(configs)
+
+    def finish(self) -> None:
+        """The experiment loop is done: close the live streaming flight now
+        instead of letting it linger for its idle grace (and burn a polling
+        loop until the grace expires), then join the flight worker so no
+        thread is still mid-XLA-call when the caller tears the process down.
+        Any jobs the close hands back were settled already — the loop only
+        exits with nothing running — but they re-buffer defensively rather
+        than being dropped."""
+        with self._lock:
+            sch = self._scheduler
+            worker = self._flight_thread
+        if sch is not None:
+            leftovers, _ = sch.close()
+            if leftovers:
+                with self._lock:
+                    self._pending = leftovers + self._pending
+        if worker is not None and worker is not threading.current_thread():
+            worker.join(timeout=30.0)
 
     def kill(self, job: Job) -> None:
         # the batch thread cannot be interrupted; mark KILLED so the eventual

@@ -56,6 +56,18 @@ of batch-synchronous flushes.  ``--per-trial-init`` additionally gives every
 trial its own init weights (stream id folded into the init key, identically
 in serial and population modes).
 
+``--pbt-streaming`` puts Population-Based Training on the same streaming
+engine (implies ``--lane-refill``): each PBT member owns a lane, trains one
+round per job, and its next job carries a lane-lifecycle directive — ``keep``
+(continue in place, no device op) or ``clone`` (the lane inherits a donor
+lane's weights AND optimizer state through the compiled ``make_lane_clone``
+op).  Exploit/explore runs as a quantile rule over a sliding member-score
+window; by default rounds are gated so decisions match the generation-
+barriered serial driver (``run_pbt_serial``) decision-for-decision, while
+``--pbt-async`` unlocks the fully staggered rule.  Either way the weights
+never visit the host — no ``pbt_ckpt`` checkpoint round-trip, no generation
+bubble (``pbt_host_ckpt_roundtrips`` stays 0 in the CLI telemetry).
+
 Vectorized/sharded mode is only valid when every proposal varies *traced*
 knobs: all trials must share the architecture and batch geometry.  Per-trial
 architecture params (d_model, n_layers, ... — e.g. the NAS/EAS space) change
@@ -155,7 +167,7 @@ class PopulationTrial:
     def __init__(self, arch: str, steps: int, batch: int, seq: int, seed: int,
                  population: int = 0, per_trial_streams: bool = True,
                  early_stop=None, per_trial_init: bool = False,
-                 refill_idle_grace_s: float = 0.25):
+                 refill_idle_grace_s: float = 0.25, lifecycle=None):
         self.arch = arch
         self.steps = int(steps)
         self.batch = int(batch)
@@ -165,10 +177,20 @@ class PopulationTrial:
         self.per_trial_streams = bool(per_trial_streams)
         self.per_trial_init = bool(per_trial_init)
         self.early_stop = early_stop
+        # lane-lifecycle hook (streaming PBT): maps retire->refill directives
+        # (keep / clone / init) onto compiled lane ops; wired by the
+        # Experiment from the proposer's lifecycle_hook()
+        self.lifecycle = lifecycle
         # how long an empty streaming flight lingers for late proposals before
         # returning its lanes (0 for self-contained feeds, e.g. benchmarks)
         self.refill_idle_grace_s = float(refill_idle_grace_s)
         self.n_refills = 0          # lanes reused within a streaming flight
+        self.n_clones = 0           # donor-clone lane ops executed on device
+        self.n_splices = 0          # single-lane splice inits executed
+        self.n_donor_waits = 0      # leases parked waiting on a busy donor lane
+        self.n_lineage_resets = 0   # keep/clone downgraded to init (state lost)
+        self.n_host_ckpt_roundtrips = 0  # weights ever pulled to host (serial PBT only)
+        self._flight_epoch = 0
         self._tc = None
         self._data = None
         self._serial_seq = 0  # fallback stream counter for anonymous configs
@@ -352,14 +374,36 @@ class PopulationTrial:
         """Continuous lane-refill flight (Algorithm 1's busy-resource invariant
         *inside* one compiled program).
 
-        Lane lifecycle: a lane **leases** a job from the scheduler, is reset
-        in place to that trial's init weights (``reset_lanes`` — a traced
-        per-lane mask, no recompile), trains on its own data stream from its
-        own local step 0, and **retires** when its budget runs out, the rung
-        rule truncates it, or it diverges.  Retirement streams the job's
-        result out immediately (``scheduler.complete``) and frees the lane
-        for the next lease — so losing lanes hand their device time to fresh
-        proposals mid-flight instead of idling until the whole batch drains.
+        Lane lifecycle: a lane **leases** a job from the scheduler, runs one
+        lane-lifecycle op to take that trial's weights, trains on its own data
+        stream, and **retires** when its budget runs out, the rung rule
+        truncates it, or it diverges.  Retirement streams the job's result out
+        immediately (``scheduler.complete``) and frees the lane for the next
+        lease — so losing lanes hand their device time to fresh proposals
+        mid-flight instead of idling until the whole batch drains.
+
+        The lifecycle op per lease (all compiled, cached, never a host
+        checkpoint round-trip):
+
+        * default — **splice** (``make_lane_splice``): one fresh
+          ``init_train_state`` written into exactly the target lane via
+          ``dynamic_update_index_in_dim`` (not a K-wide vmap init);
+        * ``pbt_lifecycle == "keep"`` — **no device op at all**: the member's
+          lane keeps its weights + optimizer state; only the traced hparams /
+          budget / data cursor advance to the next round;
+        * ``pbt_lifecycle == "clone"`` — **donor clone**
+          (``make_lane_clone``): the lane inherits the donor member's weights
+          AND optimizer state across the population axis, with the proposer's
+          perturbed hparams installed in the traced stack.  A clone whose
+          donor lane is still mid-round is *parked* until the donor retires
+          (donor lease pinning keeps the donor from starting its next round
+          first), so the copy always reads round-boundary weights.
+
+        Schedule/budget bases: a keep/clone lane's device step counter is
+        cumulative across rounds, so its traced ``total_steps`` is (steps
+        already applied in the inherited state) + (this round's budget), and
+        its data cursor continues the member's own stream at
+        ``round * round_steps``.
 
         The scheduler needs three things: ``lease() -> (handle, config) |
         None``, ``complete(handle, score, extra)``, and optionally a
@@ -374,10 +418,9 @@ class PopulationTrial:
 
         from ..optim.hparams import stack_hparams
         from ..train.population import (
+            get_compiled_lane_op,
             get_compiled_population_step,
-            get_compiled_reset_lanes,
             get_compiled_sharded_population_step,
-            get_compiled_sharded_reset_lanes,
             init_population_state_from_keys,
             pad_population,
             shard_population_state,
@@ -394,22 +437,33 @@ class PopulationTrial:
         if mesh is not None:
             pstep = get_compiled_sharded_population_step(
                 tc, k, mesh=mesh, per_trial_batch=True)
-            reset_fn = get_compiled_sharded_reset_lanes(tc, k, mesh=mesh)
         else:
             pstep = get_compiled_population_step(tc, k, per_trial_batch=True)
-            reset_fn = get_compiled_reset_lanes(tc, k)
+        # single lane -> splice (one init, traced lane index); several lanes in
+        # one round -> the masked from-keys reset (one dispatch for the batch)
+        splice_fn = get_compiled_lane_op(tc, k, "splice", mesh=mesh)
+        init_fn = get_compiled_lane_op(tc, k, "init", mesh=mesh)
+        lifecycle = self.lifecycle
+        clone_fn = (get_compiled_lane_op(tc, k, "clone", mesh=mesh)
+                    if lifecycle is not None else None)
+        self._flight_epoch += 1
+        epoch = self._flight_epoch
 
-        # host-side lane table (all lane-local: budgets/steps restart per lease)
+        # host-side lane table (lane-local: budgets/steps restart per lease;
+        # lineage lanes additionally carry cumulative bases across rounds)
         handles: list = [None] * k
         used = [False] * k
+        lineage: list = [None] * k           # member whose weights live here
+        lane_round = [0] * k                 # pbt_round of the current lease
+        rounds_done: dict = {}               # member -> rounds completed here
         starts = np.zeros(k, np.int64)       # global step of the lane's local 0
-        budgets = np.zeros(k, np.float64)
+        base_data = np.zeros(k, np.int64)    # member data cursor at local 0
+        applied0 = np.zeros(k, np.int64)     # device opt.step at lease time
+        lane_applied = np.zeros(k, np.int64)  # device opt.step at last retire
+        budgets = np.zeros(k, np.float64)    # this round's budget (lane-local)
         streams = [-(i + 1) for i in range(k)]     # idle = sentinel stream
         hps = [self._hparams({}, 0) for _ in range(k)]
         lane_keys = [self._init_key(s) for s in streams]
-        # every lane — initial fill and refill alike — takes the vmapped
-        # from-keys init path, so a refilled lane is bit-identical to the same
-        # trial run in a fresh flight
         pstate = init_population_state_from_keys(jnp.stack(lane_keys), tc)
         if mesh is not None:
             pstate = shard_population_state(pstate, mesh)
@@ -417,9 +471,18 @@ class PopulationTrial:
         hook = self.early_stop
         s = 0
         idle_deadline = None
-        # idle lanes consume a constant sentinel batch (stream -(lane+1) at
-        # step 0, never applied) — synthesize it once per lane, not per step
+        grace = self.refill_idle_grace_s
+        if lifecycle is not None:
+            # a lifecycle flight must survive the proposer's callback round
+            # trip between rounds: losing the flight loses every member's
+            # device state (keep/clone would degrade to re-inits)
+            grace = max(grace, 2.0)
+        # idle lanes consume a constant batch (their stream at step 0, never
+        # applied) — synthesize it once per (lane, stream), not per step
         idle_cache: dict = {}
+        parked: list = []   # leases that cannot run yet (busy donor / no lane)
+        donor_waited: set = set()  # handles counted once, not per re-poll
+        force_parked = False  # grace expired: degrade stuck directives to init
         # Retirements and rung boundaries happen at *host-known* global steps
         # (starts + budgets / starts + boundary), so the loop only materializes
         # device flags at those event steps instead of syncing every step —
@@ -469,82 +532,312 @@ class PopulationTrial:
                         bad = bool(diverged[lane]) or not np.isfinite(last[lane])
                         score = self.DIVERGED_SCORE if bad else -float(last[lane])
                         if (hook is not None and diverged[lane]
-                                and budgets[lane] > applied[lane]):
+                                and budgets[lane] > applied[lane] - applied0[lane]):
                             # same telemetry the batch engine keeps: a diverged
                             # lane's remaining budget is dead weight reclaimed
                             hook.n_reclaimed += 1
                         scheduler.complete(handles[lane], score, extra={
-                            "steps": int(applied[lane]),
+                            "steps": int(applied[lane] - applied0[lane]),
+                            "total_steps": int(applied[lane]),
                             "diverged": bool(diverged[lane]),
                             "lane": lane,
                         })
                         handles[lane] = None
                         budgets[lane] = 0.0
-                        streams[lane] = -(lane + 1)
-                        hps[lane] = self._hparams({}, 0)
-                        php_dirty = True  # restack so the retired lane freezes
-            # 2) splice pending proposals into freed lanes (one traced reset
-            # covers every splice this round; no device sync needed)
-            if any(h is None for h in handles):
-                reset_mask = np.zeros(k, bool)
-                for lane in range(k):
-                    if handles[lane] is not None:
-                        continue
-                    lease = scheduler.lease()
-                    if lease is None:
-                        break
-                    handle, cfg = lease
+                        lane_applied[lane] = int(applied[lane])
+                        if lineage[lane] is not None:
+                            rounds_done[lineage[lane]] = lane_round[lane] + 1
+                        if lineage[lane] is None:
+                            streams[lane] = -(lane + 1)
+                            hps[lane] = self._hparams({}, 0)
+                            php_dirty = True  # restack: the retired lane freezes
+                        # a lineage lane freezes without a restack: its device
+                        # step counter equals its traced total_steps (or the
+                        # divergence latch holds it) until the next directive
+            # 2) lease pending proposals (parked ones first) and dispatch each
+            # through its lane-lifecycle op
+            pending, parked = parked + self._drain_leases(scheduler), []
+            if pending:
+                # clones first: a clone must read its donor's round-boundary
+                # weights, so it has to execute before a same-round keep
+                # re-activates the donor lane (stable sort keeps arrival order
+                # within each group)
+                pending.sort(
+                    key=lambda hc: hc[1].get("pbt_lifecycle") != "clone")
+                free = [i for i in range(k)
+                        if handles[i] is None and lineage[i] is None]
+                clone_jobs: list = []   # (lane, donor_lane, cfg)
+                splice_jobs: list = []  # lanes taking a fresh init
+                for handle, cfg in pending:
+                    directive = cfg.get("pbt_lifecycle")
+                    member = cfg.get("pbt_member")
+                    lane = donor_lane = None
+                    if lifecycle is not None and directive in ("keep", "clone"):
+                        lane = lifecycle.lane_of(member, epoch)
+                        if force_parked:
+                            if lane is not None and handles[lane] is not None:
+                                # two stuck rounds of one member forced in the
+                                # same pass: the first took the lane, the
+                                # second waits for it (never overwrite a live
+                                # lease's handle)
+                                parked.append((handle, cfg))
+                                continue
+                            # the flight idled out with these leases stuck
+                            # (dead-flight resume, a clone that will never
+                            # arrive): degrade to a fresh init, loudly counted
+                            self.n_lineage_resets += 1
+                            if directive == "clone":
+                                lifecycle.clone_done(cfg)
+                            directive = "init" if lane is not None else None
+                        else:
+                            if lane is not None and handles[lane] is not None:
+                                # async mode: member's lane is still mid-round
+                                parked.append((handle, cfg))
+                                continue
+                            if int(cfg.get("pbt_round", 0)) \
+                                    != rounds_done.get(member, 0):
+                                # rounds run in round order: a later round
+                                # offered early (raw feeds, resumes) waits for
+                                # its predecessor instead of jumping the queue
+                                parked.append((handle, cfg))
+                                continue
+                            if directive == "keep" and lane is not None \
+                                    and lifecycle.pinned(member):
+                                # donor lease pinning: a pending clone still
+                                # needs this lane's weights — don't resume yet
+                                if handle not in donor_waited:
+                                    donor_waited.add(handle)
+                                    self.n_donor_waits += 1
+                                parked.append((handle, cfg))
+                                continue
+                            if directive == "clone" and lane is not None:
+                                donor_lane = lifecycle.lane_of(
+                                    cfg.get("pbt_donor"), epoch)
+                                if donor_lane is not None and \
+                                        handles[donor_lane] is not None:
+                                    # donor mid-round: wait for its boundary so
+                                    # the copy reads round-boundary weights
+                                    if handle not in donor_waited:
+                                        donor_waited.add(handle)
+                                        self.n_donor_waits += 1
+                                    parked.append((handle, cfg))
+                                    continue
+                                if donor_lane is None:
+                                    # donor state lost (dead flight / resume):
+                                    # degrade to a fresh init, loudly counted
+                                    self.n_lineage_resets += 1
+                                    lifecycle.clone_done(cfg)
+                                    directive = "init"
+                            if lane is None:
+                                # keep/clone for a member whose state is gone
+                                # (crash-resume): re-init it in a free lane
+                                self.n_lineage_resets += 1
+                                if directive == "clone":
+                                    lifecycle.clone_done(cfg)
+                                directive = None  # take the init path below
+                    if lane is None:
+                        if not free:
+                            parked.append((handle, cfg))  # every lane is busy
+                            continue
+                        lane = free.pop(0)
+                        directive = "init"
+                        if lifecycle is not None and member is not None:
+                            lifecycle.bind(member, lane, epoch)
+                            lineage[lane] = member
                     # same resolution as the serial driver: explicit stream /
                     # job id, else a distinct lease-order stream — never the
                     # lane index, which repeats across refills of one lane
                     sid = self._serial_stream_of(cfg)
+                    round_steps = int(self._n_steps(cfg))
                     handles[lane] = handle
                     starts[lane] = s
-                    budgets[lane] = float(self._n_steps(cfg))
+                    lane_round[lane] = int(cfg.get("pbt_round", 0))
+                    base_data[lane] = lane_round[lane] * round_steps
+                    budgets[lane] = float(round_steps)
                     streams[lane] = sid
-                    hps[lane] = self._hparams(cfg, int(budgets[lane]))
-                    lane_keys[lane] = self._init_key(sid)
-                    reset_mask[lane] = True
-                    if used[lane]:
+                    if directive == "keep":
+                        base_sched = int(lane_applied[lane])
+                    elif directive == "clone":
+                        base_sched = int(lane_applied[donor_lane])
+                        clone_jobs.append((lane, donor_lane, cfg))
+                    else:  # init / splice
+                        base_sched = 0
+                        lane_keys[lane] = self._init_key(sid)
+                        splice_jobs.append(lane)
+                        if used[lane]:
+                            self.n_refills += 1
+                    if directive == "clone" and used[lane]:
                         self.n_refills += 1
+                    applied0[lane] = base_sched
                     used[lane] = True
+                    hps[lane] = self._hparams(cfg, base_sched + round_steps)
                     php_dirty = True
-                if reset_mask.any():
-                    pstate = reset_fn(
+                # device ops: clones first (they read donor lanes, which are
+                # never splice targets), then one splice per fresh-init lane
+                if clone_jobs:
+                    mask = np.zeros(k, bool)
+                    donor_idx = np.arange(k)
+                    for lane, donor_lane, _ in clone_jobs:
+                        mask[lane] = True
+                        donor_idx[lane] = donor_lane
+                    pstate = clone_fn(pstate, jnp.asarray(mask),
+                                      jnp.asarray(donor_idx, jnp.int32))
+                    self.n_clones += len(clone_jobs)
+                    for _, _, cfg in clone_jobs:
+                        lifecycle.clone_done(cfg)
+                if len(splice_jobs) == 1:
+                    lane = splice_jobs[0]
+                    pstate = splice_fn(
+                        pstate, jnp.asarray(lane, jnp.int32), lane_keys[lane])
+                    self.n_splices += 1
+                elif splice_jobs:
+                    # several lanes this round (initial fill, mass refill):
+                    # one masked reset beats a dispatch per lane
+                    reset_mask = np.zeros(k, bool)
+                    reset_mask[splice_jobs] = True
+                    pstate = init_fn(
                         pstate, jnp.asarray(reset_mask), jnp.stack(lane_keys))
                 live = [i for i in range(k) if handles[i] is not None]
+                force_parked = False
             if php_dirty:
                 php = stack_hparams(hps)
             if not live:
                 # 3) flight idle: linger briefly for late proposals (Algorithm 1
                 # may be mid-callback), then return the lanes
-                if getattr(scheduler, "closed", False):
+                if getattr(scheduler, "closed", False) and not parked:
                     break
                 now = _time.time()
                 if idle_deadline is None:
-                    idle_deadline = now + self.refill_idle_grace_s
+                    idle_deadline = now + grace
                 if now >= idle_deadline:
+                    if any(c.get("pbt_lifecycle") in ("keep", "clone")
+                           for _, c in parked):
+                        # stuck lifecycle leases (their predecessor/donor is
+                        # never coming): re-init them instead of stranding
+                        force_parked = True
+                        idle_deadline = None
+                        continue
                     break
                 _time.sleep(0.002)
                 continue
             idle_deadline = None
             next_event = _next_event_step()
             # 4) one population step: lane i consumes ITS OWN stream at ITS OWN
-            # local step (refilled lanes replay from 0 mid-flight)
+            # cursor (a refilled lane replays from 0; a keep/clone round
+            # continues the member's cursor at round * round_steps)
             per = []
             for i in range(k):
                 if handles[i] is not None:
-                    per.append(data.make_batch(int(s - starts[i]), stream=streams[i]))
+                    per.append(data.make_batch(
+                        int(base_data[i] + s - starts[i]), stream=streams[i]))
                 else:
-                    b = idle_cache.get(i)
+                    key = (i, streams[i])
+                    b = idle_cache.get(key)
                     if b is None:
-                        b = idle_cache[i] = data.make_batch(0, stream=streams[i])
+                        b = idle_cache[key] = data.make_batch(0, stream=streams[i])
                     per.append(b)
             batch = {key: np.stack([p[key] for p in per]) for key in per[0]}
             pstate, _ = pstep(pstate, batch, php)
             s += 1
         self.last_flight_steps = s
         return []
+
+    @staticmethod
+    def _drain_leases(scheduler) -> list:
+        out = []
+        while True:
+            lease = scheduler.lease()
+            if lease is None:
+                return out
+            out.append(lease)
+
+
+class _ReplayJob:
+    """Minimal duck-typed job for feeding a proposer outside Algorithm 1."""
+
+    def __init__(self, cfg):
+        self.config = cfg
+
+
+def run_pbt_serial(trial: PopulationTrial, proposer) -> dict:
+    """Generation-barriered serial PBT baseline (host checkpoint round-trips).
+
+    Drives a *streaming-mode* ``PBTProposer`` with an explicit generation
+    barrier: each pass collects one whole generation of member configs, runs
+    every member's round serially (one trial at a time on the compile-once
+    step), and takes weights according to the round's lifecycle directive
+    from HOST checkpoints — ``keep`` reloads the member's own checkpoint,
+    ``clone`` reloads the donor's (the pre-refactor ``pbt_ckpt`` protocol the
+    streaming engine eliminates).  Every round costs two host round-trips
+    (restore + checkpoint), counted in ``trial.n_host_ckpt_roundtrips``.
+
+    Because the decision rule, RNG, per-member data streams, schedule bases
+    and init keys are all shared with the streaming engine, a same-seed
+    streaming run must reproduce these scores (this is the equivalence
+    baseline the benchmarks and tests pin).  Returns ``{(member, round):
+    score}``.
+    """
+    import jax
+
+    from ..train.train_step import get_compiled_train_step, init_train_state
+
+    tc, data = trial._setup()
+    step_fn = get_compiled_train_step(tc)
+    ckpts: dict = {}
+    applied: dict = {}
+    scores: dict = {}
+    hook = proposer.lifecycle_hook()
+    while not proposer.finished():
+        gen = proposer.get_params(proposer.population)
+        if not gen:
+            break
+        # exploit copies happen AT the barrier: a clone must read its donor's
+        # end-of-previous-generation checkpoint, not a checkpoint the donor
+        # already advanced while this generation ran member-by-member (the
+        # streaming engine's donor pin enforces exactly this boundary)
+        gen_ckpts, gen_applied = dict(ckpts), dict(applied)
+        results = []
+        for cfg in gen:
+            m, r = int(cfg["pbt_member"]), int(cfg["pbt_round"])
+            lc = cfg.get("pbt_lifecycle", "init")
+            n_steps = trial._n_steps(cfg)
+            stream = trial._stream_of(cfg, m)
+            if lc == "keep":
+                state = jax.device_put(ckpts[m])      # host -> device restore
+                trial.n_host_ckpt_roundtrips += 1
+                base_sched = applied[m]
+            elif lc == "clone":
+                donor = int(cfg["pbt_donor"])
+                state = jax.device_put(gen_ckpts[donor])  # boundary snapshot
+                trial.n_host_ckpt_roundtrips += 1
+                base_sched = gen_applied[donor]
+                if hook is not None:
+                    hook.clone_done(cfg)  # pins are an engine concept
+            else:
+                state = init_train_state(trial._init_key(stream), tc)
+                base_sched = 0
+            hp = trial._hparams(cfg, base_sched + n_steps)
+            base_data = r * n_steps
+            loss, n_applied = float("inf"), 0
+            for t in range(n_steps):
+                state, metrics = step_fn(
+                    state, data.make_batch(base_data + t, stream=stream), hp)
+                loss = float(metrics["loss"])
+                if not np.isfinite(loss):
+                    break
+                n_applied += 1
+            score = -loss if n_applied == n_steps else trial.DIVERGED_SCORE
+            ckpts[m] = jax.device_get(state)          # device -> host ckpt
+            trial.n_host_ckpt_roundtrips += 1
+            applied[m] = base_sched + n_applied
+            scores[(m, r)] = score
+            results.append((cfg, score))
+        # the generation barrier: results feed back only when the whole
+        # generation has run, in member order — the decision/RNG sequence the
+        # synchronized streaming engine reproduces
+        for cfg, score in results:
+            proposer.update(score, _ReplayJob(cfg))
+    return scores
 
 
 SPACE = [
@@ -588,6 +881,30 @@ def main(argv=None) -> int:
                         "is reset in place inside the compiled program and "
                         "immediately takes the next proposal; results stream "
                         "out per lane instead of at flight end")
+    p.add_argument("--pbt-streaming", action="store_true",
+                   help="with --proposer pbt and --vectorize K: run PBT on the "
+                        "streaming lane engine (implies --lane-refill) — a "
+                        "losing member's lane inherits a donor lane's weights "
+                        "and optimizer state via a compiled clone op instead "
+                        "of a pbt_ckpt host round-trip; no generation bubble")
+    p.add_argument("--pbt-async", action="store_true",
+                   help="with --pbt-streaming: drop the round gate so members "
+                        "run fully asynchronously — exploit/explore decisions "
+                        "come from the sliding member-score window alone "
+                        "(default: rounds are gated, matching the "
+                        "generation-barriered driver decision-for-decision)")
+    p.add_argument("--pbt-perturb", type=float, default=1.2,
+                   help="PBT explore factor: floats scale by this (or its "
+                        "inverse) through the unit cube")
+    p.add_argument("--pbt-quantile", type=float, default=0.25,
+                   help="PBT exploit quantile: members in the bottom fraction "
+                        "clone a top-fraction donor")
+    p.add_argument("--pbt-window", type=int, default=0,
+                   help="sliding member-score window for streaming PBT "
+                        "decisions (0 = population size)")
+    p.add_argument("--pbt-rounds", type=int, default=0,
+                   help="training rounds per PBT member (0 = n-samples / "
+                        "population)")
     p.add_argument("--per-trial-init", action="store_true",
                    help="fold each trial's stream/job id into its init PRNG "
                         "key so trials start from distinct weights (serial and "
@@ -613,6 +930,25 @@ def main(argv=None) -> int:
     if args.deadline:
         exp_cfg["job_deadline_s"] = args.deadline
 
+    if args.pbt_streaming:
+        if args.proposer != "pbt":
+            p.error(f"--pbt-streaming needs --proposer pbt, got {args.proposer!r}")
+        if args.vectorize <= 0:
+            p.error("--pbt-streaming requires --vectorize K (members live in "
+                    "population lanes)")
+        args.lane_refill = True  # streaming PBT rides the lane-refill engine
+        exp_cfg.update(
+            streaming=True,
+            sync_rounds=not args.pbt_async,
+            population=args.vectorize,
+            perturb=args.pbt_perturb,
+            quantile=args.pbt_quantile,
+            window=args.pbt_window,
+        )
+        if args.pbt_rounds:
+            exp_cfg["n_generations"] = args.pbt_rounds
+    elif args.pbt_async:
+        p.error("--pbt-async only applies with --pbt-streaming")
     if args.vectorize <= 0 and (args.shard_population or args.inflight_stop
                                 or args.lane_refill):
         p.error("--shard-population/--inflight-stop/--lane-refill require "
@@ -666,13 +1002,23 @@ def main(argv=None) -> int:
         out["lane_refills"] = trial.n_refills
         out["streamed_results"] = exp.rm.n_streamed
         out["refill_flights"] = exp.rm.n_refill_flights
+    if args.pbt_streaming:
+        hook = exp.proposer.lifecycle_hook()
+        out["pbt_clones"] = trial.n_clones
+        out["pbt_splices"] = trial.n_splices
+        out["pbt_keeps"] = hook.n_keeps
+        out["pbt_donor_waits"] = trial.n_donor_waits + hook.n_donor_waits
+        out["pbt_lineage_resets"] = trial.n_lineage_resets
+        # the streaming engine's whole point: weights never visit the host
+        out["pbt_host_ckpt_roundtrips"] = trial.n_host_ckpt_roundtrips
     if result_times:
         out["first_result_s"] = round(result_times[0] - t0, 2)
         out["last_result_s"] = round(result_times[-1] - t0, 2)
     print(json.dumps(dict(out, **{
         "best_score": best["score"],
         "best_config": {k: v for k, v in best["config"].items()
-                        if not k.startswith(("hb_", "asha_", "pbt_")) and k != "job_id"},
+                        if not k.startswith(("hb_", "asha_", "pbt_"))
+                        and k not in ("job_id", "stream")},
         "n_jobs": best.get("n_jobs"),
         "seconds": round(dt, 1),
     }), default=float, indent=1))

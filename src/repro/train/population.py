@@ -32,10 +32,14 @@ Semantics per jitted ``pop_step(pstate, batch, hp)``:
   trials freeze in place while the rest continue.  Because ``total_steps`` is
   a *traced* leaf, the driver may also shrink it **mid-flight** (in-flight
   early stopping — see ``repro.core.proposer.early_stop``) without recompiling;
-* a retired lane can be **refilled** in place: ``make_reset_lanes`` re-inits a
-  masked subset of lanes from per-lane PRNG keys (vmapped ``init_train_state``),
-  so the host loop swaps the next proposal into a freed lane while the rest of
-  the population keeps training — still the same compiled step program;
+* a retired lane can be **refilled** in place by a lane-lifecycle op (all
+  compiled, cached, with ``shard_map`` twins): ``make_lane_init`` re-inits a
+  masked subset of lanes from per-lane PRNG keys, ``make_lane_splice`` updates
+  exactly ONE lane via ``dynamic_update_index_in_dim`` per leaf (one init, not
+  K), and ``make_lane_clone`` copies a *donor* lane's weights + optimizer
+  state across the population axis (PBT exploit without a host checkpoint).
+  Either way the host loop swaps the next proposal into a freed lane while the
+  rest of the population keeps training — still the same compiled step program;
 * a non-finite loss at an active step sets the ``diverged`` latch and the
   update is *not* applied — the sick trial freezes, the batch lives on
   (vmapped divergence masking);
@@ -125,7 +129,28 @@ def make_population_train_step(tc: TrainConfig, per_trial_batch: bool = False) -
     return pop_step
 
 
-def make_reset_lanes(tc: TrainConfig) -> Callable:
+# -- lane-lifecycle ops ---------------------------------------------------------
+#
+# A population lane cycles through its lifecycle inside ONE compiled flight:
+# lease -> train -> retire -> refill.  The refill is a device op picked from
+# this unified layer (each has a ``shard_map`` twin and a compile-once cache
+# entry via ``get_compiled_lane_op``):
+#
+# * ``init``   (``make_lane_init``)   — re-init a masked subset of lanes from
+#   per-lane PRNG keys (vmapped ``init_train_state``): the PR-3 reset, used
+#   when several lanes refill at once;
+# * ``clone``  (``make_lane_clone``)  — copy a *donor* lane's params AND
+#   optimizer state across the population axis into the masked lanes: the
+#   PBT/EAS exploit primitive (weight inheritance without a host checkpoint
+#   round-trip).  Hyperparameters are not touched — they ride in the traced
+#   ``HParams`` stack the host re-stacks per lease;
+# * ``splice`` (``make_lane_splice``) — update ONE target lane via
+#   ``dynamic_update_index_in_dim`` per leaf: a single ``init_train_state``
+#   instead of vmap-initializing all K lanes and where-selecting, so splicing
+#   one lane of a big model costs one lane's init, not K.
+
+
+def make_lane_init(tc: TrainConfig) -> Callable:
     """``(pstate, mask, keys) -> pstate`` with masked lanes re-initialized.
 
     The in-place lane *refill* primitive: when the host loop retires a lane
@@ -154,14 +179,151 @@ def make_reset_lanes(tc: TrainConfig) -> Callable:
     return reset
 
 
-def make_sharded_reset_lanes(tc: TrainConfig, mesh: Mesh, axis: str = "pop") -> Callable:
+# PR-3 name: the masked from-keys reset predates the unified lifecycle layer.
+make_reset_lanes = make_lane_init
+
+
+def make_lane_clone(tc: TrainConfig) -> Callable:
+    """``(pstate, mask, donor_idx) -> pstate`` cloning donor lanes in place.
+
+    For every masked lane ``i``, the whole inner train state (params, AdamW
+    moments, master copy, step counter) becomes a copy of lane
+    ``donor_idx[i]``, the divergence latch and ``last_loss`` are copied from
+    the donor too, and unmasked lanes are untouched.  ``donor_idx`` is
+    ``int32[K]`` (unmasked entries are ignored; pass the identity to be safe).
+    This is the exploit half of Population-Based Training as a *device* op:
+    a losing member inherits the winner's weights and optimizer state without
+    the weights ever visiting the host.
+    """
+
+    def clone(pstate: PopState, mask: jax.Array, donor_idx: jax.Array) -> PopState:
+        take = lambda x: jnp.take(x, donor_idx, axis=0)
+        donated = jax.tree.map(take, pstate["inner"])
+        inner = jax.tree.map(
+            lambda d, o: _per_trial(mask, d, o), donated, pstate["inner"]
+        )
+        return {
+            "inner": inner,
+            "diverged": jnp.where(mask, take(pstate["diverged"]), pstate["diverged"]),
+            "last_loss": jnp.where(mask, take(pstate["last_loss"]), pstate["last_loss"]),
+        }
+
+    return clone
+
+
+def make_lane_splice(tc: TrainConfig) -> Callable:
+    """``(pstate, lane, key) -> pstate`` re-initializing exactly one lane.
+
+    Unlike ``make_lane_init`` — which vmap-inits all K lanes and
+    where-selects the masked ones — the splice runs ONE ``init_train_state``
+    and writes it into the target lane with ``dynamic_update_index_in_dim``
+    per leaf.  ``lane`` is a *traced* int32 scalar, so one compiled program
+    serves every lane; on a big model this is the difference between paying K
+    inits and paying one.
+    """
+
+    def splice(pstate: PopState, lane: jax.Array, key: jax.Array) -> PopState:
+        fresh = init_train_state(key, tc)
+        inner = jax.tree.map(
+            lambda o, f: jax.lax.dynamic_update_index_in_dim(
+                o, f.astype(o.dtype), lane, 0
+            ),
+            pstate["inner"], fresh,
+        )
+        return {
+            "inner": inner,
+            "diverged": jax.lax.dynamic_update_index_in_dim(
+                pstate["diverged"], jnp.asarray(False), lane, 0
+            ),
+            "last_loss": jax.lax.dynamic_update_index_in_dim(
+                pstate["last_loss"], jnp.float32(jnp.inf), lane, 0
+            ),
+        }
+
+    return splice
+
+
+def make_sharded_lane_init(tc: TrainConfig, mesh: Mesh, axis: str = "pop") -> Callable:
     """Lane reset with the K axis split over ``mesh`` (mirrors the sharded
     population step): each device re-inits only its own K/N block of lanes."""
     from jax.experimental.shard_map import shard_map
 
-    reset = make_reset_lanes(tc)
+    reset = make_lane_init(tc)
     pop = PartitionSpec(axis)
     return shard_map(reset, mesh=mesh, in_specs=(pop, pop, pop), out_specs=pop)
+
+
+make_sharded_reset_lanes = make_sharded_lane_init
+
+
+def make_sharded_lane_clone(tc: TrainConfig, mesh: Mesh, axis: str = "pop") -> Callable:
+    """Donor clone with the K axis split over ``mesh``.
+
+    ``donor_idx`` holds *global* lane ids, so a clone may cross a mesh
+    boundary: each device ``all_gather``s the population axis and takes its
+    own lanes' donors from the gathered copy.  The gather briefly materializes
+    the full K-lane state per device — fine for HPO-sized models; a
+    giant-model deployment would swap this for a point-to-point collective.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def clone(pstate: PopState, mask: jax.Array, donor_idx: jax.Array) -> PopState:
+        take = lambda x: jnp.take(
+            jax.lax.all_gather(x, axis, axis=0, tiled=True), donor_idx, axis=0
+        )
+        donated = jax.tree.map(take, pstate["inner"])
+        inner = jax.tree.map(
+            lambda d, o: _per_trial(mask, d, o), donated, pstate["inner"]
+        )
+        return {
+            "inner": inner,
+            "diverged": jnp.where(mask, take(pstate["diverged"]), pstate["diverged"]),
+            "last_loss": jnp.where(mask, take(pstate["last_loss"]), pstate["last_loss"]),
+        }
+
+    pop = PartitionSpec(axis)
+    return shard_map(clone, mesh=mesh, in_specs=(pop, pop, pop), out_specs=pop)
+
+
+def make_sharded_lane_splice(tc: TrainConfig, mesh: Mesh, axis: str = "pop") -> Callable:
+    """Single-lane splice with the K axis split over ``mesh``.
+
+    ``lane`` is a global id; every device runs the (cheap, replicated) fresh
+    init but only the owner of the target lane writes it into its local
+    block — the rest keep their block bit-identical.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def splice(pstate: PopState, lane: jax.Array, key: jax.Array) -> PopState:
+        blk = pstate["diverged"].shape[0]  # local lanes per device
+        off = jax.lax.axis_index(axis) * blk
+        local = jnp.clip(lane - off, 0, blk - 1)
+        owns = (lane >= off) & (lane < off + blk)
+        fresh = init_train_state(key, tc)
+
+        def upd(o, f):
+            new = jax.lax.dynamic_update_index_in_dim(o, f.astype(o.dtype), local, 0)
+            return jnp.where(owns, new, o)
+
+        inner = jax.tree.map(upd, pstate["inner"], fresh)
+        div = jax.lax.dynamic_update_index_in_dim(
+            pstate["diverged"], jnp.asarray(False), local, 0
+        )
+        last = jax.lax.dynamic_update_index_in_dim(
+            pstate["last_loss"], jnp.float32(jnp.inf), local, 0
+        )
+        return {
+            "inner": inner,
+            "diverged": jnp.where(owns, div, pstate["diverged"]),
+            "last_loss": jnp.where(owns, last, pstate["last_loss"]),
+        }
+
+    pop = PartitionSpec(axis)
+    return shard_map(
+        splice, mesh=mesh,
+        in_specs=(pop, PartitionSpec(), PartitionSpec()),
+        out_specs=pop,
+    )
 
 
 def make_sharded_population_step(
@@ -261,15 +423,50 @@ def get_compiled_sharded_population_step(
     return fn
 
 
-def get_compiled_reset_lanes(tc: TrainConfig, population: int):
-    """Memoized ``jax.jit`` of the lane-refill reset with donated state."""
-    key = (static_step_key(tc), int(population), "reset")
+# one builder table for the lifecycle layer: op -> (vmapped, shard_map twin)
+_LANE_OPS: Dict[str, Tuple[Callable, Callable]] = {
+    "init": (make_lane_init, make_sharded_lane_init),
+    "clone": (make_lane_clone, make_sharded_lane_clone),
+    "splice": (make_lane_splice, make_sharded_lane_splice),
+}
+
+
+def get_compiled_lane_op(
+    tc: TrainConfig,
+    population: int,
+    op: str,
+    mesh: Optional[Mesh] = None,
+    axis: str = "pop",
+):
+    """Memoized ``jax.jit`` of a lane-lifecycle op with donated state.
+
+    ``op`` is one of ``init`` / ``clone`` / ``splice``; with ``mesh`` the
+    ``shard_map`` twin is compiled instead (keyed like the sharded population
+    step, so a streaming flight compiles each op it uses exactly once).
+    """
+    if op not in _LANE_OPS:
+        raise KeyError(f"unknown lane op {op!r}; available: {sorted(_LANE_OPS)}")
+    if mesh is not None and population % mesh.size:
+        raise ValueError(
+            f"population {population} does not divide over {mesh.size} devices; "
+            f"pad to {pad_population(population, mesh)} with 0-budget trials"
+        )
+    key = (static_step_key(tc), int(population), f"lane-{op}") + (
+        (tuple(d.id for d in mesh.devices.flat), axis) if mesh is not None else ()
+    )
     with _POP_CACHE_LOCK:
         fn = _POP_CACHE.get(key)
         if fn is None:
-            fn = jax.jit(make_reset_lanes(tc), donate_argnums=0)
+            vmapped, sharded = _LANE_OPS[op]
+            built = vmapped(tc) if mesh is None else sharded(tc, mesh, axis=axis)
+            fn = jax.jit(built, donate_argnums=0)
             _POP_CACHE[key] = fn
     return fn
+
+
+def get_compiled_reset_lanes(tc: TrainConfig, population: int):
+    """Memoized ``jax.jit`` of the lane-refill reset with donated state."""
+    return get_compiled_lane_op(tc, population, "init")
 
 
 def get_compiled_sharded_reset_lanes(
@@ -282,23 +479,7 @@ def get_compiled_sharded_reset_lanes(
     sharded population step, so one refill flight compiles exactly two
     programs: step + reset)."""
     mesh = mesh if mesh is not None else population_mesh(axis=axis)
-    if population % mesh.size:
-        raise ValueError(
-            f"population {population} does not divide over {mesh.size} devices; "
-            f"pad to {pad_population(population, mesh)} with 0-budget trials"
-        )
-    key = (
-        static_step_key(tc), int(population), "reset",
-        tuple(d.id for d in mesh.devices.flat), axis,
-    )
-    with _POP_CACHE_LOCK:
-        fn = _POP_CACHE.get(key)
-        if fn is None:
-            fn = jax.jit(
-                make_sharded_reset_lanes(tc, mesh, axis=axis), donate_argnums=0
-            )
-            _POP_CACHE[key] = fn
-    return fn
+    return get_compiled_lane_op(tc, population, "init", mesh=mesh, axis=axis)
 
 
 def clear_population_cache() -> None:

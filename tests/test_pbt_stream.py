@@ -1,0 +1,439 @@
+"""Streaming PBT on the lane-refill engine + the unified lane-lifecycle ops.
+
+Covers the lifecycle op layer (donor clone and single-lane splice, vmapped
+and sharded), the streaming PBT proposer (sliding-window exploit/explore,
+donor pinning, lifecycle passthrough through the Experiment), equivalence of
+the streaming engine against the generation-barriered serial PBT driver under
+shared RNG, and the PR's satellite regressions: the classic-PBT replay
+double-issue fix and the loud lane-refill/shared-stream construction error.
+
+conftest.py forces an 8-virtual-device CPU mesh; tests that need real
+sharding skip on a single-device backend.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.core.experiment import Experiment
+from repro.core.proposer import make_proposer
+from repro.core.proposer.pbt import PBTLifecycle, PBTProposer
+from repro.core.search_space import SearchSpace
+from repro.data.pipeline import SyntheticLM
+from repro.distributed.sharding import population_mesh
+from repro.launch.hpo import PopulationTrial, run_pbt_serial
+from repro.optim.hparams import hparams_from_dict, stack_hparams
+from repro.train import population as pop
+from repro.train.train_step import init_train_state
+
+SEQ, BATCH = 16, 2
+ARCH = "starcoder2-3b"
+
+SPACE_JSON = [
+    {"name": "learning_rate", "type": "float", "range": [1e-4, 3e-3], "scale": "log"},
+    {"name": "weight_decay", "type": "float", "range": [0.0, 0.2]},
+]
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2, reason="needs a multi-device (virtual CPU) mesh"
+)
+
+
+@pytest.fixture(scope="module")
+def tc():
+    cfg = get_smoke_config(ARCH)
+    return TrainConfig(model=cfg, parallel=ParallelConfig(remat="none"),
+                       total_steps=4)
+
+
+def _trained_pstate(tc, k, steps=2):
+    """K distinct lanes, stepped a couple of times so lanes differ."""
+    keys = jnp.stack([jax.random.fold_in(jax.random.PRNGKey(0), i)
+                      for i in range(k)])
+    pstate = pop.init_population_state_from_keys(keys, tc)
+    step = pop.make_population_train_step(tc, per_trial_batch=False)
+    data = SyntheticLM(tc.model.vocab_size, SEQ, BATCH, seed=0)
+    hp = stack_hparams([
+        hparams_from_dict({"learning_rate": 1e-3 * (i + 1), "total_steps": 8}, tc)
+        for i in range(k)
+    ])
+    for s in range(steps):
+        pstate, _ = step(pstate, data.make_batch(s), hp)
+    return pstate, keys
+
+
+# -- the lifecycle device ops -----------------------------------------------------
+
+def test_lane_clone_copies_donor_bit_exact_and_leaves_others(tc):
+    pstate, _ = _trained_pstate(tc, 4)
+    ref = jax.tree.map(np.asarray, pstate)
+    clone = pop.make_lane_clone(tc)
+    mask = jnp.array([False, False, True, False])
+    donor_idx = jnp.asarray([0, 1, 0, 3], jnp.int32)  # lane 2 <- donor 0
+    out = clone(pstate, mask, donor_idx)
+    for got, want in zip(jax.tree.leaves(out["inner"]),
+                         jax.tree.leaves(ref["inner"])):
+        got = np.asarray(got)
+        # cloned lane: bit-identical to the donor (params AND opt state)
+        np.testing.assert_array_equal(got[2], want[0])
+        # every other lane untouched, bit for bit
+        for lane in (0, 1, 3):
+            np.testing.assert_array_equal(got[lane], want[lane])
+    np.testing.assert_array_equal(
+        np.asarray(out["last_loss"])[2], ref["last_loss"][0])
+    assert not bool(np.asarray(out["diverged"])[2])
+
+
+def test_lane_splice_updates_one_lane_only(tc):
+    pstate, _ = _trained_pstate(tc, 4)
+    ref = jax.tree.map(np.asarray, pstate)
+    key = jax.random.PRNGKey(42)
+    fresh = jax.tree.map(np.asarray, init_train_state(key, tc))
+    splice = pop.get_compiled_lane_op(tc, 4, "splice")
+    out = splice(pstate, jnp.asarray(1, jnp.int32), key)
+    for got, want, f in zip(jax.tree.leaves(out["inner"]),
+                            jax.tree.leaves(ref["inner"]),
+                            jax.tree.leaves(fresh)):
+        got = np.asarray(got)
+        # the spliced lane is exactly one fresh init_train_state(key)
+        np.testing.assert_array_equal(got[1], f)
+        # all other lanes bit-identical — the single-lane contract
+        for lane in (0, 2, 3):
+            np.testing.assert_array_equal(got[lane], want[lane])
+    assert np.isinf(np.asarray(out["last_loss"])[1])
+    assert not bool(np.asarray(out["diverged"])[1])
+
+
+@multi_device
+def test_sharded_clone_across_mesh_boundaries(tc):
+    """Donor and target lanes on different devices: the shard_map twin's
+    all_gather must produce the same result as the vmapped op."""
+    n = jax.device_count()
+    k = max(n, 4)
+    mesh = population_mesh()
+    pstate, _ = _trained_pstate(tc, k)
+    ref = jax.tree.map(np.asarray, pstate)
+    mask = np.zeros(k, bool)
+    donor_idx = np.arange(k)
+    mask[k - 1] = True          # last lane (last device) ...
+    donor_idx[k - 1] = 0        # ... clones lane 0 (first device)
+    vmapped = pop.make_lane_clone(tc)(
+        pstate, jnp.asarray(mask), jnp.asarray(donor_idx, jnp.int32))
+    # re-derive the same (deterministic) trained state, placed on the mesh
+    pstate2, _ = _trained_pstate(tc, k)
+    pstate2 = pop.shard_population_state(pstate2, mesh)
+    sharded = pop.get_compiled_lane_op(tc, k, "clone", mesh=mesh)(
+        pstate2, jnp.asarray(mask), jnp.asarray(donor_idx, jnp.int32))
+    for got, want in zip(jax.tree.leaves(sharded["inner"]),
+                         jax.tree.leaves(vmapped["inner"])):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    for got, want in zip(jax.tree.leaves(sharded["inner"]),
+                         jax.tree.leaves(ref["inner"])):
+        np.testing.assert_array_equal(np.asarray(got)[k - 1], want[0])
+
+
+@multi_device
+def test_sharded_splice_matches_vmapped(tc):
+    n = jax.device_count()
+    k = max(n, 4)
+    mesh = population_mesh()
+    key = jax.random.PRNGKey(11)
+    lane = k // 2  # an interior device's lane
+    pstate, _ = _trained_pstate(tc, k)
+    vmapped = pop.make_lane_splice(tc)(pstate, jnp.asarray(lane, jnp.int32), key)
+    pstate2, _ = _trained_pstate(tc, k)
+    pstate2 = pop.shard_population_state(pstate2, mesh)
+    sharded = pop.get_compiled_lane_op(tc, k, "splice", mesh=mesh)(
+        pstate2, jnp.asarray(lane, jnp.int32), key)
+    for got, want in zip(jax.tree.leaves(sharded["inner"]),
+                         jax.tree.leaves(vmapped["inner"])):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# -- the decision rule ------------------------------------------------------------
+
+def _space():
+    return SearchSpace.from_json(SPACE_JSON)
+
+
+def test_lifecycle_window_quantile_rule():
+    rng = np.random.default_rng(3)
+    lc = PBTLifecycle(_space(), perturb=1.2, quantile=0.25, window=4, rng=rng)
+    lc.member_cfgs = {m: {"learning_rate": 1e-3, "weight_decay": 0.1}
+                      for m in range(4)}
+    for m, score in enumerate([-1.0, -2.0, -3.0, -4.0]):
+        lc.note_result(m, score)
+    # best member keeps
+    kind, donor, _ = lc.decide(0, lc.member_cfgs[0])
+    assert kind == "keep" and donor is None
+    # worst member clones the best, with perturbed hparams
+    kind, donor, cfg = lc.decide(3, lc.member_cfgs[3])
+    assert kind == "clone" and donor == 0
+    assert cfg["learning_rate"] != lc.member_cfgs[0]["learning_rate"]
+    # pin engages only once the proposer registers the clone job
+    assert not lc.pinned(0)
+    clone_cfg = dict(cfg, pbt_member=3, pbt_round=1, pbt_lifecycle="clone",
+                     pbt_donor=0)
+    lc.pin(clone_cfg)
+    assert lc.pinned(0)
+    assert lc.lease_blocked({"pbt_lifecycle": "keep", "pbt_member": 0})
+    assert not lc.lease_blocked({"pbt_lifecycle": "keep", "pbt_member": 1})
+    assert not lc.lease_blocked({"pbt_lifecycle": "clone", "pbt_member": 3})
+    lc.clone_done(clone_cfg)
+    assert not lc.pinned(0)
+    lc.clone_done(clone_cfg)  # release is idempotent across retries
+    assert not lc.pinned(0)
+
+
+def test_lifecycle_diverged_member_never_donates():
+    lc = PBTLifecycle(_space(), quantile=0.5, window=4,
+                      rng=np.random.default_rng(0))
+    lc.member_cfgs = {m: {"learning_rate": 1e-3, "weight_decay": 0.1}
+                      for m in range(2)}
+    lc.note_result(0, -1e9)  # diverged sentinel
+    lc.note_result(1, -1e9)
+    kind, donor, _ = lc.decide(1, lc.member_cfgs[1])
+    assert kind == "keep" and donor is None  # nothing finite to clone
+
+
+# -- streaming engine vs the generation-barriered serial driver -------------------
+
+def _make_proposer(seed=7, k=4, rounds=3, **kw):
+    return make_proposer("pbt", _space(), maximize=True, seed=seed,
+                         population=k, n_generations=rounds, streaming=True,
+                         quantile=0.25, **kw)
+
+
+def _stream_scores(trial, k, rounds, seed=7, resource="vectorized"):
+    exp = Experiment({
+        "proposer": "pbt", "parameter_config": SPACE_JSON,
+        "n_samples": k * rounds, "n_parallel": k, "target": "max",
+        "seed": seed, "population": k, "n_generations": rounds,
+        "streaming": True, "quantile": 0.25,
+        "resource": resource, "lane_refill": True}, trial)
+    got = {}
+    exp.add_result_callback(lambda job: got.__setitem__(
+        (job.config.get("pbt_member"), job.config.get("pbt_round")),
+        job.result.score if job.result else None))
+    exp.run()
+    return exp, got
+
+
+def test_streaming_pbt_matches_serial_generation_pbt():
+    """The headline contract: PBT on the streaming lane engine reproduces the
+    generation-barriered serial driver's scores for every (member, round)
+    under shared RNG — with clones as device ops and ZERO weight checkpoints
+    crossing the host boundary."""
+    k, rounds, steps = 4, 3, 3
+    serial_trial = PopulationTrial(ARCH, steps=steps, batch=BATCH, seq=SEQ,
+                                   seed=0, per_trial_init=True)
+    serial = run_pbt_serial(serial_trial, _make_proposer())
+    assert serial_trial.n_host_ckpt_roundtrips > 0  # the baseline pays them
+
+    trial = PopulationTrial(ARCH, steps=steps, batch=BATCH, seq=SEQ, seed=0,
+                            population=k, per_trial_init=True)
+    exp, got = _stream_scores(trial, k, rounds)
+    assert set(got) == set(serial)
+    np.testing.assert_allclose(
+        [got[key] for key in sorted(serial)],
+        [serial[key] for key in sorted(serial)], rtol=1e-5, atol=1e-6)
+    # lifecycle passthrough wired the hook without explicit plumbing
+    assert trial.lifecycle is exp.proposer.lifecycle_hook()
+    assert trial.n_clones >= 1, "at least one exploit per run at quantile 0.25"
+    assert trial.n_host_ckpt_roundtrips == 0, \
+        "streaming PBT must never round-trip weights through the host"
+    assert trial.n_lineage_resets == 0
+    assert exp.rm.n_streamed == k * rounds
+    assert all(j.done for j in exp.job_log)
+
+
+@multi_device
+def test_streaming_pbt_sharded_matches_vmapped():
+    k, rounds, steps = jax.device_count(), 2, 2
+    t1 = PopulationTrial(ARCH, steps=steps, batch=BATCH, seq=SEQ, seed=0,
+                         population=k, per_trial_init=True)
+    _, vmapped = _stream_scores(t1, k, rounds, resource="vectorized")
+    t2 = PopulationTrial(ARCH, steps=steps, batch=BATCH, seq=SEQ, seed=0,
+                         population=k, per_trial_init=True)
+    _, sharded = _stream_scores(t2, k, rounds, resource="sharded")
+    assert set(vmapped) == set(sharded)
+    np.testing.assert_allclose(
+        [sharded[key] for key in sorted(vmapped)],
+        [vmapped[key] for key in sorted(vmapped)], rtol=1e-5, atol=1e-6)
+    assert t2.n_host_ckpt_roundtrips == 0
+
+
+def test_serial_driver_clones_read_generation_boundary_checkpoints():
+    """Regression: with population 8 at seed 3, member 5 clones donor 1 — a
+    donor with a LOWER member index, whose serial round runs earlier in the
+    generation loop.  The serial driver must restore the donor's
+    generation-boundary snapshot (classic PBT barrier semantics, what the
+    streaming engine's donor pin enforces), not the checkpoint the donor
+    already advanced this generation — that bug showed up as a ~1e-3 score
+    gap against the (correct) streaming engine."""
+    k, rounds, steps = 8, 2, 4
+    serial_trial = PopulationTrial(ARCH, steps=steps, batch=BATCH, seq=SEQ,
+                                   seed=0, per_trial_init=True)
+    prop = _make_proposer(seed=3, k=k, rounds=rounds)
+    serial = run_pbt_serial(serial_trial, prop)
+    clones = [(c["config"]["pbt_member"], c["config"]["pbt_donor"])
+              for c in prop.history
+              if c["config"].get("pbt_lifecycle") == "clone"]
+    assert any(d < m for m, d in clones), \
+        "workload must include a lower-index donor to exercise the snapshot"
+    trial = PopulationTrial(ARCH, steps=steps, batch=BATCH, seq=SEQ, seed=0,
+                            population=k, per_trial_init=True)
+    _, got = _stream_scores(trial, k, rounds, seed=3)
+    np.testing.assert_allclose(
+        [got[key] for key in sorted(serial)],
+        [serial[key] for key in sorted(serial)], rtol=1e-6, atol=1e-7)
+
+
+def test_feed_with_all_rounds_queued_respects_round_order():
+    """Regression: a raw feed (no Algorithm 1, no donor pins) can hold every
+    round of every member up front.  The engine must still run each member's
+    rounds in order and execute clones before same-round keeps re-activate
+    their donors — without the guards, a member's round 2 could jump its own
+    round 1 and a clone could copy post-round donor weights."""
+    k, rounds, steps = 8, 2, 4
+    from repro.core.resource.vectorized import QueueFeedScheduler
+
+    serial_trial = PopulationTrial(ARCH, steps=steps, batch=BATCH, seq=SEQ,
+                                   seed=0, per_trial_init=True)
+    prop = _make_proposer(seed=3, k=k, rounds=rounds)
+    serial = run_pbt_serial(serial_trial, prop)
+    ordered = [c["config"] for c in prop.history]
+
+    prop2 = _make_proposer(seed=3, k=k, rounds=rounds)
+    trial = PopulationTrial(ARCH, steps=steps, batch=BATCH, seq=SEQ, seed=0,
+                            population=k, per_trial_init=True,
+                            refill_idle_grace_s=0.0,
+                            lifecycle=prop2.lifecycle_hook())
+    feed = QueueFeedScheduler(ordered)
+    trial.run_population([], scheduler=feed)
+    assert len(feed.scores) == len(ordered), "every queued round must complete"
+    assert trial.n_lineage_resets == 0
+    np.testing.assert_allclose(
+        [feed.scores[i] for i in range(len(ordered))],
+        [serial[(c["pbt_member"], c["pbt_round"])] for c in ordered],
+        rtol=1e-6, atol=1e-7)
+
+
+def test_pbt_streaming_cli_smoke():
+    """The CI smoke entry (`REPRO_PBT_STREAM_SMOKE=1`) runs the heavier CLI
+    variant; locally we keep a lighter always-on one."""
+    from repro.launch.hpo import main
+
+    heavy = os.environ.get("REPRO_PBT_STREAM_SMOKE") == "1"
+    argv = ["--proposer", "pbt", "--vectorize", "4", "--pbt-streaming",
+            "--n-samples", "8" if heavy else "4",
+            "--steps", "2", "--batch", "2", "--seq", "16"]
+    if heavy:
+        argv.append("--pbt-async")
+    assert main(argv) == 0
+
+
+# -- satellite regressions --------------------------------------------------------
+
+def test_lane_refill_with_shared_stream_target_fails_at_construction():
+    trial = PopulationTrial(ARCH, steps=1, batch=BATCH, seq=SEQ, seed=0,
+                            population=2, per_trial_streams=False)
+    with pytest.raises(ValueError, match="per-trial data streams"):
+        Experiment({
+            "proposer": "random", "parameter_config": SPACE_JSON,
+            "n_samples": 2, "n_parallel": 2, "target": "max",
+            "resource": "vectorized", "lane_refill": True}, trial)
+
+
+def _row(cfg, status="finished", score=0.0, job_id=0):
+    row = {"config": dict(cfg), "status": status, "job_id": job_id}
+    if status == "finished":
+        row["score"] = score
+    return row
+
+
+def test_classic_pbt_replay_advances_generations_incrementally():
+    """Replay of rows spanning two finished generations must land each row in
+    its own generation (firing _exploit_explore between them), matching the
+    live path's RNG consumption — the old replay dropped every row after the
+    first generation and then re-issued it."""
+    def _next(prop):
+        for _ in range(3):  # a None is the generation barrier: retry
+            c = prop.get_param()
+            if c is not None:
+                return c
+        raise AssertionError("proposer stuck at the barrier")
+
+    space = _space()
+    live = PBTProposer(space, population=2, n_generations=3, seed=5)
+    rows = []
+    jid = 0
+    for gen in range(2):
+        cfgs = [_next(live) for _ in range(2)]
+        for m, cfg in enumerate(cfgs):
+            score = -1.0 * (gen + 1) * (m + 1)
+            rows.append(_row(cfg, score=score, job_id=jid))
+            jid += 1
+
+            class _J:
+                config = cfg
+
+            live.update(score, _J)
+    # force the live proposer through its (lazy) second barrier
+    live_next = _next(live)
+    assert live.gen == 2 and live_next["pbt_gen"] == 2
+
+    resumed = PBTProposer(space, population=2, n_generations=3, seed=5)
+    resumed.replay(rows)
+    assert resumed.gen == live.gen, "replay must advance through BOTH generations"
+    assert resumed.members == live.members, \
+        "same RNG consumption => identical post-replay member configs"
+    # the next proposal continues generation 2 — not a re-issue of gen 0
+    nxt = resumed.get_param()
+    assert nxt["pbt_gen"] == 2 and nxt["pbt_member"] == live_next["pbt_member"]
+    assert {k: v for k, v in nxt.items()} == {k: v for k, v in live_next.items()}
+
+
+def test_classic_pbt_replay_marks_running_members_issued():
+    """A member whose job was mid-flight at the crash is re-queued by the
+    Experiment; replay must mark it issued so _propose cannot double-issue
+    the same (member, generation)."""
+    space = _space()
+    prop = PBTProposer(space, population=2, n_generations=2, seed=5)
+    cfg0 = prop.get_param()
+    rows = [_row(cfg0, status="running", job_id=0)]
+    resumed = PBTProposer(space, population=2, n_generations=2, seed=5)
+    resumed.replay(rows)
+    assert cfg0["pbt_member"] in resumed.gen_issued
+    nxt = resumed.get_param()
+    assert nxt is not None and nxt["pbt_member"] != cfg0["pbt_member"], \
+        "the running member must not be issued twice"
+
+
+def test_streaming_pbt_replay_restores_rounds_and_outstanding():
+    space = _space()
+    live = _make_proposer(seed=9, k=2, rounds=3)
+    c00, c10 = live.get_param(), live.get_param()
+    rows = [_row(c00, score=-1.0, job_id=0), _row(c10, score=-2.0, job_id=1)]
+
+    for cfg, sc in ((c00, -1.0), (c10, -2.0)):
+        class _J:
+            config = cfg
+
+        live.update(sc, _J)
+    c01 = live.get_param()
+    rows.append(_row(c01, status="running", job_id=2))
+
+    resumed = _make_proposer(seed=9, k=2, rounds=3)
+    resumed.replay(rows)
+    assert resumed.member_round == [1, 1]
+    assert resumed.member_outstanding[c01["pbt_member"]]
+    assert not resumed.finished()
+    # the outstanding member is skipped; the other proposes its round 1
+    nxt = resumed.get_param()
+    assert nxt["pbt_member"] != c01["pbt_member"] and nxt["pbt_round"] == 1
