@@ -27,6 +27,21 @@ the CPU smoke config:
   bubble disappears.  Wall-clock must be <= the inflight_stop row, and each
   trial's score must match the serial driver replayed at the trial's
   *effective* budget (truncations included);
+* **chunked**          — **fused multi-step dispatch** (``--chunk-steps``):
+  up to CHUNK_STEPS population steps run as ONE ``lax.scan`` program whose
+  batches are synthesized *on device* (``repro.data.pipeline.synth_batch`` is
+  bit-identical under NumPy and XLA), so the host re-enters only at event
+  steps.  Measured per-step-vs-chunked across all four engines — ``vmapped``
+  and ``sharded`` batch flights, the ``refill`` streaming ladder, and
+  ``pbt_stream`` — at the PBT row's dispatch-bound geometry and a longer
+  ladder budget unit (``CHUNK_UNIT``: chunk sizes are bounded by the gap
+  between scheduler events, so trials must train long enough between
+  retirements for chunks to form).  Gate (on the refill ladder, the hot-path
+  engine):
+  wall-clock must beat the per-step loop by ``CHUNKED_FLOOR``, scores must
+  match within ``CHUNKED_SCORE_TOL`` (the engines are bit-equal by
+  construction), and the host-dispatch ratio (device calls per trained step)
+  must drop below 1 — the T-fold dispatch collapse this engine exists for;
 * **pbt_stream**       — Population-Based Training on the streaming engine
   (``--pbt-streaming``): members live in lanes, exploit is a compiled donor
   clone (``make_lane_clone``) and weights never visit the host — measured
@@ -36,6 +51,12 @@ the CPU smoke config:
   (member, round); wall-clock must beat the serial driver by
   ``PBT_STREAM_FLOOR`` on the 8-virtual-device mesh; the streaming side must
   report ZERO host checkpoint round-trips;
+* **pbt_async_quality** — ``--pbt-async`` drops the round gate, so by
+  construction it has no serial equivalence baseline; this row quantifies
+  what that costs on a longer workload: gated vs async best score, the
+  clone/keep decision mix, and a *decision-lag histogram* (how many rounds
+  stale each window entry behind an exploit/explore decision was — all zeros
+  when gated, spread when async).  Informational — no pass criterion;
 * **sha_rule_compare** — the cohort rung rule (batch-synchronous
   ``--inflight-stop`` flights) vs the staggered history rule (the refill
   engine's ``observe``) on a longer-horizon ASHA ladder: both are valid SHA
@@ -72,6 +93,24 @@ SHARDED_FLOOR = 1.0  # sharded engine must not be slower than vmapped
 REFILL_FLOOR = 0.95
 SCORE_TOL = 1e-3
 MESH_DEVICES = 8
+# fused multi-step dispatch: chunk length for the chunked row, its wall-clock
+# floor against the per-step refill row on the same ladder (the committed run
+# shows ~2-3.5x; host batch-building and per-step dispatch dominate at smoke
+# scale), and its score tolerance (the scan engine is bit-equal to the
+# per-step loop by construction, so this is the acceptance tolerance, not an
+# engine-noise tolerance)
+CHUNK_STEPS = 8
+CHUNKED_FLOOR = 1.5
+CHUNKED_SCORE_TOL = 1e-6
+# budget unit (steps) for the chunked row's ladder: chunk sizes are bounded
+# by the gap between scheduler events (retirements, rung boundaries), so the
+# trials must train long enough between events for T-step chunks to form at
+# all — the REFILL_UNIT=2 ladder retires a lane nearly every step and no
+# dispatch scheme could fuse across that.  Same ASHA shape, longer unit.
+CHUNK_UNIT = 8
+# async-PBT quality probe: longer horizon than the equivalence row so the
+# gated and staggered rules have room to diverge
+PBT_QUALITY_ROUNDS = 5
 # ASHA-ladder workload for the inflight-stop vs lane-refill comparison:
 # many cheap rung-0 trials, a few expensive promotions (units of REFILL_UNIT
 # steps).  Batch-synchronous flights pad every flight to its max surviving
@@ -133,8 +172,12 @@ def _sample_configs(n_trials: int, seed: int):
 # configs: lr improves with budget (by step 8 on this synthetic LM, higher lr
 # means lower loss) so promotions stay on top at the rung the way a real ASHA
 # run's do.  One of the two top promotions is deliberately *bad* — the rung
-# rule must have something real to cut mid-flight in both engines.
+# rule must have something real to cut mid-flight in both engines.  Its lr
+# sits well below the rung-0 lrs: at the 8-step boundary the counter-based
+# stream's batch-to-batch noise is ~the gap between adjacent ladder lrs, so
+# only a wide gap orders reliably against the rung history.
 _LADDER_LR = {1: 2e-4, 2: 5e-4, 4: 1e-3, 8: 2e-3}
+_LADDER_BAD_LR = 1e-5
 
 
 def _ladder_workload(seed: int):
@@ -149,7 +192,7 @@ def _ladder_workload(seed: int):
         # short warmup for every budget: a promotion's longer schedule must
         # not leave it crawling at rung boundaries it already passed once
         c["warmup_frac"] = 0.05
-    cfgs[bad_promotion]["learning_rate"] = _LADDER_LR[1]
+    cfgs[bad_promotion]["learning_rate"] = _LADDER_BAD_LR
     return cfgs
 
 
@@ -184,6 +227,17 @@ def _long_hook():
     return InFlightSuccessiveHalving(
         eta=3.0, min_iter=LONG_MIN_ITER_UNITS * REFILL_UNIT,
         max_iter=max(LONG_LADDER) * REFILL_UNIT)
+
+
+def _dispatch_row(seconds: float, trial) -> dict:
+    """One chunked-row engine entry — single source of the field shape
+    ``run()`` consumes for every mode (per_step AND fused, all four engines)."""
+    return {
+        "seconds": seconds,
+        "dispatches": trial.n_dispatches,
+        "trained_steps": trial.n_train_steps,
+        "dispatches_per_step": trial.n_dispatches / max(1, trial.n_train_steps),
+    }
 
 
 def _feed_scheduler(cfgs):
@@ -288,9 +342,83 @@ def _probe_main(argv) -> None:
         "truncated": rtrial.early_stop.n_truncated,
         "refills": rtrial.n_refills,
         "flight_steps": rtrial.last_flight_steps,
+        "dispatches": rtrial.n_dispatches,
+        "trained_steps": rtrial.n_train_steps,
         "scores": feed.ordered_scores(len(lcfgs)),
         "eff_steps": [int(feed.extras[i]["steps"]) for i in range(len(lcfgs))],
         "diverged": [bool(feed.extras[i]["diverged"]) for i in range(len(lcfgs))],
+    }
+
+    # -- fused chunked dispatch: per-step vs chunked across all four engines ---
+    # Dispatch-bound geometry (the PBT row's) and a longer budget unit
+    # (CHUNK_UNIT): the row measures the per-step dispatch + host-batch-
+    # synthesis overheads that chunking eliminates, on a ladder whose trials
+    # train long enough between scheduler events for chunks to form.  Each
+    # (mode, chunk) pair runs once to warm every power-of-two scan compile,
+    # then times a fresh trial on the same ladder.
+    from repro.core.proposer.early_stop import InFlightSuccessiveHalving
+
+    def _chunk_hook():
+        return InFlightSuccessiveHalving(
+            eta=2.0, min_iter=REFILL_MIN_ITER_UNITS * CHUNK_UNIT,
+            max_iter=max(REFILL_LADDER) * CHUNK_UNIT)
+
+    def _chunk_trial(chunk):
+        return PopulationTrial(
+            arch, CHUNK_UNIT, PBT_BATCH, PBT_SEQ, seed,
+            population=population, chunk_steps=chunk,
+            early_stop=_chunk_hook(), refill_idle_grace_s=0.0)
+
+    def _timed_pair(measure, equiv=None):
+        """The ONE pairing protocol every engine mode goes through:
+        ``measure(chunk) -> (seconds, scores, trial)`` is timed at chunk 1
+        (per_step) and CHUNK_STEPS (fused), rows share ``_dispatch_row``'s
+        shape, and ``equiv`` compares the two score sets (default: listwise
+        max abs diff)."""
+        out = {}
+        scores = {}
+        for name, chunk in (("per_step", 1), ("fused", CHUNK_STEPS)):
+            seconds, scores[name], trial = measure(chunk)
+            out[name] = _dispatch_row(seconds, trial)
+        out["speedup"] = out["per_step"]["seconds"] / out["fused"]["seconds"]
+        eq = equiv or (lambda a, b: float(max(abs(x - y)
+                                              for x, y in zip(a, b))))
+        out["equivalence_max_abs_diff"] = eq(scores["per_step"],
+                                             scores["fused"])
+        return out
+
+    def _ladder_measure(run_of):
+        """Warm a fresh trial (compiles + tracing), then time another;
+        ``run_of(trial)`` drives the ladder and returns ordered scores."""
+        def measure(chunk):
+            run_of(_chunk_trial(chunk))
+            trial = _chunk_trial(chunk)
+            t0 = time.time()
+            scores = run_of(trial)
+            return time.time() - t0, scores, trial
+        return measure
+
+    def _batch_flights(mkw):
+        def run(trial):
+            scores = []
+            for i in range(0, len(lcfgs), population):
+                scores.extend(
+                    trial.run_population(lcfgs[i:i + population], **mkw))
+            return scores
+        return run
+
+    def _refill_flight(trial):
+        feedc = _feed_scheduler(lcfgs)
+        trial.run_population([], mesh=mesh, scheduler=feedc)
+        return feedc.ordered_scores(len(lcfgs))
+
+    res["chunked"] = {
+        "chunk_steps": CHUNK_STEPS, "trials": len(lcfgs),
+        "budget_unit": CHUNK_UNIT,
+        "population": population, "batch": PBT_BATCH, "seq": PBT_SEQ,
+        "vmapped": _timed_pair(_ladder_measure(_batch_flights({}))),
+        "sharded": _timed_pair(_ladder_measure(_batch_flights({"mesh": mesh}))),
+        "refill": _timed_pair(_ladder_measure(_refill_flight)),
     }
 
     # -- streaming PBT vs generation-barriered serial PBT ----------------------
@@ -307,10 +435,10 @@ def _probe_main(argv) -> None:
             population=population, n_generations=PBT_ROUNDS, streaming=True,
             quantile=0.25)
 
-    def _pbt_stream(n_generations):
+    def _pbt_stream(n_generations, chunk=1):
         trial = PopulationTrial(arch, PBT_ROUND_STEPS, PBT_BATCH, PBT_SEQ,
                                 seed, population=population,
-                                per_trial_init=True)
+                                per_trial_init=True, chunk_steps=chunk)
         exp = Experiment({
             "proposer": "pbt", "parameter_config": PBT_SPACE,
             "n_samples": population * n_generations, "n_parallel": population,
@@ -364,6 +492,62 @@ def _probe_main(argv) -> None:
         "serial_host_ckpt_roundtrips": ptrial_serial.n_host_ckpt_roundtrips,
         "stream_host_ckpt_roundtrips": ptrial.n_host_ckpt_roundtrips,
         "equivalence_max_abs_diff": pbt_equiv,
+    }
+
+    # chunked PBT: same streaming engine, rounds dispatched as fused chunks
+    # (round ends are host-known events, so decisions are unchanged) — same
+    # pairing protocol as the other three engines, dict-keyed scores
+    _pbt_stream(1, chunk=CHUNK_STEPS)  # warm the PBT-geometry scan compiles
+
+    def _pbt_measure(chunk):
+        dtc, sc, ptrialc, _ = _pbt_stream(PBT_ROUNDS, chunk=chunk)
+        return dtc, sc, ptrialc
+
+    res["chunked"]["pbt_stream"] = _timed_pair(
+        _pbt_measure,
+        equiv=lambda a, b: float(max(abs(a[k2] - b[k2]) for k2 in a))
+        if set(a) == set(b) else float("inf"))
+
+    # -- async vs gated PBT: search quality on a longer horizon ----------------
+    def _pbt_quality(sync: bool) -> dict:
+        trial = PopulationTrial(arch, PBT_ROUND_STEPS, PBT_BATCH, PBT_SEQ,
+                                seed, population=population,
+                                per_trial_init=True)
+        exp = Experiment({
+            "proposer": "pbt", "parameter_config": PBT_SPACE,
+            "n_samples": population * PBT_QUALITY_ROUNDS,
+            "n_parallel": population, "target": "max", "seed": seed + 4,
+            "population": population, "n_generations": PBT_QUALITY_ROUNDS,
+            "streaming": True, "sync_rounds": sync, "quantile": 0.25,
+            "resource": "vectorized", "lane_refill": True}, trial)
+        scores: dict = {}
+        exp.add_result_callback(lambda job: scores.__setitem__(
+            (job.config.get("pbt_member"), job.config.get("pbt_round")),
+            job.result.score if job.result else None))
+        t0 = time.time()
+        exp.run()
+        dt = time.time() - t0
+        hook = exp.proposer.lifecycle_hook()
+        lags = [int(x) for x in hook.decision_lags]
+        finals = [s for (m, r), s in scores.items()
+                  if r == PBT_QUALITY_ROUNDS - 1 and s is not None]
+        return {
+            "seconds": dt,
+            "best_score": max(s for s in scores.values() if s is not None),
+            "best_final_round_score": max(finals) if finals else None,
+            "clones": trial.n_clones, "keeps": hook.n_keeps,
+            "splices": trial.n_splices,
+            "donor_waits": trial.n_donor_waits + hook.n_donor_waits,
+            "decision_lag_hist": np.bincount(lags).tolist() if lags else [],
+            "decision_lag_mean": float(np.mean(lags)) if lags else 0.0,
+            "decision_lag_max": int(max(lags)) if lags else 0,
+        }
+
+    res["pbt_async_quality"] = {
+        "members": population, "rounds": PBT_QUALITY_ROUNDS,
+        "round_steps": PBT_ROUND_STEPS,
+        "gated": _pbt_quality(True),
+        "async": _pbt_quality(False),
     }
 
     # -- cohort vs staggered rung rule on the longer-horizon ladder ------------
@@ -492,6 +676,7 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
 
     # -- streaming PBT + rung-rule comparison (same 8-device subprocess) -------
     results["pbt_stream"] = dict(probe["pbt_stream"])
+    results["pbt_async_quality"] = dict(probe["pbt_async_quality"])
     results["sha_rule_compare"] = dict(probe["sha_rule_compare"])
 
     # -- inflight-stop flights vs one continuous refill flight -----------------
@@ -501,6 +686,16 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
     refill_eff = refill.pop("eff_steps")
     refill_div = refill.pop("diverged")
     results["refill"] = refill
+
+    # -- fused chunked dispatch vs the per-step loops (all four engines) -------
+    chunked = dict(probe["chunked"])
+    results["chunked"] = chunked
+    chrefill = chunked["refill"]
+    chunked_equiv = float(max(
+        chunked[m]["equivalence_max_abs_diff"]
+        for m in ("vmapped", "sharded", "refill", "pbt_stream")))
+    chunked_vs_refill = chrefill["speedup"]
+    chunked_dispatch_ratio = chrefill["fused"]["dispatches_per_step"]
 
     # refill equivalence: every trial must score exactly what the serial
     # driver scores at the trial's *effective* step count — the original
@@ -539,6 +734,9 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
         and equiv <= SCORE_TOL
         and refill_vs_inflight >= REFILL_FLOOR
         and refill_equiv <= SCORE_TOL
+        and chunked_vs_refill >= CHUNKED_FLOOR
+        and chunked_equiv <= CHUNKED_SCORE_TOL
+        and chunked_dispatch_ratio < 1.0
         and pbt["speedup"] >= PBT_STREAM_FLOOR
         and pbt["equivalence_max_abs_diff"] <= PBT_SCORE_TOL
         and pbt["stream_host_ckpt_roundtrips"] == 0
@@ -551,9 +749,12 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
         "speedup_compile_once_vs_serial": speedup_once,
         "sharded_vs_vmapped_same_mesh": sharded_vs_vmapped,
         "refill_vs_inflight_stop_speedup": refill_vs_inflight,
+        "chunked_vs_refill_speedup": chunked_vs_refill,
+        "chunked_dispatches_per_step": chunked_dispatch_ratio,
         "pbt_stream_vs_serial_speedup": pbt["speedup"],
         "equivalence_max_abs_diff": equiv,
         "refill_equivalence_max_abs_diff": refill_equiv,
+        "chunked_equivalence_max_abs_diff": chunked_equiv,
         "pbt_equivalence_max_abs_diff": pbt["equivalence_max_abs_diff"],
         "pass": bool(ok),
         "paper_claim": (
@@ -563,6 +764,11 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
             f"vmapped on the same mesh; continuous lane refill "
             f"{refill_vs_inflight:.2f}x the inflight-stop flights on the same "
             f"ASHA ladder (scores = serial driver at effective budgets); "
+            f"fused chunked dispatch {chunked_vs_refill:.2f}x the per-step "
+            f"refill loop on the same ladder (scores bit-equal across all "
+            f"four engines, {chrefill['per_step']['dispatches']} -> "
+            f"{chrefill['fused']['dispatches']} device dispatches, "
+            f"{chunked_dispatch_ratio:.2f} per trained step); "
             f"streaming PBT {pbt['speedup']:.1f}x the generation-barriered "
             f"serial PBT driver at equal total steps (scores equal, "
             f"{pbt['serial_host_ckpt_roundtrips']} -> 0 host checkpoint "

@@ -121,7 +121,10 @@ class InFlightSuccessiveHalving:
         it is truncated to ``b``.  Early observations are optimistic (a lane
         with few predecessors always survives), matching ASHA's eager
         promotions; the history spans refills and flights, mirroring how ASHA
-        rungs accumulate across the whole experiment.
+        rungs accumulate across the whole experiment.  The refill engine
+        aligns its dispatch-chunk boundaries to these rung steps, so a lane
+        is observed at *exactly* its boundary whether the flight advances one
+        step or one fused chunk per device call.
 
         ``local_steps``/``budgets`` are lane-local; idle lanes carry budget 0
         and are skipped.  Diverged lanes are skipped too — the refill engine

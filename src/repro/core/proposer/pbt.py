@@ -88,8 +88,16 @@ class PBTLifecycle:
         self.quantile = float(quantile)
         self.rng = rng if rng is not None else np.random.default_rng(0)
         self._lock = threading.Lock()
-        self.window: deque = deque(maxlen=max(2, int(window)))  # (member, score)
+        # (member, score, round) — round is None for legacy callers; it feeds
+        # the decision-lag telemetry only, never the decision rule itself
+        self.window: deque = deque(maxlen=max(2, int(window)))
         self.last_score: Dict[int, float] = {}
+        # decision-lag telemetry: for every exploit/explore decision at round
+        # r, how stale each window entry informing it was, in rounds
+        # ((r - 1) - entry_round).  Gated (sync_rounds) mode is all zeros by
+        # construction; --pbt-async spreads — the `pbt_async_quality` bench
+        # row histograms this to quantify what dropping the gate costs.
+        self.decision_lags: List[int] = []
         # engine registry: member -> (flight epoch, lane).  A flight that dies
         # loses its device state, so a stale epoch means the member's weights
         # are gone and the engine must fall back to a fresh init.
@@ -104,12 +112,14 @@ class PBTLifecycle:
         self.n_donor_waits = 0
 
     # -- proposer side ----------------------------------------------------------
-    def note_result(self, member: int, score: float) -> None:
+    def note_result(self, member: int, score: float, rnd: Optional[int] = None) -> None:
         with self._lock:
-            self.window.append((int(member), float(score)))
+            self.window.append((int(member), float(score),
+                                None if rnd is None else int(rnd)))
             self.last_score[int(member)] = float(score)
 
-    def decide(self, member: int, own_cfg: Dict[str, Any]) -> Tuple[str, Optional[int], Dict[str, Any]]:
+    def decide(self, member: int, own_cfg: Dict[str, Any],
+               rnd: Optional[int] = None) -> Tuple[str, Optional[int], Dict[str, Any]]:
         """``(lifecycle, donor_member, hparams_cfg)`` for the member's next round.
 
         Exploit iff the member's latest score sits in the bottom ``quantile``
@@ -118,12 +128,21 @@ class PBTLifecycle:
         (floats scaled by ``perturb`` up or down through the unit cube,
         choices resampled with p=0.25) and the donor member is pinned until
         the device copy lands.  Otherwise the member keeps its own
-        hyperparameters and weights untouched.
+        hyperparameters and weights untouched.  ``rnd`` (the round being
+        decided) only feeds ``decision_lags`` telemetry.
         """
         with self._lock:
             entries = list(self.window)
             my = self.last_score.get(int(member))
-        scores = [s for _, s in entries]
+        if rnd is not None:
+            # staleness of the evidence behind this decision: a gated run
+            # decides round r strictly from round r-1 scores (lag 0); the
+            # async rule may be looking at arbitrarily old rounds
+            lags = [max(0, int(rnd) - 1 - er) for _, _, er in entries
+                    if er is not None]
+            with self._lock:
+                self.decision_lags.extend(lags)
+        scores = [s for _, s, _ in entries]
         n = len(scores)
         if my is None or n < 2:
             return "keep", None, dict(own_cfg)
@@ -133,7 +152,7 @@ class PBTLifecycle:
         # never a diverged sentinel
         hi = sorted(scores, reverse=True)[k - 1]
         donors: List[int] = []
-        for m, s in sorted(entries, key=lambda ms: -ms[1]):
+        for m, s, _ in sorted(entries, key=lambda ms: -ms[1]):
             if s >= hi and s > DIVERGED_SCORE and m != member and m not in donors:
                 donors.append(m)
         if my > lo or not donors:
@@ -315,7 +334,8 @@ class PBTProposer(Proposer):
         if r == 0:
             lifecycle, donor, cfg = "init", None, dict(self.members[m])
         else:
-            lifecycle, donor, cfg = self._lifecycle.decide(m, self.members[m])
+            lifecycle, donor, cfg = self._lifecycle.decide(
+                m, self.members[m], rnd=r)
             self.members[m] = dict(cfg)
         cfg.update(pbt_member=m, pbt_round=r, pbt_lifecycle=lifecycle, stream=m)
         if donor is not None:
@@ -344,7 +364,7 @@ class PBTProposer(Proposer):
             m, r = config.get("pbt_member"), config.get("pbt_round")
             if m is None or r is None:
                 return
-            self._lifecycle.note_result(m, score)
+            self._lifecycle.note_result(m, score, rnd=int(r))
             self.member_outstanding[m] = False
             self.member_round[m] = max(self.member_round[m], int(r) + 1)
             return
@@ -430,12 +450,12 @@ class PBTProposer(Proposer):
                 self.n_proposed += 1
                 self.n_updated += 1
                 self.history.append({"config": cfg, "score": sc})
-                self._lifecycle.note_result(m, sc)
+                self._lifecycle.note_result(m, sc, rnd=int(rnd))
                 self.member_round[m] = max(self.member_round[m], int(rnd) + 1)
             elif r.get("status") in ("failed", "killed", "lost"):
                 self.n_proposed += 1
                 self.n_failed += 1
-                self._lifecycle.note_result(m, float("-inf"))
+                self._lifecycle.note_result(m, float("-inf"), rnd=int(rnd))
                 self.member_round[m] = max(self.member_round[m], int(rnd) + 1)
             elif r.get("status") == "running":
                 # the Experiment re-queues this job; issuing the member again

@@ -27,7 +27,10 @@ fires the job callback immediately, Algorithm 1 releases the slot, the
 proposer refills it, and ``run()`` offers the new job straight into the live
 flight.  Freed lanes are re-initialized **inside the compiled program**
 (``repro.train.population.make_reset_lanes``), so the whole experiment can be
-one continuous flight with no inter-batch bubble.
+one continuous flight with no inter-batch bubble.  The engine polls the
+scheduler (lease/complete) only at *event* steps — with ``chunk_steps > 1``
+that cadence is per fused chunk, not per training step: offers made mid-chunk
+are picked up at the next chunk boundary.
 
 Lifecycle dispatch (streaming PBT): when the target carries a ``lifecycle``
 hook (``core.proposer.pbt.PBTLifecycle``, wired by the Experiment from the

@@ -1,4 +1,4 @@
-"""Deterministic synthetic data pipeline.
+"""Deterministic synthetic data pipeline — one pure generator, host AND device.
 
 Language modeling: a seeded 2nd-order Markov token stream — structured enough
 that a model visibly learns (loss drops from ln(V) toward the process
@@ -6,22 +6,202 @@ entropy), cheap enough for CPU smoke training, and exactly reproducible from
 ``(seed, step)`` so a restored checkpoint resumes on the *same* batch sequence
 (the data cursor is just the step counter).
 
-Host sharding: ``make_batch(step, shard, n_shards)`` yields that host's slice
-of the global batch; shards draw from disjoint seed streams.
+**Counter-based synthesis.** Every random draw is a pure function of its
+coordinates — ``hash(kind, seed, stream, step, shard, row, position)`` over
+32-bit integer arithmetic (xor / rotate / wrapping multiply) that NumPy and
+``jax.numpy`` execute bit-for-bit identically.  The same ``synth_batch``
+therefore runs on the host (``xp=numpy`` — the classic ``make_batch`` path)
+and *inside a compiled program* (``xp=jax.numpy`` — the fused multi-step scan
+engine synthesizes its batches on device, ``repro.train.population.
+make_population_scan_step``), and the two are bit-identical by construction.
+There is no sequential PRNG state: a batch at ``(stream, step)`` never
+depends on any other batch having been drawn.
 
-Per-trial streams (population HPO): ``stream`` folds an HPO trial's stream id
-into the PRNG seed so every trial of a population consumes an *independent*
-data sequence; ``make_population_batch`` stacks K such batches along a leading
-population axis for the vmapped/sharded engines.  ``stream=0`` reproduces the
-legacy shared stream bit-for-bit, so pre-stream checkpoints still resume on
-the same batch sequence.
+Host sharding: ``make_batch(step, shard, n_shards)`` yields that host's slice
+of the global batch; shards draw from disjoint hash streams.
+
+Per-trial streams (population HPO): ``stream`` is two extra hash words so
+every trial of a population consumes an *independent* data sequence;
+``make_population_batch`` stacks K such batches along a leading population
+axis for the vmapped/sharded engines.  Negative streams are reserved
+sentinels (idle/padding population lanes): they wrap to the top of the u64
+range, far from any real (small, non-negative) trial stream.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence
+from typing import Any, Dict, Sequence, Tuple
 
 import numpy as np
+
+_U64 = 0xFFFFFFFFFFFFFFFF
+_U32 = 0xFFFFFFFF
+
+# draw kinds: the leading hash word, so the three per-position draw families
+# (initial tokens / follow-the-rule uniforms / noise tokens) never collide
+_KIND_INIT = 0xA11CE
+_KIND_FOLLOW = 0xF0110
+_KIND_NOISE = 0x707E5
+
+
+def _rotl13(xp, h):
+    u = xp.uint32
+    return (h << u(13)) | (h >> u(19))
+
+
+def _hash_u32(xp, shape, words) -> Any:
+    """Combine integer ``words`` (scalars or arrays broadcastable against
+    ``shape`` — pre-expand trailing dims yourself) into one uint32 hash.
+
+    murmur3-style combine + finalizer over pure uint32 ops (xor, rotate,
+    wrapping ``*``/``+``, logical shifts) — every op is specified bit-exactly
+    by both NumPy and XLA, which is what makes host and device batches
+    bit-identical.
+    """
+    u = xp.uint32
+    h = xp.full(shape, 0x9E3779B9, dtype=xp.uint32)
+    for w in words:
+        if isinstance(w, (int, np.integer)):
+            # mask host ints before the array constructor sees them: a top-half
+            # sentinel word (e.g. 0xFFFFFFFF) must not overflow jnp's int32
+            # literal inference
+            w = np.uint32(int(w) & _U32)
+        w = xp.broadcast_to(xp.asarray(w).astype(xp.uint32), shape)
+        h = h ^ (w * u(0xCC9E2D51))
+        h = _rotl13(xp, h)
+        h = h * u(5) + u(0xE6546B64)
+    h = h ^ (h >> u(16))
+    h = h * u(0x85EBCA6B)
+    h = h ^ (h >> u(13))
+    h = h * u(0xC2B2AE35)
+    h = h ^ (h >> u(16))
+    return h
+
+
+def _u01(xp, h):
+    """uint32 hash -> float32 uniform in [0, 1): the top 24 bits scaled by
+    2^-24 — exact in float32, so the comparison against ``order_mix`` lands
+    identically on host and device."""
+    return (h >> xp.uint32(8)).astype(xp.float32) * xp.float32(2.0 ** -24)
+
+
+def _rule32(xp, a, b, vocab: int):
+    """Fixed pseudo-random bigram successor function (the Markov 'language').
+
+    Independent of seed/stream/step — it is the process being learned, not a
+    noise source — and pure uint32, so the recurrence replays identically
+    wherever it runs.
+    """
+    h = _hash_u32(xp, a.shape, [a.astype(xp.uint32), b.astype(xp.uint32)])
+    return (h % xp.uint32(vocab)).astype(xp.int32)
+
+
+def split_stream(stream: int) -> Tuple[int, int]:
+    """A (possibly negative, possibly 64-bit) stream id as two uint32 hash
+    words.  Negative sentinels wrap to the top of the u64 range, far from any
+    real (small, non-negative) trial stream."""
+    s = int(stream) & _U64
+    return s & _U32, (s >> 32) & _U32
+
+
+def split_streams(streams: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized ``split_stream``: two uint32[K] word arrays for the
+    population engines (host-built once per flight, consumed on device)."""
+    pairs = [split_stream(s) for s in streams]
+    return (np.asarray([p[0] for p in pairs], np.uint32),
+            np.asarray([p[1] for p in pairs], np.uint32))
+
+
+def synth_tokens(xp, spec: "SyntheticLM", rows_shape, step, stream_lo,
+                 stream_hi, shard=0):
+    """The pure generator: token array of shape ``rows_shape + (seq_len+1,)``.
+
+    ``rows_shape`` is the batch-rows shape (``(b,)`` for one batch,
+    ``(K, b)`` for a population); ``step`` / ``stream_lo`` / ``stream_hi`` /
+    ``shard`` are integers or arrays broadcastable against ``rows_shape``
+    (pass per-lane values shaped ``(K, 1)``).  With ``xp=numpy`` this is the
+    host path; with ``xp=jax.numpy`` it traces into a compiled program —
+    same bits either way.  ``step`` may be a traced scalar/array under jax.
+    """
+    vocab = int(spec.vocab_size)
+    row = xp.arange(rows_shape[-1], dtype=xp.uint32)
+    coords = [spec.seed, stream_lo, stream_hi, step, shard, row]
+
+    def draw(kind, t):
+        return _hash_u32(xp, rows_shape, [kind] + coords + [t])
+
+    def tok(kind, t):
+        return (draw(kind, t) % xp.uint32(vocab)).astype(xp.int32)
+
+    t0, t1 = tok(_KIND_INIT, 0), tok(_KIND_INIT, 1)
+    mix = xp.float32(spec.order_mix)
+
+    def next_tok(a, b, t):
+        follow = _u01(xp, draw(_KIND_FOLLOW, t)) < mix
+        return xp.where(follow, _rule32(xp, a, b, vocab), tok(_KIND_NOISE, t))
+
+    if xp is np:
+        toks = np.empty(rows_shape + (spec.seq_len + 1,), np.int32)
+        toks[..., 0], toks[..., 1] = t0, t1
+        for t in range(2, spec.seq_len + 1):
+            toks[..., t] = next_tok(toks[..., t - 2], toks[..., t - 1], t)
+        return toks
+    import jax
+
+    def body(carry, t):
+        a, b = carry
+        nxt = next_tok(a, b, t)
+        return (b, nxt), nxt
+
+    ts = xp.arange(2, spec.seq_len + 1, dtype=xp.uint32)
+    _, rest = jax.lax.scan(body, (t0, t1), ts)
+    rest = xp.moveaxis(rest, 0, -1)  # (T-2,) + rows -> rows + (T-2,)
+    return xp.concatenate([t0[..., None], t1[..., None], rest], axis=-1)
+
+
+def tokens_to_batch(xp, spec: "SyntheticLM", toks) -> Dict[str, Any]:
+    """``synth_tokens`` output -> the training-batch dict contract
+    (``tokens`` int32, ``targets`` int32, ``mask`` float32 ones)."""
+    return {
+        "tokens": toks[..., :-1],
+        "targets": toks[..., 1:].astype(xp.int32),
+        "mask": xp.ones(toks.shape[:-1] + (spec.seq_len,), xp.float32),
+    }
+
+
+def synth_batch(spec: "SyntheticLM", stream, step, *, xp=np, shard=0,
+                n_shards: int = 1) -> Dict[str, Any]:
+    """One training batch as a pure function of ``(stream, step)``.
+
+    The single source of truth for batch synthesis: ``SyntheticLM.make_batch``
+    is this with ``xp=numpy``; the fused scan engine calls it with
+    ``xp=jax.numpy`` and a traced ``step`` so batches materialize on device,
+    bit-identical to the host's.  ``stream`` must be a host int here (it is
+    split into hash words); traced per-lane streams go through
+    ``synth_population_batch``.
+    """
+    assert spec.global_batch % n_shards == 0
+    b = spec.global_batch // n_shards
+    lo, hi = split_stream(stream)
+    toks = synth_tokens(xp, spec, (b,), step, lo, hi, shard=shard)
+    return tokens_to_batch(xp, spec, toks)
+
+
+def synth_population_batch(spec: "SyntheticLM", stream_lo, stream_hi, steps,
+                           *, xp=np) -> Dict[str, Any]:
+    """K per-lane batches with a leading population axis, from per-lane
+    stream words (uint32[K], see ``split_streams``) and per-lane step cursors
+    (int[K]; traced under jax).  Lane ``i``'s slab is bit-identical to
+    ``synth_batch(spec, streams[i], steps[i])`` — the device-side twin of
+    ``make_population_batch``.
+    """
+    k = stream_lo.shape[0]
+    b = spec.global_batch
+    lo = xp.asarray(stream_lo)[:, None]
+    hi = xp.asarray(stream_hi)[:, None]
+    st = xp.asarray(steps)[:, None]
+    toks = synth_tokens(xp, spec, (k, b), st, lo, hi)
+    return tokens_to_batch(xp, spec, toks)
 
 
 @dataclasses.dataclass
@@ -32,36 +212,22 @@ class SyntheticLM:
     seed: int = 0
     order_mix: float = 0.85  # P(follow the markov rule) vs uniform noise
 
-    def _rule(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
-        # fixed pseudo-random bigram successor function
-        return (a * 6364136223846793005 + b * 1442695040888963407 + 1013904223) % self.vocab_size
+    @property
+    def spec_key(self) -> Tuple:
+        """Hashable identity of the generator — keys the scan-step compile
+        cache (a program bakes the batch synthesis in, so it is specific to
+        this exact stream definition)."""
+        return (int(self.vocab_size), int(self.seq_len),
+                int(self.global_batch), int(self.seed), float(self.order_mix))
 
     def make_batch(
         self, step: int, shard: int = 0, n_shards: int = 1, stream: int = 0
     ) -> Dict[str, np.ndarray]:
-        assert self.global_batch % n_shards == 0
-        b = self.global_batch // n_shards
-        # stream 0 keeps the legacy (seed, step, shard) entropy tuple so the
-        # shared-stream batch sequence is unchanged; nonzero streams extend it.
-        # Negative streams are reserved sentinels (idle/padding population
-        # lanes) — masking to uint64 keeps SeedSequence happy and lands them
-        # far away from any real (small, non-negative) trial stream.
-        stream = int(stream) & 0xFFFFFFFFFFFFFFFF
-        entropy = (self.seed, step, shard) + ((stream,) if stream else ())
-        rng = np.random.default_rng(entropy)
-        toks = np.empty((b, self.seq_len + 1), np.int32)
-        toks[:, 0] = rng.integers(self.vocab_size, size=b)
-        toks[:, 1] = rng.integers(self.vocab_size, size=b)
-        for t in range(2, self.seq_len + 1):
-            follow = rng.random(b) < self.order_mix
-            nxt = self._rule(toks[:, t - 2].astype(np.int64), toks[:, t - 1].astype(np.int64))
-            rand = rng.integers(self.vocab_size, size=b)
-            toks[:, t] = np.where(follow, nxt, rand)
-        return {
-            "tokens": toks[:, :-1],
-            "targets": toks[:, 1:].astype(np.int32),
-            "mask": np.ones((b, self.seq_len), np.float32),
-        }
+        """Host batch: ``synth_batch`` evaluated with NumPy.  Bit-identical
+        to the device synthesis at the same coordinates — the fused scan
+        engine's equivalence contract."""
+        return synth_batch(self, stream, int(step), xp=np, shard=int(shard),
+                           n_shards=int(n_shards))
 
     def make_population_batch(
         self, step, streams: Sequence[int]
@@ -75,10 +241,12 @@ class SyntheticLM:
         per lane: a *refilled* lane joined the flight late, so it replays its
         own stream from its own local step 0 while older lanes are further in.
         """
-        steps = [int(step)] * len(streams) if np.isscalar(step) else [int(s) for s in step]
+        steps = [int(step)] * len(streams) if np.isscalar(step) \
+            else [int(s) for s in step]
         assert len(steps) == len(streams)
-        per = [self.make_batch(st, stream=s) for st, s in zip(steps, streams)]
-        return {k: np.stack([p[k] for p in per]) for k in per[0]}
+        lo, hi = split_streams(streams)
+        return synth_population_batch(
+            self, lo, hi, np.asarray(steps, np.int64), xp=np)
 
 
 @dataclasses.dataclass

@@ -68,6 +68,17 @@ barriered serial driver (``run_pbt_serial``) decision-for-decision, while
 never visit the host — no ``pbt_ckpt`` checkpoint round-trip, no generation
 bubble (``pbt_host_ckpt_roundtrips`` stays 0 in the CLI telemetry).
 
+``--chunk-steps T`` fuses the innermost loop itself: instead of one host
+dispatch (and one host-built batch) per population step, the engines scan up
+to T steps inside one compiled program, synthesizing each step's batches *on
+device* from the per-lane stream ids and a traced step counter
+(``repro.data.pipeline.synth_batch`` runs bit-identically under NumPy and
+XLA).  Chunk boundaries always land on host-known event steps — rung
+boundaries, retirements, PBT round ends — and the divergence poll becomes
+chunk-granular, so ``--chunk-steps 1`` reproduces the per-step loop
+bit-for-bit while larger T trades divergence-reclaim latency for a ~T-fold
+cut in host dispatches.
+
 Vectorized/sharded mode is only valid when every proposal varies *traced*
 knobs: all trials must share the architecture and batch geometry.  Per-trial
 architecture params (d_model, n_layers, ... — e.g. the NAS/EAS space) change
@@ -83,6 +94,12 @@ import sys
 import time
 
 import numpy as np
+
+
+def _pow2_floor(n: int) -> int:
+    """Largest power of two <= max(n, 1) — chunk sizes come from here, so an
+    experiment compiles at most log2(chunk_steps)+1 fused-scan programs."""
+    return 1 << (max(int(n), 1).bit_length() - 1)
 
 
 def make_trial(arch: str, steps: int, batch: int, seq: int, seed: int):
@@ -167,7 +184,8 @@ class PopulationTrial:
     def __init__(self, arch: str, steps: int, batch: int, seq: int, seed: int,
                  population: int = 0, per_trial_streams: bool = True,
                  early_stop=None, per_trial_init: bool = False,
-                 refill_idle_grace_s: float = 0.25, lifecycle=None):
+                 refill_idle_grace_s: float = 0.25, lifecycle=None,
+                 chunk_steps: int = 1):
         self.arch = arch
         self.steps = int(steps)
         self.batch = int(batch)
@@ -177,6 +195,13 @@ class PopulationTrial:
         self.per_trial_streams = bool(per_trial_streams)
         self.per_trial_init = bool(per_trial_init)
         self.early_stop = early_stop
+        # fused multi-step dispatch: population engines advance up to this
+        # many steps per device call (a lax.scan with on-device batch
+        # synthesis), re-entering the host only at event steps.  1 = the
+        # per-step loop, bit-for-bit.
+        self.chunk_steps = max(1, int(chunk_steps))
+        self.n_dispatches = 0       # device calls issued (steps + lane ops)
+        self.n_train_steps = 0      # population steps those calls advanced
         # lane-lifecycle hook (streaming PBT): maps retire->refill directives
         # (keep / clone / init) onto compiled lane ops; wired by the
         # Experiment from the proposer's lifecycle_hook()
@@ -298,8 +323,10 @@ class PopulationTrial:
         import jax
         import jax.numpy as jnp
 
+        from ..data.pipeline import split_stream, split_streams
         from ..optim.hparams import stack_hparams
         from ..train.population import (
+            get_compiled_population_scan_step,
             get_compiled_population_step,
             get_compiled_sharded_population_step,
             init_population_state,
@@ -344,14 +371,46 @@ class PopulationTrial:
         if mesh is not None:
             pstate = shard_population_state(pstate, mesh)
         hook = self.early_stop
+        chunk = self.chunk_steps
+        if chunk > 1:
+            # fused dispatch: chunk boundaries align with the host-known event
+            # steps (rung boundaries, flight end), so the rung rule below sees
+            # exactly the state the per-step loop would at the same step
+            if self.per_trial_streams:
+                s_lo, s_hi = (jnp.asarray(w) for w in split_streams(streams))
+            else:
+                s_lo, s_hi = (jnp.uint32(w) for w in split_stream(0))
+
+            def scan_of(t):
+                return get_compiled_population_scan_step(
+                    tc, k, data, t, mesh=mesh,
+                    per_trial_batch=self.per_trial_streams)
+
         s = 0
         while s < int(budgets.max()):
-            if self.per_trial_streams:
-                batch = data.make_population_batch(s, streams)
+            t = 1
+            if chunk > 1:
+                max_b = int(budgets.max())
+                nxt = max_b
+                if hook is not None:
+                    for bnd in hook.boundaries:
+                        if s < bnd <= max_b:
+                            nxt = min(nxt, bnd)
+                            break
+                t = _pow2_floor(min(nxt - s, chunk))
+            if t > 1:
+                steps0 = (jnp.full((k,), s, jnp.int32) if self.per_trial_streams
+                          else jnp.asarray(s, jnp.int32))
+                pstate, _ = scan_of(t)(pstate, php, steps0, s_lo, s_hi)
             else:
-                batch = data.make_batch(s)
-            pstate, _ = pstep(pstate, batch, php)
-            s += 1
+                if self.per_trial_streams:
+                    batch = data.make_population_batch(s, streams)
+                else:
+                    batch = data.make_batch(s)
+                pstate, _ = pstep(pstate, batch, php)
+            self.n_dispatches += 1
+            self.n_train_steps += t
+            s += t
             if hook is not None and s in hook.boundaries:
                 new_budgets = hook(
                     s,
@@ -416,9 +475,11 @@ class PopulationTrial:
         import jax
         import jax.numpy as jnp
 
+        from ..data.pipeline import split_streams
         from ..optim.hparams import stack_hparams
         from ..train.population import (
             get_compiled_lane_op,
+            get_compiled_population_scan_step,
             get_compiled_population_step,
             get_compiled_sharded_population_step,
             init_population_state_from_keys,
@@ -443,6 +504,10 @@ class PopulationTrial:
         # one round -> the masked from-keys reset (one dispatch for the batch)
         splice_fn = get_compiled_lane_op(tc, k, "splice", mesh=mesh)
         init_fn = get_compiled_lane_op(tc, k, "init", mesh=mesh)
+        chunk = self.chunk_steps
+
+        def scan_of(t):
+            return get_compiled_population_scan_step(tc, k, data, t, mesh=mesh)
         lifecycle = self.lifecycle
         clone_fn = (get_compiled_lane_op(tc, k, "clone", mesh=mesh)
                     if lifecycle is not None else None)
@@ -477,20 +542,23 @@ class PopulationTrial:
             # trip between rounds: losing the flight loses every member's
             # device state (keep/clone would degrade to re-inits)
             grace = max(grace, 2.0)
-        # idle lanes consume a constant batch (their stream at step 0, never
-        # applied) — synthesize it once per (lane, stream), not per step
-        idle_cache: dict = {}
         parked: list = []   # leases that cannot run yet (busy donor / no lane)
         donor_waited: set = set()  # handles counted once, not per re-poll
         force_parked = False  # grace expired: degrade stuck directives to init
         # Retirements and rung boundaries happen at *host-known* global steps
         # (starts + budgets / starts + boundary), so the loop only materializes
         # device flags at those event steps instead of syncing every step —
-        # between events it just dispatches compiled steps back-to-back.
+        # between events it dispatches fused multi-step chunks (or, with
+        # chunk_steps=1, compiled per-step programs back-to-back).
         # Divergence is the one async event; a capped gap bounds how long a
         # diverged (frozen, masked) lane can occupy its slot before reclaim.
-        DIVERGE_CHECK_EVERY = 8
+        # Chunking makes that poll chunk-granular: the gap grows with the
+        # chunk so big chunks are not split by it — the divergence-reclaim
+        # latency is the price of fewer dispatches (shrink --chunk-steps if
+        # your search space diverges a lot).
+        DIVERGE_CHECK_EVERY = max(8, chunk)
         next_event = 0
+        s_lo, s_hi = (jnp.asarray(w) for w in split_streams(streams))
 
         def _next_event_step() -> int:
             ev = s + DIVERGE_CHECK_EVERY
@@ -554,6 +622,10 @@ class PopulationTrial:
                         # a lineage lane freezes without a restack: its device
                         # step counter equals its traced total_steps (or the
                         # divergence latch holds it) until the next directive
+                # the retire pass may have emptied the flight: recompute so the
+                # loop idles/returns instead of dispatching a no-op step (or,
+                # chunked, a whole no-op chunk) against all-frozen lanes
+                live = [i for i in range(k) if handles[i] is not None]
             # 2) lease pending proposals (parked ones first) and dispatch each
             # through its lane-lifecycle op
             pending, parked = parked + self._drain_leases(scheduler), []
@@ -683,6 +755,7 @@ class PopulationTrial:
                     pstate = clone_fn(pstate, jnp.asarray(mask),
                                       jnp.asarray(donor_idx, jnp.int32))
                     self.n_clones += len(clone_jobs)
+                    self.n_dispatches += 1
                     for _, _, cfg in clone_jobs:
                         lifecycle.clone_done(cfg)
                 if len(splice_jobs) == 1:
@@ -690,6 +763,7 @@ class PopulationTrial:
                     pstate = splice_fn(
                         pstate, jnp.asarray(lane, jnp.int32), lane_keys[lane])
                     self.n_splices += 1
+                    self.n_dispatches += 1
                 elif splice_jobs:
                     # several lanes this round (initial fill, mass refill):
                     # one masked reset beats a dispatch per lane
@@ -697,10 +771,12 @@ class PopulationTrial:
                     reset_mask[splice_jobs] = True
                     pstate = init_fn(
                         pstate, jnp.asarray(reset_mask), jnp.stack(lane_keys))
+                    self.n_dispatches += 1
                 live = [i for i in range(k) if handles[i] is not None]
                 force_parked = False
             if php_dirty:
                 php = stack_hparams(hps)
+                s_lo, s_hi = (jnp.asarray(w) for w in split_streams(streams))
             if not live:
                 # 3) flight idle: linger briefly for late proposals (Algorithm 1
                 # may be mid-callback), then return the lanes
@@ -722,23 +798,31 @@ class PopulationTrial:
                 continue
             idle_deadline = None
             next_event = _next_event_step()
-            # 4) one population step: lane i consumes ITS OWN stream at ITS OWN
-            # cursor (a refilled lane replays from 0; a keep/clone round
-            # continues the member's cursor at round * round_steps)
-            per = []
-            for i in range(k):
-                if handles[i] is not None:
-                    per.append(data.make_batch(
-                        int(base_data[i] + s - starts[i]), stream=streams[i]))
-                else:
-                    key = (i, streams[i])
-                    b = idle_cache.get(key)
-                    if b is None:
-                        b = idle_cache[key] = data.make_batch(0, stream=streams[i])
-                    per.append(b)
-            batch = {key: np.stack([p[key] for p in per]) for key in per[0]}
-            pstate, _ = pstep(pstate, batch, php)
-            s += 1
+            # 4) advance to the next event: lane i consumes ITS OWN stream at
+            # ITS OWN cursor (a refilled lane replays from 0; a keep/clone
+            # round continues the member's cursor at round * round_steps).
+            # With --chunk-steps > 1 the gap is covered by fused scans whose
+            # batches are synthesized on device — one dispatch per chunk
+            # instead of one (plus K host-built batches) per step; chunk
+            # boundaries land exactly on the event step.
+            t = _pow2_floor(min(next_event - s, chunk)) if chunk > 1 else 1
+            if t > 1:
+                steps0 = np.zeros(k, np.int64)
+                for i in range(k):
+                    if handles[i] is not None:
+                        steps0[i] = base_data[i] + s - starts[i]
+                pstate, _ = scan_of(t)(
+                    pstate, php, jnp.asarray(steps0, jnp.int32), s_lo, s_hi)
+            else:
+                # one vectorized synthesis call for all K lanes (idle lanes
+                # consume their sentinel stream at step 0 — never applied)
+                cursors = [int(base_data[i] + s - starts[i])
+                           if handles[i] is not None else 0 for i in range(k)]
+                batch = data.make_population_batch(cursors, streams)
+                pstate, _ = pstep(pstate, batch, php)
+            self.n_dispatches += 1
+            self.n_train_steps += t
+            s += t
         self.last_flight_steps = s
         return []
 
@@ -905,6 +989,13 @@ def main(argv=None) -> int:
     p.add_argument("--pbt-rounds", type=int, default=0,
                    help="training rounds per PBT member (0 = n-samples / "
                         "population)")
+    p.add_argument("--chunk-steps", type=int, default=1, metavar="T",
+                   help="with --vectorize: fuse up to T population steps into "
+                        "one device dispatch (lax.scan with on-device batch "
+                        "synthesis); chunk boundaries align with rung/"
+                        "retirement/PBT-round event steps, and T=1 reproduces "
+                        "the per-step loop bit-for-bit.  Larger T = fewer "
+                        "host dispatches but coarser divergence polling")
     p.add_argument("--per-trial-init", action="store_true",
                    help="fold each trial's stream/job id into its init PRNG "
                         "key so trials start from distinct weights (serial and "
@@ -956,6 +1047,9 @@ def main(argv=None) -> int:
     if args.lane_refill and args.shared_stream:
         p.error("--lane-refill needs per-trial data streams (a refilled lane "
                 "replays its own stream from step 0); drop --shared-stream")
+    if args.chunk_steps > 1 and args.vectorize <= 0:
+        p.error("--chunk-steps acts on the population engines; it requires "
+                "--vectorize K")
     per_trial_streams = not args.shared_stream
     if args.vectorize > 0:
         exp_cfg["resource"] = "sharded" if args.shard_population else "vectorized"
@@ -965,7 +1059,8 @@ def main(argv=None) -> int:
         trial = PopulationTrial(args.arch, args.steps, args.batch, args.seq,
                                 args.seed, population=args.vectorize,
                                 per_trial_streams=per_trial_streams,
-                                per_trial_init=args.per_trial_init)
+                                per_trial_init=args.per_trial_init,
+                                chunk_steps=args.chunk_steps)
     elif args.legacy_recompile:
         trial = make_trial(args.arch, args.steps, args.batch, args.seq, args.seed)
     else:
@@ -992,9 +1087,16 @@ def main(argv=None) -> int:
     out = {
         "proposer": args.proposer,
         "arch": args.arch,
-        "engine": engine + ("+refill" if args.lane_refill else ""),
+        "engine": engine + ("+refill" if args.lane_refill else "")
+                         + ("+chunked" if args.chunk_steps > 1 else ""),
         "vectorize": args.vectorize,
     }
+    if args.vectorize > 0 and getattr(trial, "n_train_steps", 0):
+        out["chunk_steps"] = args.chunk_steps
+        out["device_dispatches"] = trial.n_dispatches
+        out["trained_steps"] = trial.n_train_steps
+        out["dispatches_per_step"] = round(
+            trial.n_dispatches / trial.n_train_steps, 3)
     if getattr(trial, "early_stop", None) is not None:
         out["inflight_truncated_lanes"] = trial.early_stop.n_truncated
         out["inflight_reclaimed_diverged_lanes"] = trial.early_stop.n_reclaimed

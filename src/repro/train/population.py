@@ -260,25 +260,44 @@ def make_sharded_lane_clone(tc: TrainConfig, mesh: Mesh, axis: str = "pop") -> C
     """Donor clone with the K axis split over ``mesh``.
 
     ``donor_idx`` holds *global* lane ids, so a clone may cross a mesh
-    boundary: each device ``all_gather``s the population axis and takes its
-    own lanes' donors from the gathered copy.  The gather briefly materializes
-    the full K-lane state per device — fine for HPO-sized models; a
-    giant-model deployment would swap this for a point-to-point collective.
+    boundary.  Instead of ``all_gather``-ing the population axis (which
+    materializes the full K-lane state on every device — O(K) peak memory for
+    a copy that only ever needs one lane), the donor states travel
+    **point-to-point around a ring of ``ppermute``s**: round ``r`` rotates
+    each device's K/N lane block one hop, and a device whose donor lives
+    ``r`` hops upstream selects its donor's lane out of the passing block.
+    Peak extra memory is ONE block (K/N lanes) regardless of mesh size, total
+    wire traffic is the same N-1 blocks the gather moved, and the copied
+    values are bit-identical to the vmapped clone's.
     """
     from jax.experimental.shard_map import shard_map
 
+    n = int(mesh.shape[axis])
+
     def clone(pstate: PopState, mask: jax.Array, donor_idx: jax.Array) -> PopState:
-        take = lambda x: jnp.take(
-            jax.lax.all_gather(x, axis, axis=0, tiled=True), donor_idx, axis=0
-        )
-        donated = jax.tree.map(take, pstate["inner"])
+        blk = pstate["diverged"].shape[0]  # local lanes per device
+        me = jax.lax.axis_index(axis)
+        owner = donor_idx // blk           # device holding each lane's donor
+        local = donor_idx % blk            # donor's index inside that block
+        take = lambda t: jax.tree.map(lambda x: jnp.take(x, local, axis=0), t)
+        perm = [(i, (i + 1) % n) for i in range(n)]
+
+        buf = pstate                       # after r hops: block of device me-r
+        donated = take(buf)                # r = 0: donors on this device
+        for r in range(1, n):
+            buf = jax.tree.map(lambda x: jax.lax.ppermute(x, axis, perm), buf)
+            src = (me - r) % n
+            cand = take(buf)
+            donated = jax.tree.map(
+                lambda d, c: _per_trial(owner == src, c, d), donated, cand)
+
         inner = jax.tree.map(
-            lambda d, o: _per_trial(mask, d, o), donated, pstate["inner"]
+            lambda d, o: _per_trial(mask, d, o), donated["inner"], pstate["inner"]
         )
         return {
             "inner": inner,
-            "diverged": jnp.where(mask, take(pstate["diverged"]), pstate["diverged"]),
-            "last_loss": jnp.where(mask, take(pstate["last_loss"]), pstate["last_loss"]),
+            "diverged": jnp.where(mask, donated["diverged"], pstate["diverged"]),
+            "last_loss": jnp.where(mask, donated["last_loss"], pstate["last_loss"]),
         }
 
     pop = PartitionSpec(axis)
@@ -323,6 +342,87 @@ def make_sharded_lane_splice(tc: TrainConfig, mesh: Mesh, axis: str = "pop") -> 
         splice, mesh=mesh,
         in_specs=(pop, PartitionSpec(), PartitionSpec()),
         out_specs=pop,
+    )
+
+
+# -- fused multi-step scan (chunked execution) ----------------------------------
+#
+# The per-step drivers pay one host dispatch AND one host-built batch per
+# training step.  ``make_population_scan_step`` fuses T steps into ONE device
+# program: a ``jax.lax.scan`` over the population step whose batches are
+# synthesized *inside* the scan from per-lane stream words and a traced step
+# counter (``repro.data.pipeline.synth_population_batch`` — bit-identical to
+# the host's ``make_batch`` by construction, so the fused engine reproduces
+# the per-step loop exactly).  The host only re-enters at *event* steps
+# (rung boundaries, retirements, PBT rounds, the divergence poll), so chunk
+# boundaries are aligned to events by the drivers and T host dispatches
+# collapse to one per chunk.
+
+
+def make_population_scan_step(
+    tc: TrainConfig, data, chunk: int, per_trial_batch: bool = True
+) -> Callable:
+    """``(pstate, hp, steps0, stream_lo, stream_hi) -> (pstate, metrics)``
+    advancing every lane ``chunk`` steps in one program.
+
+    ``data`` is the ``SyntheticLM`` stream spec (baked in — the compiled
+    program *is* the data pipeline for these lanes); ``steps0`` is each
+    lane's data cursor at the chunk start (int32[K], or a scalar in
+    shared-stream mode) and ``stream_lo``/``stream_hi`` are the per-lane
+    stream words from ``split_streams`` (uint32[K], scalars in shared-stream
+    mode).  Step ``t`` of the chunk consumes exactly the batch the host loop
+    would build at cursor ``steps0 + t``; budget/divergence masking is the
+    ordinary population-step semantics, so a lane whose budget ends (or that
+    diverges) mid-chunk freezes in place and the chunk remains safe to run
+    past it.  ``metrics`` come back stacked with a leading ``(chunk,)`` axis.
+    """
+    from ..data.pipeline import synth_population_batch, synth_tokens, tokens_to_batch
+
+    step = make_population_train_step(tc, per_trial_batch=per_trial_batch)
+
+    def scan_chunk(pstate: PopState, hp: HParams, steps0, stream_lo, stream_hi):
+        def body(carry, t):
+            if per_trial_batch:
+                batch = synth_population_batch(
+                    data, stream_lo, stream_hi, steps0 + t, xp=jnp)
+            else:
+                toks = synth_tokens(
+                    jnp, data, (data.global_batch,), steps0 + t,
+                    stream_lo, stream_hi)
+                batch = tokens_to_batch(jnp, data, toks)
+            new, metrics = step(carry, batch, hp)
+            return new, metrics
+
+        return jax.lax.scan(
+            body, pstate, jnp.arange(int(chunk), dtype=jnp.int32))
+
+    return scan_chunk
+
+
+def make_sharded_population_scan_step(
+    tc: TrainConfig,
+    mesh: Mesh,
+    data,
+    chunk: int,
+    per_trial_batch: bool = True,
+    axis: str = "pop",
+) -> Callable:
+    """``shard_map`` twin of the fused scan: each device runs the T-step scan
+    over its own K/N lane block, synthesizing only its own lanes' batches on
+    device.  Stacked metrics come back partitioned on their lane axis
+    (leading axis is the chunk)."""
+    from jax.experimental.shard_map import shard_map
+
+    fn = make_population_scan_step(
+        tc, data, chunk, per_trial_batch=per_trial_batch)
+    pop = PartitionSpec(axis)
+    rep = PartitionSpec()
+    lane = pop if per_trial_batch else rep
+    return shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(pop, pop, lane, lane, lane),
+        out_specs=(pop, PartitionSpec(None, axis)),
     )
 
 
@@ -419,6 +519,47 @@ def get_compiled_sharded_population_step(
                 ),
                 donate_argnums=0,
             )
+            _POP_CACHE[key] = fn
+    return fn
+
+
+def get_compiled_population_scan_step(
+    tc: TrainConfig,
+    population: int,
+    data,
+    chunk: int,
+    mesh: Optional[Mesh] = None,
+    per_trial_batch: bool = True,
+    axis: str = "pop",
+):
+    """Memoized jitted fused-scan step (optionally the ``shard_map`` twin).
+
+    Keyed like the per-step programs plus the chunk length and the data
+    stream spec (``data.spec_key`` — the program bakes the batch synthesis
+    in).  Drivers dispatch power-of-two chunk sizes, so an experiment
+    compiles at most ``log2(chunk_steps) + 1`` scan programs per engine.
+    ``clear_population_cache()`` covers these entries too.
+    """
+    if mesh is not None and population % mesh.size:
+        raise ValueError(
+            f"population {population} does not divide over {mesh.size} devices; "
+            f"pad to {pad_population(population, mesh)} with 0-budget trials"
+        )
+    key = (
+        static_step_key(tc), int(population), bool(per_trial_batch),
+        "scan", int(chunk), data.spec_key,
+    ) + ((tuple(d.id for d in mesh.devices.flat), axis) if mesh is not None else ())
+    with _POP_CACHE_LOCK:
+        fn = _POP_CACHE.get(key)
+        if fn is None:
+            if mesh is None:
+                built = make_population_scan_step(
+                    tc, data, chunk, per_trial_batch=per_trial_batch)
+            else:
+                built = make_sharded_population_scan_step(
+                    tc, mesh, data, chunk,
+                    per_trial_batch=per_trial_batch, axis=axis)
+            fn = jax.jit(built, donate_argnums=0)
             _POP_CACHE[key] = fn
     return fn
 

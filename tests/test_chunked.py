@@ -1,0 +1,415 @@
+"""Fused multi-step scan engine (chunked execution) + device batch synthesis.
+
+Covers the chunked-dispatch contract end to end: the counter-based
+``synth_batch`` generator produces bit-identical batches under NumPy and XLA
+(including the negative sentinel streams padding lanes ride on); a fused
+``lax.scan`` chunk reproduces the per-step population loop bit-for-bit
+(vmapped and sharded); the drivers align chunk boundaries with rung /
+retirement / PBT-round event steps; a divergence latch set mid-chunk freezes
+the lane without corrupting the flight; the point-to-point (ring-``ppermute``)
+sharded clone matches the vmapped clone; and repeated chunked runs do not
+grow the compile cache (compile-leak guard).
+
+conftest.py forces an 8-virtual-device CPU mesh.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.core.experiment import Experiment
+from repro.core.proposer.early_stop import InFlightSuccessiveHalving
+from repro.core.resource.vectorized import QueueFeedScheduler
+from repro.data.pipeline import (
+    SyntheticLM,
+    split_stream,
+    split_streams,
+    synth_batch,
+    synth_population_batch,
+)
+from repro.distributed.sharding import population_mesh
+from repro.launch.hpo import PopulationTrial, _pow2_floor
+from repro.optim.hparams import hparams_from_dict, stack_hparams
+from repro.train import population as pop
+
+SEQ, BATCH = 16, 2
+ARCH = "starcoder2-3b"
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2, reason="needs a multi-device (virtual CPU) mesh"
+)
+
+
+@pytest.fixture(scope="module")
+def tc():
+    cfg = get_smoke_config(ARCH)
+    return TrainConfig(model=cfg, parallel=ParallelConfig(remat="none"),
+                       total_steps=8)
+
+
+@pytest.fixture(scope="module")
+def data(tc):
+    return SyntheticLM(tc.model.vocab_size, SEQ, BATCH, seed=0)
+
+
+def _keys(k):
+    return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        jax.random.PRNGKey(0), jnp.arange(k, dtype=jnp.uint32))
+
+
+def _php(tc, lrs, budgets):
+    return stack_hparams([
+        hparams_from_dict({"learning_rate": lr, "total_steps": b}, tc)
+        for lr, b in zip(lrs, budgets)
+    ])
+
+
+def _tree_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# -- device batch synthesis -------------------------------------------------------
+
+
+def test_synth_batch_device_host_bit_identity(data):
+    """The headline data contract: one generator, two executors, same bits —
+    including the negative sentinel streams idle/padding lanes consume."""
+    for stream in (0, 1, 7, 12345, -1, -3):
+        host = data.make_batch(5, stream=stream)
+        dev = jax.jit(
+            lambda st, s=stream: synth_batch(data, s, st, xp=jnp)
+        )(jnp.asarray(5, jnp.int32))
+        for k in host:
+            np.testing.assert_array_equal(host[k], np.asarray(dev[k]))
+            assert host[k].dtype == np.asarray(dev[k]).dtype
+
+
+def test_synth_population_batch_per_lane_cursors(data):
+    """Per-lane steps + streams: each lane's slab equals its own make_batch,
+    on host and on device, sentinels included."""
+    streams = [0, 9, -1, -2]
+    steps = np.asarray([0, 3, 1, 7])
+    lo, hi = split_streams(streams)
+    host = data.make_population_batch(steps, streams)
+    dev = jax.jit(
+        lambda st: synth_population_batch(data, lo, hi, st, xp=jnp)
+    )(jnp.asarray(steps, jnp.int32))
+    for k in host:
+        np.testing.assert_array_equal(host[k], np.asarray(dev[k]))
+    for i, (s, st) in enumerate(zip(streams, steps)):
+        np.testing.assert_array_equal(
+            host["tokens"][i], data.make_batch(int(st), stream=s)["tokens"])
+
+
+def test_synth_streams_independent_and_deterministic(data):
+    a = data.make_batch(5, stream=1)
+    assert not np.array_equal(a["tokens"], data.make_batch(5, stream=2)["tokens"])
+    assert not np.array_equal(a["tokens"], data.make_batch(6, stream=1)["tokens"])
+    np.testing.assert_array_equal(a["tokens"], data.make_batch(5, stream=1)["tokens"])
+    # sentinel streams are distinct from each other and from real streams
+    m1 = data.make_batch(1, stream=-1)["tokens"]
+    m2 = data.make_batch(1, stream=-2)["tokens"]
+    assert not np.array_equal(m1, m2)
+    assert not np.array_equal(m1, data.make_batch(1)["tokens"])
+
+
+# -- scan-vs-loop bit equality ----------------------------------------------------
+
+
+def test_scan_chunk_matches_per_step_loop_bitwise(tc, data):
+    k, t_chunk = 4, 8
+    streams = [0, 5, -1, 7]
+    lo, hi = split_streams(streams)
+    php = _php(tc, [1e-3, 3e-3, 2e-3, 5e-3], [8, 5, 8, 8])
+    pstep = pop.get_compiled_population_step(tc, k, per_trial_batch=True)
+    ps = pop.init_population_state_from_keys(_keys(k), tc)
+    for s in range(t_chunk):
+        ps, _ = pstep(ps, data.make_population_batch(s, streams), php)
+    scan = pop.get_compiled_population_scan_step(tc, k, data, t_chunk)
+    ps2 = pop.init_population_state_from_keys(_keys(k), tc)
+    ps2, metrics = scan(ps2, php, jnp.zeros(k, jnp.int32),
+                        jnp.asarray(lo), jnp.asarray(hi))
+    assert _tree_equal(ps, ps2), "fused scan must be bit-identical to the loop"
+    # stacked metrics: one entry per step of the chunk, per lane
+    assert np.asarray(metrics["loss"]).shape == (t_chunk, k)
+    # mid-chunk budget end: lane 1 (budget 5) froze inside the chunk
+    assert np.asarray(ps2["inner"]["opt"]["step"]).tolist() == [8, 5, 8, 8]
+
+
+@multi_device
+def test_sharded_scan_chunk_matches_vmapped_loop_bitwise(tc, data):
+    mesh = population_mesh()
+    k, t_chunk = pop.pad_population(jax.device_count(), mesh), 4
+    streams = list(range(3)) + [-(i + 1) for i in range(k - 3)]
+    lo, hi = split_streams(streams)
+    php = _php(tc, [2e-3] * k, [4, 4, 4] + [0] * (k - 3))
+    pstep = pop.get_compiled_population_step(tc, k, per_trial_batch=True)
+    ps = pop.init_population_state_from_keys(_keys(k), tc)
+    for s in range(t_chunk):
+        ps, _ = pstep(ps, data.make_population_batch(s, streams), php)
+    scan = pop.get_compiled_population_scan_step(tc, k, data, t_chunk, mesh=mesh)
+    ps2 = pop.shard_population_state(
+        pop.init_population_state_from_keys(_keys(k), tc), mesh)
+    ps2, _ = scan(ps2, php, jnp.zeros(k, jnp.int32),
+                  jnp.asarray(lo), jnp.asarray(hi))
+    assert _tree_equal(ps, ps2)
+
+
+def test_scan_chunk_shared_stream_mode(tc, data):
+    """per_trial_batch=False twin: one broadcast batch synthesized on device."""
+    k, t_chunk = 2, 4
+    php = _php(tc, [1e-3, 4e-3], [4, 4])
+    pstep = pop.get_compiled_population_step(tc, k, per_trial_batch=False)
+    ps = pop.init_population_state_from_keys(_keys(k), tc)
+    for s in range(t_chunk):
+        ps, _ = pstep(ps, data.make_batch(s), php)
+    scan = pop.get_compiled_population_scan_step(
+        tc, k, data, t_chunk, per_trial_batch=False)
+    lo, hi = split_stream(0)
+    ps2 = pop.init_population_state_from_keys(_keys(k), tc)
+    ps2, _ = scan(ps2, php, jnp.asarray(0, jnp.int32),
+                  jnp.uint32(lo), jnp.uint32(hi))
+    assert _tree_equal(ps, ps2)
+
+
+def test_divergence_latch_mid_chunk(tc, data):
+    """A lane going NaN inside a chunk freezes there (budget masking keeps the
+    rest training) and the latch/score match the per-step loop exactly."""
+    k, t_chunk = 2, 8
+    streams = [0, 1]
+    lo, hi = split_streams(streams)
+    php = _php(tc, [1e-3, 1e9], [8, 8])  # lane 1 diverges immediately
+    pstep = pop.get_compiled_population_step(tc, k, per_trial_batch=True)
+    ps = pop.init_population_state_from_keys(_keys(k), tc)
+    for s in range(t_chunk):
+        ps, _ = pstep(ps, data.make_population_batch(s, streams), php)
+    scan = pop.get_compiled_population_scan_step(tc, k, data, t_chunk)
+    ps2 = pop.init_population_state_from_keys(_keys(k), tc)
+    ps2, _ = scan(ps2, php, jnp.zeros(k, jnp.int32),
+                  jnp.asarray(lo), jnp.asarray(hi))
+    assert np.asarray(ps2["diverged"]).tolist() == [False, True]
+    assert _tree_equal(ps, ps2)
+    assert int(np.asarray(ps2["inner"]["opt"]["step"])[1]) < t_chunk
+
+
+# -- driver equivalence: chunk boundaries on event steps --------------------------
+
+
+def _ladder(n):
+    lrs = np.geomspace(3e-4, 4e-3, n)
+    budgets = ([1, 2, 4, 1, 2, 4] * ((n + 5) // 6))[:n]
+    return [{"learning_rate": float(lr), "stream": i, "n_iterations": int(b)}
+            for i, (lr, b) in enumerate(zip(lrs, budgets))]
+
+
+def _hook():
+    return InFlightSuccessiveHalving(eta=2.0, min_iter=2, max_iter=8)
+
+
+def test_batch_flights_chunked_bit_equal_with_rung_boundaries():
+    cfgs = _ladder(4)
+    s1 = PopulationTrial(ARCH, steps=2, batch=BATCH, seq=SEQ, seed=0,
+                         population=4, early_stop=_hook()
+                         ).run_population(cfgs)
+    t8 = PopulationTrial(ARCH, steps=2, batch=BATCH, seq=SEQ, seed=0,
+                         population=4, early_stop=_hook(), chunk_steps=8)
+    s8 = t8.run_population(cfgs)
+    assert s1 == s8, "chunked flights must reproduce the per-step loop"
+    assert t8.n_dispatches < t8.n_train_steps, \
+        "chunking must collapse dispatches below one per step"
+
+
+def test_streaming_refill_chunked_bit_equal(tc):
+    """Chunk boundaries land on retirements + rung boundaries: the streaming
+    engine's scores, effective budgets and lane schedule are unchanged."""
+    cfgs = _ladder(6)
+    outs = {}
+    for chunk in (1, 8):
+        t = PopulationTrial(ARCH, steps=2, batch=BATCH, seq=SEQ, seed=0,
+                            population=2, early_stop=_hook(),
+                            refill_idle_grace_s=0.0, chunk_steps=chunk)
+        feed = QueueFeedScheduler(cfgs)
+        t.run_population([], scheduler=feed)
+        outs[chunk] = (feed.ordered_scores(len(cfgs)),
+                       [feed.extras[i]["steps"] for i in range(len(cfgs))],
+                       [feed.extras[i]["lane"] for i in range(len(cfgs))],
+                       t.last_flight_steps)
+    assert outs[1] == outs[8]
+
+
+@multi_device
+def test_streaming_refill_chunked_sharded_bit_equal():
+    mesh = population_mesh()
+    cfgs = _ladder(6)
+    outs = {}
+    for chunk in (1, 4):
+        t = PopulationTrial(ARCH, steps=2, batch=BATCH, seq=SEQ, seed=0,
+                            population=jax.device_count(),
+                            early_stop=_hook(), refill_idle_grace_s=0.0,
+                            chunk_steps=chunk)
+        feed = QueueFeedScheduler(cfgs)
+        t.run_population([], mesh=mesh, scheduler=feed)
+        outs[chunk] = feed.ordered_scores(len(cfgs))
+    assert outs[1] == outs[4]
+
+
+def test_streaming_divergent_lane_retires_under_chunking():
+    """A diverged lane is noticed at a chunk-granular poll, retired with the
+    sentinel score, and its lane refills — same scores as per-step."""
+    cfgs = _ladder(4)
+    cfgs[1]["learning_rate"] = 1e9  # diverges at its first step
+    cfgs[1]["grad_clip"] = 0.0
+    outs = {}
+    for chunk in (1, 8):
+        t = PopulationTrial(ARCH, steps=4, batch=BATCH, seq=SEQ, seed=0,
+                            population=2, refill_idle_grace_s=0.0,
+                            chunk_steps=chunk)
+        feed = QueueFeedScheduler(cfgs)
+        t.run_population([], scheduler=feed)
+        outs[chunk] = (feed.ordered_scores(len(cfgs)),
+                       [feed.extras[i]["diverged"] for i in range(len(cfgs))])
+    assert outs[1] == outs[8]
+    assert outs[8][0][1] == PopulationTrial.DIVERGED_SCORE
+    assert outs[8][1][1] is True
+
+
+def test_streaming_pbt_chunked_matches_per_step():
+    """PBT rounds are host-known events: the chunked streaming engine makes
+    the same keep/clone decisions and scores as the per-step engine."""
+    from repro.launch import hpo
+
+    def run(chunk):
+        argv = ["--proposer", "pbt", "--vectorize", "4", "--pbt-streaming",
+                "--n-samples", "8", "--steps", "2", "--batch", "2",
+                "--seq", "16", "--per-trial-init",
+                "--chunk-steps", str(chunk)]
+        import io
+        from contextlib import redirect_stdout
+        buf = io.StringIO()
+        with redirect_stdout(buf):
+            assert hpo.main(argv) == 0
+        import json
+        return json.loads(buf.getvalue())
+
+    a, b = run(1), run(8)
+    assert a["best_score"] == b["best_score"]
+    assert a["pbt_clones"] == b["pbt_clones"]
+    assert a["pbt_keeps"] == b["pbt_keeps"]
+    assert b["dispatches_per_step"] < 1.0
+
+
+# -- chunk-size decomposition -----------------------------------------------------
+
+
+def test_pow2_floor_chunk_decomposition():
+    assert [_pow2_floor(n) for n in (1, 2, 3, 4, 5, 7, 8, 9, 100)] == \
+        [1, 2, 2, 4, 4, 4, 8, 8, 64]
+    # greedy decomposition of a gap covers it exactly, never overshooting
+    for gap in (1, 3, 5, 7, 11, 13):
+        s, sizes = 0, []
+        while s < gap:
+            t = _pow2_floor(min(gap - s, 8))
+            sizes.append(t)
+            s += t
+        assert s == gap and all(x <= 8 for x in sizes)
+
+
+# -- point-to-point sharded clone -------------------------------------------------
+
+
+@multi_device
+def test_ppermute_clone_matches_vmapped_clone_all_donor_pairs(tc):
+    """The ring-ppermute donor transfer is bit-equal to the vmapped clone for
+    every (target, donor) pair, including donors crossing mesh boundaries."""
+    mesh = population_mesh()
+    k = pop.pad_population(jax.device_count(), mesh)
+    vclone = pop.make_lane_clone(tc)
+    sclone = pop.get_compiled_lane_op(tc, k, "clone", mesh=mesh)
+    base = pop.init_population_state_from_keys(_keys(k), tc)
+    for target, donor in [(0, k - 1), (k - 1, 0), (1, 2), (3, 3),
+                          (k // 2, k // 2 - 1)]:
+        mask = np.zeros(k, bool)
+        mask[target] = True
+        didx = np.arange(k)
+        didx[target] = donor
+        want = vclone(base, jnp.asarray(mask), jnp.asarray(didx, jnp.int32))
+        got = sclone(
+            pop.shard_population_state(
+                pop.init_population_state_from_keys(_keys(k), tc), mesh),
+            jnp.asarray(mask), jnp.asarray(didx, jnp.int32))
+        assert _tree_equal(want, got), (target, donor)
+
+
+# -- compile-leak guard -----------------------------------------------------------
+
+
+def test_chunked_runs_do_not_grow_compile_cache():
+    """clear_population_cache() covers the scan programs, and repeated chunked
+    runs reuse them instead of compiling fresh entries."""
+    pop.clear_population_cache()
+    assert len(pop._POP_CACHE) == 0
+    cfgs = _ladder(4)
+
+    def run():
+        t = PopulationTrial(ARCH, steps=2, batch=BATCH, seq=SEQ, seed=0,
+                            population=2, early_stop=_hook(),
+                            refill_idle_grace_s=0.0, chunk_steps=8)
+        feed = QueueFeedScheduler(cfgs)
+        t.run_population([], scheduler=feed)
+
+    run()
+    n_first = len(pop._POP_CACHE)
+    assert n_first > 0
+    for _ in range(2):
+        run()
+    assert len(pop._POP_CACHE) == n_first, \
+        "repeated chunked flights must not leak compile-cache entries"
+    pop.clear_population_cache()
+    assert len(pop._POP_CACHE) == 0
+
+
+def test_chunk_steps_smoke_cli():
+    """The CI smoke entry (`REPRO_CHUNK_SMOKE=1`) runs the heavier CLI with
+    --lane-refill --chunk-steps 8; locally a lighter variant stays always-on."""
+    import os
+
+    from repro.launch.hpo import main
+
+    heavy = os.environ.get("REPRO_CHUNK_SMOKE") == "1"
+    argv = ["--proposer", "asha", "--vectorize", "4", "--inflight-stop",
+            "--lane-refill", "--chunk-steps", "8",
+            "--n-samples", "6" if heavy else "4",
+            "--steps", "8" if heavy else "4", "--batch", "2", "--seq", "16"]
+    assert main(argv) == 0
+
+
+def test_pbt_decision_lag_telemetry_gated_is_zero():
+    """Gated rounds decide round r strictly from round r-1 results: every
+    decision-lag sample is 0.  (The bench's pbt_async_quality row relies on
+    this baseline.)"""
+    from repro.core.proposer import make_proposer
+    from repro.core.search_space import SearchSpace
+
+    space = SearchSpace.from_json([
+        {"name": "learning_rate", "type": "float", "range": [1e-4, 1e-2],
+         "scale": "log"}])
+    prop = make_proposer("pbt", space, maximize=True, seed=0, population=3,
+                         n_generations=3, streaming=True, sync_rounds=True)
+    trial = PopulationTrial(ARCH, steps=1, batch=BATCH, seq=SEQ, seed=0,
+                            population=3, per_trial_init=True)
+    exp = Experiment({
+        "proposer": "pbt", "parameter_config": [
+            {"name": "learning_rate", "type": "float", "range": [1e-4, 1e-2],
+             "scale": "log"}],
+        "n_samples": 9, "n_parallel": 3, "target": "max", "seed": 0,
+        "population": 3, "n_generations": 3, "streaming": True,
+        "sync_rounds": True, "resource": "vectorized", "lane_refill": True},
+        trial)
+    exp.run()
+    hook = exp.proposer.lifecycle_hook()
+    assert len(hook.decision_lags) > 0
+    assert set(hook.decision_lags) == {0}

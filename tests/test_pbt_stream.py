@@ -269,14 +269,14 @@ def test_streaming_pbt_sharded_matches_vmapped():
 
 
 def test_serial_driver_clones_read_generation_boundary_checkpoints():
-    """Regression: with population 8 at seed 3, member 5 clones donor 1 — a
-    donor with a LOWER member index, whose serial round runs earlier in the
-    generation loop.  The serial driver must restore the donor's
-    generation-boundary snapshot (classic PBT barrier semantics, what the
-    streaming engine's donor pin enforces), not the checkpoint the donor
-    already advanced this generation — that bug showed up as a ~1e-3 score
-    gap against the (correct) streaming engine."""
-    k, rounds, steps = 8, 2, 4
+    """Regression: with population 8 at seed 3 (6 steps/round), members 2 and
+    6 clone donors 0 and 1 — donors with a LOWER member index, whose serial
+    rounds run earlier in the generation loop.  The serial driver must
+    restore the donor's generation-boundary snapshot (classic PBT barrier
+    semantics, what the streaming engine's donor pin enforces), not the
+    checkpoint the donor already advanced this generation — that bug showed
+    up as a ~1e-3 score gap against the (correct) streaming engine."""
+    k, rounds, steps = 8, 2, 6
     serial_trial = PopulationTrial(ARCH, steps=steps, batch=BATCH, seq=SEQ,
                                    seed=0, per_trial_init=True)
     prop = _make_proposer(seed=3, k=k, rounds=rounds)
