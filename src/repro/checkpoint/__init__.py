@@ -1,1 +1,1 @@
-from .checkpointer import Checkpointer
+from .checkpointer import Checkpointer, LaneSnapshotStore

@@ -92,6 +92,7 @@ class Checkpointer:
     def _write(self, step: int, flat: Dict[str, np.ndarray], extra: Dict[str, Any]) -> str:
         final = os.path.join(self.dir, f"step_{step:08d}")
         tmp = final + ".tmp"
+        old = final + ".old"
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
@@ -99,23 +100,51 @@ class Checkpointer:
         manifest = {"step": step, "time": time.time(), "keys": sorted(flat), **extra}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f, indent=1, default=str)
+        # atomic replace: never a window with NO restorable copy of this step.
+        # rmtree(final) before the rename would lose the checkpoint if the
+        # process dies in between — instead the previous dir is renamed aside
+        # and only removed once the new one is in place; ``all_steps`` /
+        # ``restore`` pick up an orphaned ``.old`` left by a crash here.
+        if os.path.exists(old):
+            shutil.rmtree(old)  # leftover from a previous crash, superseded
         if os.path.exists(final):
-            shutil.rmtree(final)
+            os.rename(final, old)
         os.rename(tmp, final)
+        if os.path.exists(old):
+            shutil.rmtree(old)
         self._gc()
         return final
 
     def _gc(self) -> None:
         steps = self.all_steps()
         for s in steps[: -self.keep] if self.keep > 0 else []:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+            base = os.path.join(self.dir, f"step_{s:08d}")
+            shutil.rmtree(base, ignore_errors=True)
+            shutil.rmtree(base + ".old", ignore_errors=True)
 
     # -- restore ---------------------------------------------------------------------
     def all_steps(self) -> List[int]:
-        out = []
+        """Steps with a restorable checkpoint.  Non-conforming ``step_*``
+        entries (junk files, partial copies) are skipped with a warning
+        instead of bricking resume; an orphaned ``step_N.old`` (crash between
+        the two renames in ``_write``) counts as step N."""
+        import warnings
+
+        out = set()
         for name in os.listdir(self.dir):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                out.append(int(name[5:]))
+            if not name.startswith("step_") or name.endswith(".tmp"):
+                continue
+            base = name[:-4] if name.endswith(".old") else name
+            try:
+                step = int(base[5:])
+            except ValueError:
+                warnings.warn(
+                    f"ignoring non-checkpoint entry {name!r} in {self.dir}",
+                    stacklevel=2)
+                continue
+            if name.endswith(".old") and os.path.exists(os.path.join(self.dir, base)):
+                continue  # superseded: the final dir for this step exists
+            out.add(step)
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
@@ -127,8 +156,97 @@ class Checkpointer:
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         path = os.path.join(self.dir, f"step_{step:08d}")
+        if not os.path.exists(path) and os.path.exists(path + ".old"):
+            path += ".old"  # crash between _write's renames: old copy survives
         with np.load(os.path.join(path, "arrays.npz")) as z:
             flat = {k: z[k] for k in z.files}
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
         return _unflatten(flat), manifest
+
+
+class LaneSnapshotStore:
+    """Per-trial lane snapshots for crash-safe streaming flights.
+
+    Keyed by *lineage* — the trial's data-stream id, which is stable across
+    flight restarts and ``--resume`` (the Experiment re-stamps a re-queued
+    job's original stream) — each entry holds the latest harvested lane state
+    (``make_lane_snapshot``) plus the host cursors needed to resume the lane
+    mid-budget: local step, data cursor, applied-step base, stream word.
+
+    In-memory always (flight-restart recovery inside one process); with
+    ``root`` each ``put`` additionally lands on disk through a per-lineage
+    ``Checkpointer`` (atomic replace, junk-hardened listing), which is what
+    ``--resume`` reads after a host crash.  ``forget`` drops a completed
+    trial's snapshot — it can never be leased again.
+    """
+
+    def __init__(self, root: Optional[str] = None, keep: int = 2):
+        self.root = root
+        self.keep = int(keep)
+        self._mem: Dict[int, Tuple[Any, Dict[str, Any]]] = {}
+        self._ckpt: Dict[int, Checkpointer] = {}
+        self._lock = threading.Lock()
+        self.n_persisted = 0
+        if root:
+            os.makedirs(root, exist_ok=True)
+
+    def _ckpt_of(self, lineage: int) -> Checkpointer:
+        with self._lock:
+            ck = self._ckpt.get(lineage)
+            if ck is None:
+                ck = Checkpointer(
+                    os.path.join(self.root, f"lineage_{int(lineage)}"),
+                    keep=self.keep)
+                self._ckpt[lineage] = ck
+        return ck
+
+    def put(self, lineage: int, snap: Any, meta: Dict[str, Any]) -> None:
+        lineage = int(lineage)
+        with self._lock:
+            self._mem[lineage] = (snap, dict(meta))
+        if self.root:
+            self._ckpt_of(lineage).save(int(meta["local"]), snap, extra=meta)
+            self.n_persisted += 1
+
+    def get(self, lineage: int) -> Optional[Tuple[Any, Dict[str, Any]]]:
+        lineage = int(lineage)
+        with self._lock:
+            hit = self._mem.get(lineage)
+        if hit is not None:
+            return hit
+        if not self.root:
+            return None
+        d = os.path.join(self.root, f"lineage_{lineage}")
+        if not os.path.isdir(d):
+            return None
+        ck = self._ckpt_of(lineage)
+        if ck.latest_step() is None:
+            return None
+        snap, manifest = ck.restore()
+        with self._lock:
+            self._mem[lineage] = (snap, manifest)
+        return snap, manifest
+
+    def forget(self, lineage: int) -> None:
+        lineage = int(lineage)
+        with self._lock:
+            self._mem.pop(lineage, None)
+            self._ckpt.pop(lineage, None)
+        if self.root:
+            shutil.rmtree(
+                os.path.join(self.root, f"lineage_{lineage}"), ignore_errors=True)
+
+    def lineages(self) -> List[int]:
+        """Every lineage with a restorable snapshot (memory or disk)."""
+        out = set()
+        with self._lock:
+            out.update(self._mem)
+        if self.root and os.path.isdir(self.root):
+            for name in os.listdir(self.root):
+                if name.startswith("lineage_"):
+                    try:
+                        out.add(int(name[8:]))
+                    except ValueError:
+                        continue
+        return sorted(out)

@@ -32,11 +32,12 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
 
+from . import faultinject
 from .basic_config import BasicConfig
 from .job import Job, JobStatus
 from .proposer import make_proposer
 from .resource import ResourceManager, get_resource_manager_cls
-from .tracking.database import TrackingDB
+from .tracking.database import FlightJournal, TrackingDB
 
 
 class Experiment:
@@ -64,7 +65,9 @@ class Experiment:
             not in (
                 "proposer", "parameter_config", "target", "resource", "script",
                 "n_parallel", "db_path", "workdir", "job_deadline_s", "max_retries",
-                "lane_refill",
+                "lane_refill", "cli", "snapshot_every", "snapshot_dir",
+                "max_flight_restarts", "restart_backoff_s",
+                "finish_join_timeout_s", "fault_spec", "resume",
             )
         }
         self.proposer = make_proposer(
@@ -81,6 +84,10 @@ class Experiment:
                 rm_kwargs["workdir"] = self.exp_config["workdir"]
             if self.exp_config.get("lane_refill"):
                 rm_kwargs["lane_refill"] = True
+            for k in ("max_flight_restarts", "restart_backoff_s",
+                      "finish_join_timeout_s"):
+                if self.exp_config.get(k) is not None:
+                    rm_kwargs[k] = self.exp_config[k]
             self.rm = rm_cls(**rm_kwargs)
             # unknown kwargs are silently swallowed by ResourceManager.__init__;
             # a streaming request that cannot stream must fail loudly instead
@@ -144,14 +151,32 @@ class Experiment:
             self._cond.notify_all()
 
     # -- helpers ------------------------------------------------------------------
+    def _wire_journal(self) -> None:
+        """Hand a ``FlightJournal`` to every collaborator exposing a
+        ``journal`` slot (the streaming resource managers and the population
+        trial), so flight deaths / restarts / snapshots / lane leases land in
+        the tracking DB as write-ahead rows keyed to this experiment."""
+        if self.exp_id is None:
+            return
+        journal = FlightJournal(self.db, self.exp_id)
+        for obj in (self.rm, self.target):
+            if hasattr(obj, "journal") and getattr(obj, "journal") is None:
+                obj.journal = journal
+
     def _next_configs(self, k: int) -> List[tuple]:
         """Up to ``k`` ``(config, n_prior_retries)`` pairs: requeued jobs first,
         then a batched drain of the proposer (``get_params``) so synchronous
-        proposers can fill a whole population of resources per loop pass."""
+        proposers can fill a whole population of resources per loop pass.
+
+        The requeue drains even when the proposer reports ``finished()`` —
+        after a crash-resume every remaining job can be a re-queued lineage
+        with zero proposals left to draw, and skipping the drain would strand
+        them (the loop would spin on "finished but requeue non-empty")."""
         out: List[tuple] = []
         while self._requeue and len(out) < k:
             out.append(self._requeue.pop(0))
-        out.extend((cfg, 0) for cfg in self.proposer.get_params(k - len(out)))
+        if len(out) < k and not self.proposer.finished():
+            out.extend((cfg, 0) for cfg in self.proposer.get_params(k - len(out)))
         return out
 
     def _drain_finished_locked(self) -> None:
@@ -177,10 +202,18 @@ class Experiment:
                 # per-job retry counter rides on the Job itself: distinct
                 # proposals with identical params keep separate retry budgets
                 n = getattr(job, "retries", 0)
-                if n < self.max_retries:
+                if n < self.max_retries and not getattr(job, "quarantined", False):
                     cfg = {k: v for k, v in job.config.items() if k != "job_id"}
+                    # the retry must keep the lineage's data stream: anonymous
+                    # configs stream by job_id, and the new attempt gets a NEW
+                    # job_id — without this stamp a retried trial would train
+                    # on different batches than the original (and than an
+                    # uninterrupted run)
+                    cfg.setdefault("stream", job.job_id)
                     self._requeue.append((cfg, n + 1))
                 else:
+                    # quarantined jobs (poison lane across consecutive flight
+                    # deaths) skip their remaining retry budget by design
                     self.proposer.update(None, job)
                     self._fire_result_callbacks(job)
 
@@ -200,6 +233,7 @@ class Experiment:
     def run(self, poll_interval: float = 0.02) -> Optional[Dict[str, Any]]:
         if self.exp_id is None:
             self.exp_id = self.db.create_experiment(self.exp_config, self.user)
+        self._wire_journal()
         t0 = time.time()
         while True:
             with self._cond:
@@ -227,7 +261,17 @@ class Experiment:
 
             with self._cond:
                 self._drain_finished_locked()
-                pairs = [] if self.proposer.finished() else self._next_configs(len(resources))
+                pairs = self._next_configs(len(resources))
+                if pairs:
+                    # write-ahead: the proposer's draw state lands in the DB
+                    # before the drawn configs are acted on, so a resumed
+                    # proposer continues the exact sequence an uninterrupted
+                    # run would have produced (running rows replay as proposed)
+                    try:
+                        self.db.save_proposer_state(
+                            self.exp_id, self.proposer.state_json())
+                    except Exception:
+                        pass  # state WAL is best-effort, never the data path
             if not pairs:
                 for r in resources:
                     self.rm.release(r)
@@ -240,6 +284,9 @@ class Experiment:
             for (cfg, retries), r in zip(pairs, resources):
                 job_id = self._next_job_id
                 self._next_job_id += 1
+                # chaos hook: 'raise@issue=N' — the classic between-batches
+                # controller crash, right before job N lands in the DB
+                faultinject.check("issue", issue=job_id)
                 cfg = dict(cfg)
                 cfg["job_id"] = job_id  # paper Code 1: job_id rides in the BasicConfig
                 bc = BasicConfig(**cfg)
@@ -286,13 +333,32 @@ class Experiment:
         exp = cls(row["exp_config"], target, db=db, resource_manager=resource_manager, user=user)
         exp.exp_id = exp_id
         rows = db.jobs(exp_id)
-        exp.proposer.replay(rows)
+        # rows a *previous* resume marked lost ("controller crash") were
+        # re-queued then under a new job id whose own row carries the outcome;
+        # replaying them again would double-count the lineage on the 2nd+
+        # resume (once as failed, once via the successor's row)
+        live_rows = [r for r in rows
+                     if not (r["status"] == "lost"
+                             and r.get("error") == "controller crash")]
+        exp.proposer.replay(live_rows)
+        # the draw-state WAL puts the RNG back where the last proposal batch
+        # left it, so the remaining draws continue the uninterrupted sequence
+        exp.proposer.load_state_json(db.load_proposer_state(exp_id))
         max_id = -1
         for r in rows:
             max_id = max(max_id, int(r["job_id"]))
             if r["status"] == "running":  # mid-flight at crash -> re-queue
                 cfg = {k: v for k, v in r["config"].items() if k != "job_id"}
+                # keep the lineage's data stream across the new job id (see
+                # the retry path) — bit-identical resume depends on it
+                cfg.setdefault("stream", r["config"].get("stream", r["job_id"]))
                 exp._requeue.append((cfg, 0))
                 db.record_job_end(exp_id, r["job_id"], "lost", None, None, "controller crash")
         exp._next_job_id = max_id + 1
+        exp._wire_journal()
+        try:
+            db.journal_append(exp_id, "resume",
+                              detail={"requeued": len(exp._requeue)})
+        except Exception:
+            pass
         return exp

@@ -142,7 +142,13 @@ class Proposer(abc.ABC):
 
     # -- crash-resume -----------------------------------------------------------
     def replay(self, rows: Sequence[Dict[str, Any]]) -> None:
-        """Rebuild state from tracking-DB job rows (finished ones only)."""
+        """Rebuild state from tracking-DB job rows.
+
+        Rows still ``running`` at the crash count as *proposed* (the
+        Experiment re-queues them under new job ids without consulting the
+        proposer), so a resumed proposer issues exactly the remaining draws
+        instead of double-issuing replacements for in-flight work.
+        """
         for r in rows:
             if r.get("status") == "finished" and r.get("score") is not None:
                 self.n_proposed += 1
@@ -154,6 +160,34 @@ class Proposer(abc.ABC):
             elif r.get("status") in ("failed", "killed", "lost"):
                 self.n_proposed += 1
                 self.n_failed += 1
+            elif r.get("status") == "running":
+                self.n_proposed += 1
+
+    def state_json(self) -> Dict[str, Any]:
+        """JSON-able snapshot of the proposer's *draw* state, written ahead of
+        each proposal batch (``TrackingDB.save_proposer_state``).  The default
+        captures the numpy bit-generator state — enough for any proposer whose
+        draws come from ``self.rng`` to continue the exact sequence an
+        uninterrupted run would have produced.  Subclasses with extra RNGs or
+        draw cursors should extend the dict (and ``load_state_json``)."""
+        try:
+            rng_state = self.rng.bit_generator.state
+        except AttributeError:  # pragma: no cover - exotic rng
+            rng_state = None
+        return {"rng": rng_state, "n_proposed": self.n_proposed}
+
+    def load_state_json(self, state: Optional[Dict[str, Any]]) -> None:
+        """Restore the draw state saved by ``state_json``.  Called *after*
+        ``replay`` (replay rebuilds result structures from rows; this puts the
+        RNG back where the last write-ahead save left it)."""
+        if not state:
+            return
+        rng_state = state.get("rng")
+        if rng_state:
+            try:
+                self.rng.bit_generator.state = rng_state
+            except (AttributeError, ValueError, TypeError):  # pragma: no cover
+                pass
 
     # -- subclass hooks ---------------------------------------------------------
     @abc.abstractmethod

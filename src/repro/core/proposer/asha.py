@@ -127,3 +127,9 @@ class ASHAProposer(Proposer):
                 self.rung_results[rung][idx] = -math.inf
                 self.n_failed += 1
                 self.n_proposed += 1
+            elif r.get("status") == "running":
+                # mid-flight at the crash: the Experiment re-queues it under a
+                # new job id, so it stays outstanding here (its eventual result
+                # decrements) and is never proposed a second time
+                self.n_proposed += 1
+                self.outstanding += 1

@@ -64,6 +64,20 @@ class ShardedPopulationResourceManager(VectorizedResourceManager):
         for lane in range(self.lanes_per_device):
             for sid in self.slices:
                 self.add_resource(f"{sid}/lane{lane}")
+        # mesh-degrade: when a supervised streaming flight exhausts its
+        # restart budget on the mesh, the last attempt (and everything after)
+        # runs on the single-device vmapped engine — a wedged collective or a
+        # sick device should not take the whole experiment down with it
+        self._degraded = False
+        self.n_degraded_flights = 0
+
+    def _on_flight_death(self, attempt: int) -> None:
+        if not self._degraded and attempt >= self.supervisor.max_restarts:
+            self._degraded = True
+            if self.journal is not None:
+                self.journal.append(
+                    "mesh_degrade", step=attempt,
+                    detail="sharded flight kept dying; retrying vmapped")
 
     def _run_batch(self, runner: Callable, configs: List[dict],
                    scheduler=None) -> List[Any]:
@@ -71,8 +85,10 @@ class ShardedPopulationResourceManager(VectorizedResourceManager):
         # in-flight TypeError must propagate, never silently re-run the batch
         # on the single-device engine
         kwargs = {}
-        if accepts_kwarg(runner, "mesh"):
+        if accepts_kwarg(runner, "mesh") and not self._degraded:
             kwargs["mesh"] = self.mesh
+        if self._degraded:
+            self.n_degraded_flights += 1
         if scheduler is not None:  # streaming (lane-refill) flight
             kwargs["scheduler"] = scheduler
         return runner(configs, **kwargs)

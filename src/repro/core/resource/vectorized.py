@@ -192,6 +192,52 @@ class LaneScheduler:
         if job is not None:
             job.fail(str(error))
 
+    # -- supervisor side --------------------------------------------------------
+    def reclaim_live(self) -> List[Job]:
+        """Pull every leased-but-incomplete job out of the ledger (the flight
+        died mid-lane).  The supervisor decides each job's fate: requeue into
+        the restarted flight, or quarantine after repeated deaths."""
+        with self._lock:
+            jobs = list(self._live.values())
+            self._live.clear()
+        return jobs
+
+    def requeue(self, job: Job) -> None:
+        """Put a reclaimed job back at the FRONT of the queue for the
+        restarted flight (it already held a lane; it goes first).  The job
+        returns to PENDING so ``lease`` picks it up again."""
+        job.status = JobStatus.PENDING
+        with self._lock:
+            self._queue.appendleft(job)
+
+
+class FlightSupervisor:
+    """Restart policy for a streaming flight worker.
+
+    On flight death the worker reclaims the leased lanes and asks this object
+    how to proceed: up to ``max_restarts`` restarts with exponential backoff
+    (``backoff_base_s * 2**(attempt-1)``, capped) plus deterministic jitter —
+    seeded, so chaos tests replay exactly — and a poison threshold: a job
+    whose lane was leased across ``poison_deaths`` consecutive flight deaths
+    is the likely culprit and fails for good (quarantine) instead of riding
+    every restart into the ground.
+    """
+
+    def __init__(self, max_restarts: int = 2, backoff_base_s: float = 0.05,
+                 backoff_cap_s: float = 2.0, poison_deaths: int = 2,
+                 seed: int = 0):
+        import random
+
+        self.max_restarts = int(max_restarts)
+        self.backoff_base_s = float(backoff_base_s)
+        self.backoff_cap_s = float(backoff_cap_s)
+        self.poison_deaths = int(poison_deaths)
+        self._rng = random.Random(seed)
+
+    def delay_s(self, attempt: int) -> float:
+        base = self.backoff_base_s * (2.0 ** max(0, attempt - 1))
+        return min(self.backoff_cap_s, base) * (1.0 + 0.25 * self._rng.random())
+
 
 class QueueFeedScheduler:
     """Minimal streaming feed for driving ``run_population(scheduler=...)``
@@ -224,7 +270,9 @@ class QueueFeedScheduler:
 @register("vectorized")
 class VectorizedResourceManager(ResourceManager):
     def __init__(self, n_parallel: int = 8, resource_prefix: str = "slot",
-                 lane_refill: bool = False, **kwargs):
+                 lane_refill: bool = False, max_flight_restarts: int = 2,
+                 restart_backoff_s: float = 0.05,
+                 finish_join_timeout_s: float = 30.0, **kwargs):
         super().__init__(**kwargs)
         self.n_slots = int(n_parallel)
         for i in range(self.n_slots):
@@ -242,6 +290,14 @@ class VectorizedResourceManager(ResourceManager):
         # but never leases from it — all later flushes take the batch path
         self._streaming_broken = False
         self._flight_thread: Optional[threading.Thread] = None
+        # crash-safety: supervised flight restarts + quarantine + journal
+        self.supervisor = FlightSupervisor(
+            max_restarts=max_flight_restarts, backoff_base_s=restart_backoff_s)
+        self.finish_join_timeout_s = float(finish_join_timeout_s)
+        self.journal: Any = None   # FlightJournal, wired by the Experiment
+        self.n_flight_deaths = 0
+        self.n_flight_restarts = 0
+        self.n_quarantined = 0
 
     # -- Algorithm 1 surface ----------------------------------------------------
     def run(self, job: Job, target: Callable) -> None:
@@ -367,12 +423,59 @@ class VectorizedResourceManager(ResourceManager):
     def _start_streaming_worker(self, runner: Callable, target: Callable,
                                 sch: LaneScheduler) -> None:
         def _worker():
+            import time as _time
+
+            sup = self.supervisor
+            attempt = 0
             err: Optional[Exception] = None
-            try:
-                self._run_batch(runner, [], scheduler=sch)
-            except Exception as e:
-                err = e
+            doomed: List[Job] = []  # reclaimed but not requeued (exhausted)
+            while True:
+                err = None
+                try:
+                    self._run_batch(runner, [], scheduler=sch)
+                except Exception as e:
+                    err = e
+                if err is None:
+                    break
+                # -- flight death: reclaim lanes, quarantine poison jobs,
+                # restart with backoff (FlightSupervisor policy) ----------------
+                with self._lock:
+                    self.n_flight_deaths += 1
+                msg = f"{type(err).__name__}: {err}"
+                if self.journal is not None:
+                    self.journal.append("flight_death", detail=msg)
+                survivors: List[Job] = []
+                for job in sch.reclaim_live():
+                    job.flight_deaths = getattr(job, "flight_deaths", 0) + 1
+                    if job.flight_deaths >= sup.poison_deaths:
+                        # this lane was live across poison_deaths consecutive
+                        # flight deaths: quarantine — fail for good, and flag
+                        # the job so the Experiment skips its retry budget
+                        job.quarantined = True
+                        with self._lock:
+                            self.n_quarantined += 1
+                        if self.journal is not None:
+                            self.journal.append(
+                                "quarantine", job_id=job.job_id, detail=msg)
+                        job.fail(
+                            f"quarantined: lane died in {job.flight_deaths} "
+                            f"consecutive flights: {msg}")
+                    else:
+                        survivors.append(job)
+                if attempt >= sup.max_restarts:
+                    doomed = survivors
+                    break
+                attempt += 1
+                for job in survivors:
+                    sch.requeue(job)
+                self._on_flight_death(attempt)
+                with self._lock:
+                    self.n_flight_restarts += 1
+                if self.journal is not None:
+                    self.journal.append("flight_restart", step=attempt, detail=msg)
+                _time.sleep(sup.delay_s(attempt))
             leftovers, orphans = sch.close()
+            orphans = doomed + orphans
             with self._lock:
                 self._scheduler = None
                 if err is None and sch.n_leased == 0 and leftovers:
@@ -414,6 +517,11 @@ class VectorizedResourceManager(ResourceManager):
             self._flight_thread = t
         t.start()
 
+    def _on_flight_death(self, attempt: int) -> None:
+        """Subclass hook, called once per supervised restart (before the
+        backoff sleep).  The sharded manager uses it to degrade the mesh
+        (sharded -> vmapped) when the flight keeps dying."""
+
     def _note_streamed(self) -> None:
         # live counter: the experiment loop reads it while flights still run
         with self._lock:
@@ -434,17 +542,38 @@ class VectorizedResourceManager(ResourceManager):
         thread is still mid-XLA-call when the caller tears the process down.
         Any jobs the close hands back were settled already — the loop only
         exits with nothing running — but they re-buffer defensively rather
-        than being dropped."""
+        than being dropped.
+
+        A worker still alive after ``finish_join_timeout_s`` is a *hung*
+        flight (deadlocked lease loop, wedged XLA call): its leased jobs are
+        failed so their callbacks fire, and a RuntimeError surfaces — a
+        silent return here would let the caller tear down the process under
+        a thread that still owns device buffers."""
         with self._lock:
             sch = self._scheduler
             worker = self._flight_thread
+        orphans: List[Job] = []
         if sch is not None:
-            leftovers, _ = sch.close()
+            leftovers, orphans = sch.close()
             if leftovers:
                 with self._lock:
                     self._pending = leftovers + self._pending
         if worker is not None and worker is not threading.current_thread():
-            worker.join(timeout=30.0)
+            worker.join(timeout=self.finish_join_timeout_s)
+            if worker.is_alive():
+                for job in orphans:
+                    if not job.done:
+                        job.fail(
+                            f"streaming flight hung: worker still alive "
+                            f"{self.finish_join_timeout_s:.1f}s after close")
+                if self.journal is not None:
+                    self.journal.append(
+                        "flight_hung",
+                        detail=f"join timeout {self.finish_join_timeout_s}s")
+                raise RuntimeError(
+                    f"streaming flight worker {worker.name!r} did not exit "
+                    f"within {self.finish_join_timeout_s:.1f}s of close(); "
+                    f"{len(orphans)} leased job(s) failed as hung")
 
     def kill(self, job: Job) -> None:
         # the batch thread cannot be interrupted; mark KILLED so the eventual

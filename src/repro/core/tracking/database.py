@@ -52,6 +52,28 @@ CREATE TABLE IF NOT EXISTS job (
     PRIMARY KEY (job_id, exp_id)
 );
 CREATE INDEX IF NOT EXISTS idx_job_exp ON job(exp_id, status);
+-- write-ahead flight journal: scheduler ledger transitions, lane cursors,
+-- snapshots, flight deaths/restarts/quarantines.  Append-only; --resume
+-- reads it to reconstruct where every streaming lane was at the crash.
+CREATE TABLE IF NOT EXISTS flight_journal (
+    seq      INTEGER PRIMARY KEY AUTOINCREMENT,
+    exp_id   INTEGER NOT NULL,
+    time     REAL NOT NULL,
+    kind     TEXT NOT NULL,
+    job_id   INTEGER,
+    lane     INTEGER,
+    step     INTEGER,
+    detail   TEXT
+);
+CREATE INDEX IF NOT EXISTS idx_journal_exp ON flight_journal(exp_id, kind, seq);
+-- proposer state written ahead of each proposal batch (RNG bit-generator
+-- state + counters), so a resumed proposer continues the exact draw sequence
+-- the uninterrupted run would have produced.
+CREATE TABLE IF NOT EXISTS proposer_state (
+    exp_id  INTEGER PRIMARY KEY,
+    state   TEXT NOT NULL,
+    time    REAL NOT NULL
+);
 """
 
 
@@ -208,6 +230,91 @@ class TrackingDB:
         d["config"] = json.loads(d["config"])
         return d
 
+    # -- flight journal / proposer state (crash-safe streaming) ----------------
+    def journal_append(
+        self,
+        exp_id: int,
+        kind: str,
+        job_id: Optional[int] = None,
+        lane: Optional[int] = None,
+        step: Optional[int] = None,
+        detail: Any = None,
+    ) -> None:
+        """Append one write-ahead journal row (lease / snapshot / retire /
+        flight_death / restart / quarantine / resume ...)."""
+        with self._lock:
+            self._conn.execute(
+                "INSERT INTO flight_journal(exp_id, time, kind, job_id, lane, step, detail)"
+                " VALUES (?,?,?,?,?,?,?)",
+                (
+                    exp_id, time.time(), kind, job_id, lane, step,
+                    None if detail is None else json.dumps(detail, default=str),
+                ),
+            )
+            self._conn.commit()
+
+    def journal_rows(self, exp_id: int, kind: Optional[str] = None) -> List[Dict[str, Any]]:
+        q = "SELECT * FROM flight_journal WHERE exp_id=?"
+        args: List[Any] = [exp_id]
+        if kind is not None:
+            q += " AND kind=?"
+            args.append(kind)
+        q += " ORDER BY seq"
+        with self._lock:
+            rows = self._conn.execute(q, args).fetchall()
+        out = []
+        for r in rows:
+            d = dict(r)
+            if d.get("detail"):
+                try:
+                    d["detail"] = json.loads(d["detail"])
+                except (TypeError, json.JSONDecodeError):
+                    pass
+            out.append(d)
+        return out
+
+    def save_proposer_state(self, exp_id: int, state: Dict[str, Any]) -> None:
+        with self._lock:
+            self._conn.execute(
+                "INSERT OR REPLACE INTO proposer_state(exp_id, state, time) VALUES (?,?,?)",
+                (exp_id, json.dumps(state, default=str), time.time()),
+            )
+            self._conn.commit()
+
+    def load_proposer_state(self, exp_id: int) -> Optional[Dict[str, Any]]:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT state FROM proposer_state WHERE exp_id=?", (exp_id,)
+            ).fetchone()
+        return None if row is None else json.loads(row["state"])
+
     def close(self) -> None:
         with self._lock:
             self._conn.close()
+
+
+class FlightJournal:
+    """Thin per-experiment adapter over the ``flight_journal`` table.
+
+    The Experiment wires one of these onto any target / resource manager that
+    exposes a ``journal`` attribute, so the streaming engine and the flight
+    supervisor append ledger rows without holding an ``exp_id`` themselves.
+    Appends are swallowed-on-error by design: journaling must never take down
+    a healthy flight (the journal improves recovery, it is not the data path).
+    """
+
+    def __init__(self, db: TrackingDB, exp_id: int):
+        self.db = db
+        self.exp_id = int(exp_id)
+
+    def append(self, kind: str, job_id: Optional[int] = None,
+               lane: Optional[int] = None, step: Optional[int] = None,
+               detail: Any = None) -> None:
+        try:
+            self.db.journal_append(self.exp_id, kind, job_id=job_id,
+                                   lane=lane, step=step, detail=detail)
+        except Exception:
+            pass
+
+    def rows(self, kind: Optional[str] = None) -> List[Dict[str, Any]]:
+        return self.db.journal_rows(self.exp_id, kind=kind)

@@ -185,7 +185,8 @@ class PopulationTrial:
                  population: int = 0, per_trial_streams: bool = True,
                  early_stop=None, per_trial_init: bool = False,
                  refill_idle_grace_s: float = 0.25, lifecycle=None,
-                 chunk_steps: int = 1):
+                 chunk_steps: int = 1, snapshot_every: int = 0,
+                 snapshots=None):
         self.arch = arch
         self.steps = int(steps)
         self.batch = int(batch)
@@ -209,6 +210,17 @@ class PopulationTrial:
         # how long an empty streaming flight lingers for late proposals before
         # returning its lanes (0 for self-contained feeds, e.g. benchmarks)
         self.refill_idle_grace_s = float(refill_idle_grace_s)
+        # crash-safe streaming: harvest each live lane's full train state to
+        # the snapshot store every N-th event boundary (0 = off); a lease
+        # whose stream has a stored snapshot restores from it instead of
+        # starting at step 0 (after a supervised restart or a --resume)
+        self.snapshot_every = max(0, int(snapshot_every))
+        self.snapshots = snapshots      # checkpoint.LaneSnapshotStore
+        self.journal = None             # tracking.FlightJournal, wired by Experiment
+        self.n_snapshots = 0            # lane snapshots harvested to host
+        self.n_lane_restores = 0        # leases resumed from a snapshot
+        self.resumed_from_steps: list = []  # lane-local step of each restore
+        self._event_seq = 0             # streaming event boundaries, all flights
         self.n_refills = 0          # lanes reused within a streaming flight
         self.n_clones = 0           # donor-clone lane ops executed on device
         self.n_splices = 0          # single-lane splice inits executed
@@ -504,6 +516,14 @@ class PopulationTrial:
         # one round -> the masked from-keys reset (one dispatch for the batch)
         splice_fn = get_compiled_lane_op(tc, k, "splice", mesh=mesh)
         init_fn = get_compiled_lane_op(tc, k, "init", mesh=mesh)
+        # crash-safety pair: harvest a live lane to host / splice a harvested
+        # snapshot back into a fresh flight's lane (read-only + write twins)
+        snap_fn = restore_fn = None
+        if self.snapshots is not None:
+            snap_fn = get_compiled_lane_op(tc, k, "snapshot", mesh=mesh)
+            restore_fn = get_compiled_lane_op(tc, k, "restore", mesh=mesh)
+        from ..core import faultinject
+        fault_plan = faultinject.get_plan()
         chunk = self.chunk_steps
 
         def scan_of(t):
@@ -526,6 +546,7 @@ class PopulationTrial:
         applied0 = np.zeros(k, np.int64)     # device opt.step at lease time
         lane_applied = np.zeros(k, np.int64)  # device opt.step at last retire
         budgets = np.zeros(k, np.float64)    # this round's budget (lane-local)
+        resumed_at = np.zeros(k, np.int64)   # lane-local step a restore resumed from
         streams = [-(i + 1) for i in range(k)]     # idle = sentinel stream
         hps = [self._hparams({}, 0) for _ in range(k)]
         lane_keys = [self._init_key(s) for s in streams]
@@ -561,7 +582,12 @@ class PopulationTrial:
         s_lo, s_hi = (jnp.asarray(w) for w in split_streams(streams))
 
         def _next_event_step() -> int:
-            ev = s + DIVERGE_CHECK_EVERY
+            # the divergence/snapshot poll is anchored to an ABSOLUTE cadence
+            # (next multiple of the poll interval), not a window sliding with
+            # ``s`` — a sliding window recomputed every pass never comes due,
+            # which both starved the capped divergence poll at chunk_steps=1
+            # and left snapshot harvests with no mid-flight event to run at
+            ev = (s // DIVERGE_CHECK_EVERY + 1) * DIVERGE_CHECK_EVERY
             for lane in range(k):
                 if handles[lane] is None:
                     continue
@@ -579,15 +605,58 @@ class PopulationTrial:
         while True:
             live = [i for i in range(k) if handles[i] is not None]
             php_dirty = False
+            if fault_plan is not None and live:
+                # chaos hooks: raise@step (flight death -> the supervisor) and
+                # nan@lane (set the divergence latch; the ordinary diverged-
+                # lane retire path takes over)
+                fault_plan.check("flight-step", step=s)
+                poison = [i for i in fault_plan.poison_lanes(s) if i < k]
+                if poison:
+                    pmask = np.zeros(k, bool)
+                    pmask[poison] = True
+                    pstate = dict(pstate, diverged=jnp.logical_or(
+                        pstate["diverged"], jnp.asarray(pmask)))
             # 1) at an event step: apply the rung rule, then retire lanes whose
             # budget is exhausted (incl. just-truncated) or that diverged
             if live and s >= next_event:
+                self._event_seq += 1
                 diverged = np.asarray(pstate["diverged"])
                 last = np.asarray(pstate["last_loss"])
                 # the device-side optimizer step counter is the exact number
                 # of *applied* steps — a diverged lane froze there, however
                 # late the capped divergence poll noticed it
                 applied = np.asarray(pstate["inner"]["opt"]["step"])
+                if (snap_fn is not None and self.snapshot_every
+                        and self._event_seq % self.snapshot_every == 0):
+                    # harvest BEFORE the retire/lease churn below: the journal
+                    # row and the stored state describe this exact boundary.
+                    # Diverged lanes are skipped (nothing worth resuming) and
+                    # so are lifecycle (PBT) lanes — their keep/clone state is
+                    # the proposer's, and a dead flight degrades them to the
+                    # counted re-init path instead.
+                    for lane in live:
+                        local = int(s - starts[lane])
+                        if (diverged[lane] or lineage[lane] is not None
+                                or local <= 0 or local >= budgets[lane]):
+                            continue
+                        snap = jax.device_get(
+                            snap_fn(pstate, jnp.asarray(lane, jnp.int32)))
+                        self.n_dispatches += 1
+                        self.n_snapshots += 1
+                        self.snapshots.put(streams[lane], snap, {
+                            "local": local,
+                            "stream": int(streams[lane]),
+                            "applied": int(applied[lane]),
+                            "applied0": int(applied0[lane]),
+                            "budget": float(budgets[lane]),
+                        })
+                        if self.journal is not None:
+                            self.journal.append("snapshot", lane=lane, step=local,
+                                                detail={"stream": int(streams[lane])})
+                if fault_plan is not None:
+                    # kill@event fires AFTER any due harvest: "crash at an
+                    # arbitrary event boundary" with the snapshots on disk
+                    fault_plan.check("event", event=self._event_seq)
                 if hook is not None:
                     local = np.array(
                         [s - starts[i] if handles[i] is not None else 0
@@ -609,7 +678,17 @@ class PopulationTrial:
                             "total_steps": int(applied[lane]),
                             "diverged": bool(diverged[lane]),
                             "lane": lane,
+                            "resumed_from_step": int(resumed_at[lane]),
                         })
+                        if self.journal is not None:
+                            self.journal.append(
+                                "retire", lane=lane, step=local_s,
+                                detail={"stream": int(streams[lane]),
+                                        "score": score})
+                        if self.snapshots is not None and lineage[lane] is None:
+                            # the trial is done: its snapshots are dead weight
+                            self.snapshots.forget(streams[lane])
+                        resumed_at[lane] = 0
                         handles[lane] = None
                         budgets[lane] = 0.0
                         lane_applied[lane] = int(applied[lane])
@@ -732,18 +811,48 @@ class PopulationTrial:
                     elif directive == "clone":
                         base_sched = int(lane_applied[donor_lane])
                         clone_jobs.append((lane, donor_lane, cfg))
-                    else:  # init / splice
-                        base_sched = 0
-                        lane_keys[lane] = self._init_key(sid)
-                        splice_jobs.append(lane)
-                        if used[lane]:
-                            self.n_refills += 1
+                    else:  # init / splice — or restore from a lane snapshot
+                        stored = (self.snapshots.get(sid)
+                                  if restore_fn is not None else None)
+                        if stored is not None:
+                            # this stream died mid-lane in an earlier flight
+                            # (supervised restart or --resume): splice its
+                            # harvested state back and continue from the
+                            # snapshot's lane-local step instead of step 0
+                            snap, meta = stored
+                            local = int(meta["local"])
+                            pstate = restore_fn(
+                                pstate, jnp.asarray(lane, jnp.int32),
+                                jax.device_put(snap))
+                            self.n_dispatches += 1
+                            self.n_lane_restores += 1
+                            starts[lane] = s - local
+                            resumed_at[lane] = local
+                            self.resumed_from_steps.append(local)
+                            base_sched = int(meta.get("applied0", 0))
+                            if self.journal is not None:
+                                self.journal.append(
+                                    "lane_restore", lane=lane, step=local,
+                                    detail={"stream": sid})
+                            if used[lane]:
+                                self.n_refills += 1
+                        else:
+                            base_sched = 0
+                            resumed_at[lane] = 0
+                            lane_keys[lane] = self._init_key(sid)
+                            splice_jobs.append(lane)
+                            if used[lane]:
+                                self.n_refills += 1
                     if directive == "clone" and used[lane]:
                         self.n_refills += 1
                     applied0[lane] = base_sched
                     used[lane] = True
                     hps[lane] = self._hparams(cfg, base_sched + round_steps)
                     php_dirty = True
+                    if self.journal is not None:
+                        self.journal.append(
+                            "lease", job_id=cfg.get("job_id"), lane=lane,
+                            step=int(s), detail={"stream": sid})
                 # device ops: clones first (they read donor lanes, which are
                 # never splice targets), then one splice per fresh-init lane
                 if clone_jobs:
@@ -1003,9 +1112,54 @@ def main(argv=None) -> int:
                         "init from --seed)")
     p.add_argument("--legacy-recompile", action="store_true",
                    help="pre-refactor baseline: bake hparams into the closure, recompile per trial")
+    p.add_argument("--snapshot-every", type=int, default=0, metavar="N",
+                   help="with --lane-refill: harvest every live lane's train "
+                        "state to host at every N-th streaming event boundary "
+                        "(persisted next to --db), so a crashed run resumes "
+                        "each lane from its last snapshot instead of step 0 "
+                        "(0 = off)")
+    p.add_argument("--snapshot-dir", default="",
+                   help="lane-snapshot directory (default: <db>.lanes)")
+    p.add_argument("--resume", nargs="?", type=int, const=-1, default=None,
+                   metavar="EXP_ID",
+                   help="resume a crashed experiment from --db (no id = the "
+                        "latest): replays finished jobs into the proposer, "
+                        "re-queues the ones mid-flight at the crash, and "
+                        "restores snapshotted lanes from --snapshot-dir")
+    p.add_argument("--max-flight-restarts", type=int, default=2,
+                   help="supervised streaming-flight restarts (with backoff) "
+                        "before the survivors fail for good")
+    p.add_argument("--fault-spec", default="",
+                   help="deterministic fault injection, e.g. 'raise@step=20' "
+                        "or 'kill@event=3' (see repro.core.faultinject; also "
+                        "armable via REPRO_FAULT_SPEC)")
     args = p.parse_args(argv)
 
+    from ..core import faultinject
     from ..core.experiment import Experiment
+    from ..core.tracking.database import TrackingDB
+
+    if args.fault_spec:
+        faultinject.arm(args.fault_spec)
+
+    resume_db = None
+    resume_exp_id = None
+    if args.resume is not None:
+        if not args.db:
+            p.error("--resume needs --db (the tracking DB to resume from)")
+        resume_db = TrackingDB(args.db)
+        resume_exp_id = (resume_db.latest_experiment_id()
+                         if args.resume == -1 else args.resume)
+        if resume_exp_id is None:
+            p.error(f"--resume: no experiment found in {args.db!r}")
+        row = resume_db.get_experiment(resume_exp_id)
+        if row is None:
+            p.error(f"--resume: experiment {resume_exp_id} not in {args.db!r}")
+        # the stored CLI geometry wins: the trial must be rebuilt exactly as
+        # the crashed run built it (arch / steps / engine / chunking / seed),
+        # or the resumed lanes would not be score-equivalent
+        for key, val in (row["exp_config"].get("cli") or {}).items():
+            setattr(args, key, val)
 
     exp_cfg = {
         "proposer": args.proposer,
@@ -1020,6 +1174,9 @@ def main(argv=None) -> int:
         exp_cfg["db_path"] = args.db
     if args.deadline:
         exp_cfg["job_deadline_s"] = args.deadline
+    exp_cfg["max_flight_restarts"] = args.max_flight_restarts
+    if args.snapshot_every:
+        exp_cfg["snapshot_every"] = args.snapshot_every
 
     if args.pbt_streaming:
         if args.proposer != "pbt":
@@ -1050,7 +1207,18 @@ def main(argv=None) -> int:
     if args.chunk_steps > 1 and args.vectorize <= 0:
         p.error("--chunk-steps acts on the population engines; it requires "
                 "--vectorize K")
+    if args.snapshot_every and not args.lane_refill:
+        p.error("--snapshot-every snapshots streaming lanes; it requires "
+                "--lane-refill")
     per_trial_streams = not args.shared_stream
+    # lane-snapshot store: armed when snapshots are being taken OR when a
+    # resume may need to restore lanes a previous run persisted
+    snap_store = None
+    if args.lane_refill and (args.snapshot_every > 0 or args.resume is not None):
+        from ..checkpoint import LaneSnapshotStore
+
+        snap_root = args.snapshot_dir or (args.db + ".lanes" if args.db else None)
+        snap_store = LaneSnapshotStore(root=snap_root)
     if args.vectorize > 0:
         exp_cfg["resource"] = "sharded" if args.shard_population else "vectorized"
         exp_cfg["n_parallel"] = args.vectorize
@@ -1060,15 +1228,27 @@ def main(argv=None) -> int:
                                 args.seed, population=args.vectorize,
                                 per_trial_streams=per_trial_streams,
                                 per_trial_init=args.per_trial_init,
-                                chunk_steps=args.chunk_steps)
+                                chunk_steps=args.chunk_steps,
+                                snapshot_every=args.snapshot_every,
+                                snapshots=snap_store)
     elif args.legacy_recompile:
         trial = make_trial(args.arch, args.steps, args.batch, args.seq, args.seed)
     else:
         trial = PopulationTrial(args.arch, args.steps, args.batch, args.seq,
                                 args.seed, per_trial_streams=per_trial_streams,
                                 per_trial_init=args.per_trial_init)
+    # the stored CLI geometry is what --resume rebuilds the trial from
+    exp_cfg["cli"] = {k: getattr(args, k) for k in (
+        "arch", "steps", "batch", "seq", "seed", "vectorize",
+        "shard_population", "chunk_steps", "per_trial_init", "shared_stream",
+        "lane_refill", "inflight_stop", "snapshot_every", "snapshot_dir",
+        "legacy_recompile", "pbt_streaming", "pbt_async",
+        "max_flight_restarts")}
     t0 = time.time()
-    exp = Experiment(exp_cfg, trial)
+    if resume_db is not None:
+        exp = Experiment.resume(resume_db, trial, exp_id=resume_exp_id)
+    else:
+        exp = Experiment(exp_cfg, trial)
     # incremental result telemetry: with streaming flights, results land while
     # the batch is still running — record when each settles
     result_times: list = []
@@ -1104,6 +1284,15 @@ def main(argv=None) -> int:
         out["lane_refills"] = trial.n_refills
         out["streamed_results"] = exp.rm.n_streamed
         out["refill_flights"] = exp.rm.n_refill_flights
+        out["flight_deaths"] = getattr(exp.rm, "n_flight_deaths", 0)
+        out["flight_restarts"] = getattr(exp.rm, "n_flight_restarts", 0)
+        out["quarantined"] = getattr(exp.rm, "n_quarantined", 0)
+    if args.snapshot_every or args.resume is not None:
+        out["snapshots"] = getattr(trial, "n_snapshots", 0)
+        out["resumed"] = args.resume is not None
+        out["resumed_lanes"] = getattr(trial, "n_lane_restores", 0)
+        out["resumed_from_steps"] = list(
+            getattr(trial, "resumed_from_steps", []))
     if args.pbt_streaming:
         hook = exp.proposer.lifecycle_hook()
         out["pbt_clones"] = trial.n_clones

@@ -243,6 +243,58 @@ def make_lane_splice(tc: TrainConfig) -> Callable:
     return splice
 
 
+def make_lane_snapshot(tc: TrainConfig) -> Callable:
+    """``(pstate, lane) -> lane_state`` harvesting ONE lane's full train state.
+
+    The inverse of ``make_lane_splice``: instead of writing a fresh init into
+    a lane, it reads the lane's complete state — params, optimizer moments,
+    master copy, step counter, divergence latch and ``last_loss`` — as an
+    unbatched pytree via ``dynamic_index_in_dim`` per leaf.  ``lane`` is a
+    *traced* int32 scalar, so one compiled program snapshots any lane.  The
+    caller ``device_get``s the result to host; together with the lane's
+    stream word and host cursors this is everything needed to resurrect the
+    trial in a fresh flight (``make_lane_restore``) — crash-safe streaming.
+
+    Unlike the mutating lifecycle ops this one must NOT donate its input:
+    the flight keeps training on ``pstate`` after the harvest.
+    """
+
+    def snapshot(pstate: PopState, lane: jax.Array):
+        take = lambda x: jax.lax.dynamic_index_in_dim(x, lane, 0, keepdims=False)
+        return {
+            "inner": jax.tree.map(take, pstate["inner"]),
+            "diverged": take(pstate["diverged"]),
+            "last_loss": take(pstate["last_loss"]),
+        }
+
+    return snapshot
+
+
+def make_lane_restore(tc: TrainConfig) -> Callable:
+    """``(pstate, lane, snap) -> pstate`` splicing a harvested snapshot back.
+
+    The write half of the snapshot/restore pair: like ``make_lane_splice``
+    but the spliced state comes from a previously harvested lane snapshot
+    (``make_lane_snapshot``) instead of a fresh ``init_train_state`` — one
+    ``dynamic_update_index_in_dim`` per leaf, including the divergence latch,
+    ``last_loss`` and the optimizer step counter, so the restored lane is
+    bit-identical to the lane that was harvested.  ``lane`` is traced: a
+    snapshot taken from lane i of a dead flight can land in any lane j of
+    the new one.
+    """
+
+    def restore(pstate: PopState, lane: jax.Array, snap) -> PopState:
+        put = lambda o, f: jax.lax.dynamic_update_index_in_dim(
+            o, f.astype(o.dtype), lane, 0)
+        return {
+            "inner": jax.tree.map(put, pstate["inner"], snap["inner"]),
+            "diverged": put(pstate["diverged"], snap["diverged"]),
+            "last_loss": put(pstate["last_loss"], snap["last_loss"]),
+        }
+
+    return restore
+
+
 def make_sharded_lane_init(tc: TrainConfig, mesh: Mesh, axis: str = "pop") -> Callable:
     """Lane reset with the K axis split over ``mesh`` (mirrors the sharded
     population step): each device re-inits only its own K/N block of lanes."""
@@ -340,6 +392,81 @@ def make_sharded_lane_splice(tc: TrainConfig, mesh: Mesh, axis: str = "pop") -> 
     pop = PartitionSpec(axis)
     return shard_map(
         splice, mesh=mesh,
+        in_specs=(pop, PartitionSpec(), PartitionSpec()),
+        out_specs=pop,
+    )
+
+
+def make_sharded_lane_snapshot(tc: TrainConfig, mesh: Mesh, axis: str = "pop") -> Callable:
+    """Single-lane snapshot with the K axis split over ``mesh``.
+
+    ``lane`` is a global id.  The owning device indexes the lane out of its
+    local block; every other device contributes zeros, and a ``psum`` over
+    the population axis replicates the harvested lane state to all devices
+    (the output carries no lane axis, so it cannot be partitioned on one) —
+    peak extra memory is one lane, never a gather of the population.  Bool
+    leaves ride the sum as int32 (a masked sum of one contribution, so the
+    round-trip is exact).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def snapshot(pstate: PopState, lane: jax.Array):
+        blk = pstate["diverged"].shape[0]  # local lanes per device
+        off = jax.lax.axis_index(axis) * blk
+        local = jnp.clip(lane - off, 0, blk - 1)
+        owns = (lane >= off) & (lane < off + blk)
+
+        def harvest(x):
+            v = jax.lax.dynamic_index_in_dim(x, local, 0, keepdims=False)
+            summed = jax.lax.psum(
+                jnp.where(owns, v.astype(jnp.int32), 0) if v.dtype == jnp.bool_
+                else jnp.where(owns, v, jnp.zeros_like(v)),
+                axis,
+            )
+            return summed.astype(bool) if v.dtype == jnp.bool_ else summed
+
+        return {
+            "inner": jax.tree.map(harvest, pstate["inner"]),
+            "diverged": harvest(pstate["diverged"]),
+            "last_loss": harvest(pstate["last_loss"]),
+        }
+
+    pop = PartitionSpec(axis)
+    return shard_map(
+        snapshot, mesh=mesh,
+        in_specs=(pop, PartitionSpec()),
+        out_specs=PartitionSpec(),  # replicated: the one harvested lane
+    )
+
+
+def make_sharded_lane_restore(tc: TrainConfig, mesh: Mesh, axis: str = "pop") -> Callable:
+    """Snapshot restore with the K axis split over ``mesh``.
+
+    ``lane`` is a global id and ``snap`` is replicated; only the owner of the
+    target lane writes the snapshot into its local block (mirrors the sharded
+    splice), so the other devices' blocks stay bit-identical.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def restore(pstate: PopState, lane: jax.Array, snap) -> PopState:
+        blk = pstate["diverged"].shape[0]
+        off = jax.lax.axis_index(axis) * blk
+        local = jnp.clip(lane - off, 0, blk - 1)
+        owns = (lane >= off) & (lane < off + blk)
+
+        def put(o, f):
+            new = jax.lax.dynamic_update_index_in_dim(o, f.astype(o.dtype), local, 0)
+            return jnp.where(owns, new, o)
+
+        return {
+            "inner": jax.tree.map(put, pstate["inner"], snap["inner"]),
+            "diverged": put(pstate["diverged"], snap["diverged"]),
+            "last_loss": put(pstate["last_loss"], snap["last_loss"]),
+        }
+
+    pop = PartitionSpec(axis)
+    return shard_map(
+        restore, mesh=mesh,
         in_specs=(pop, PartitionSpec(), PartitionSpec()),
         out_specs=pop,
     )
@@ -564,12 +691,18 @@ def get_compiled_population_scan_step(
     return fn
 
 
-# one builder table for the lifecycle layer: op -> (vmapped, shard_map twin)
+# one builder table for the lifecycle layer: op -> (vmapped, shard_map twin).
+# "snapshot" is the one READ-ONLY op: it must not donate the population state
+# (the flight keeps training on it after the harvest), so the jit wrapper
+# below keys donation off this table too.
 _LANE_OPS: Dict[str, Tuple[Callable, Callable]] = {
     "init": (make_lane_init, make_sharded_lane_init),
     "clone": (make_lane_clone, make_sharded_lane_clone),
     "splice": (make_lane_splice, make_sharded_lane_splice),
+    "snapshot": (make_lane_snapshot, make_sharded_lane_snapshot),
+    "restore": (make_lane_restore, make_sharded_lane_restore),
 }
+_READONLY_LANE_OPS = frozenset({"snapshot"})
 
 
 def get_compiled_lane_op(
@@ -579,11 +712,13 @@ def get_compiled_lane_op(
     mesh: Optional[Mesh] = None,
     axis: str = "pop",
 ):
-    """Memoized ``jax.jit`` of a lane-lifecycle op with donated state.
+    """Memoized ``jax.jit`` of a lane-lifecycle op.
 
-    ``op`` is one of ``init`` / ``clone`` / ``splice``; with ``mesh`` the
-    ``shard_map`` twin is compiled instead (keyed like the sharded population
-    step, so a streaming flight compiles each op it uses exactly once).
+    ``op`` is one of ``init`` / ``clone`` / ``splice`` / ``snapshot`` /
+    ``restore``; with ``mesh`` the ``shard_map`` twin is compiled instead
+    (keyed like the sharded population step, so a streaming flight compiles
+    each op it uses exactly once).  Mutating ops donate the population state;
+    ``snapshot`` reads it and leaves the flight state alive.
     """
     if op not in _LANE_OPS:
         raise KeyError(f"unknown lane op {op!r}; available: {sorted(_LANE_OPS)}")
@@ -600,7 +735,10 @@ def get_compiled_lane_op(
         if fn is None:
             vmapped, sharded = _LANE_OPS[op]
             built = vmapped(tc) if mesh is None else sharded(tc, mesh, axis=axis)
-            fn = jax.jit(built, donate_argnums=0)
+            if op in _READONLY_LANE_OPS:
+                fn = jax.jit(built)
+            else:
+                fn = jax.jit(built, donate_argnums=0)
             _POP_CACHE[key] = fn
     return fn
 

@@ -468,15 +468,18 @@ def test_lane_refill_warns_on_batch_only_target():
 
 
 def test_streaming_flight_failure_blast_radius():
-    """An engine that dies mid-flight fails its leased job; queued jobs fail
-    with a distinct reason instead of hanging the experiment."""
+    """An engine that always dies is restarted under supervision; the lane
+    leased across consecutive deaths is quarantined as the likely poison,
+    and once the restart budget is exhausted the remaining leased/queued
+    jobs fail with distinct reasons instead of hanging the experiment."""
 
     class DyingTarget:
         def run_population(self, configs, scheduler=None, mesh=None):
             scheduler.lease()  # takes one job, then the program explodes
             raise RuntimeError("XLA fell over")
 
-    rm = VectorizedResourceManager(n_parallel=2, lane_refill=True)
+    rm = VectorizedResourceManager(n_parallel=2, lane_refill=True,
+                                   restart_backoff_s=0.001)
     done = []
     jobs = [Job(i, {"x": i}, f"slot{i}", done.append) for i in range(2)]
     for j in jobs:
@@ -485,8 +488,50 @@ def test_streaming_flight_failure_blast_radius():
     for j in jobs:
         assert j.wait(10.0)
     assert all(j.status == JobStatus.FAILED for j in jobs)
-    assert "died mid-lane" in jobs[0].result.error
-    assert "died before lease" in jobs[1].result.error
+    # death 1: job0 leased -> requeued; death 2: job0 leased again ->
+    # quarantined (2 consecutive deaths); death 3: job1 leased, restart
+    # budget exhausted -> fails mid-lane
+    assert "quarantined" in jobs[0].result.error
+    assert jobs[0].quarantined
+    assert "died mid-lane" in jobs[1].result.error
+    assert rm.n_flight_deaths == 3
+    assert rm.n_flight_restarts == 2
+    assert rm.n_quarantined == 1
+
+
+def test_streaming_flight_transient_death_recovers():
+    """A flight that dies once is restarted and every job still completes."""
+
+    class FlakyTarget:
+        def __init__(self):
+            self.calls = 0
+
+        def run_population(self, configs, scheduler=None, mesh=None):
+            self.calls += 1
+            if self.calls == 1:
+                scheduler.lease()
+                raise RuntimeError("transient device loss")
+            while True:
+                leased = scheduler.lease()
+                if leased is None:
+                    break
+                handle, cfg = leased
+                scheduler.complete(handle, float(cfg["x"]))
+
+    rm = VectorizedResourceManager(n_parallel=2, lane_refill=True,
+                                   restart_backoff_s=0.001)
+    done = []
+    jobs = [Job(i, {"x": i}, f"slot{i}", done.append) for i in range(2)]
+    tgt = FlakyTarget()
+    for j in jobs:
+        rm._busy[j.resource_id] = None
+        rm.run(j, tgt)
+    for j in jobs:
+        assert j.wait(10.0)
+    assert all(j.status == JobStatus.FINISHED for j in jobs)
+    assert jobs[0].result.score == 0.0 and jobs[1].result.score == 1.0
+    assert rm.n_flight_deaths == 1 and rm.n_flight_restarts == 1
+    assert rm.n_quarantined == 0
 
 
 # -- satellite bugfix regressions -------------------------------------------------
