@@ -42,6 +42,20 @@ the CPU smoke config:
   match within ``CHUNKED_SCORE_TOL`` (the engines are bit-equal by
   construction), and the host-dispatch ratio (device calls per trained step)
   must drop below 1 — the T-fold dispatch collapse this engine exists for;
+* **device_rules**     — **device-side decision rules** (``--device-rules``):
+  the rung rule runs *inside* the fused scan (scan-carried per-lane budgets +
+  per-rung loss histories), so chunk boundaries no longer clamp to rung /
+  retirement event steps and a whole multi-rung ASHA ladder drains as ONE
+  device dispatch, the host harvesting retirements from the scan's emitted
+  event log afterwards.  Measured host-rule vs device-rule on a ladder sized
+  to exactly the population (one trial per lane: with queued refills the
+  device path's batched retirement harvest can reorder rung arrivals — a
+  legitimate but *different* SHA schedule — so the trial-identical workload
+  is what makes bit-equality a fair gate), on both the vmapped and sharded
+  engines.  Gate: the device-rule flight's whole ladder costs exactly ONE
+  dispatch (vmapped and sharded), scores and effective budgets match the
+  host-rule path within ``CHUNKED_SCORE_TOL``, and the rule actually cut
+  lanes (a ladder with nothing to truncate would gate nothing);
 * **pbt_stream**       — Population-Based Training on the streaming engine
   (``--pbt-streaming``): members live in lanes, exploit is a compiled donor
   clone (``make_lane_clone``) and weights never visit the host — measured
@@ -133,6 +147,16 @@ REFILL_LADDER = [1] * 8 + [2] * 4 + [4] * 2 + [8] * 2
 # noise and the rule would cut at random)
 REFILL_MIN_ITER_UNITS = 4
 
+# device-rule row: a multi-rung ladder sized to exactly the population (one
+# trial per lane — no refill contention, so host-rule and device-rule flights
+# lease identical trials and must score bit-equal; see the docstring bullet),
+# in units of CHUNK_UNIT steps.  eta=2 with min_iter=CHUNK_UNIT puts rung
+# boundaries at 8 and 16 steps inside the 32-step max budget, and the chunk
+# covers the whole ladder so the device path drains in ONE dispatch while the
+# host-rule path still re-enters at every event step.
+DEVRULES_LADDER = [1, 1, 2, 2, 2, 4, 4, 4]
+DEVRULES_CHUNK = 32
+
 # streaming PBT vs the generation-barriered serial driver: equal total steps,
 # shared RNG.  The serial baseline runs K*ROUNDS rounds one member at a time
 # with 2 host checkpoint round-trips each; streaming runs ROUNDS*STEPS pop
@@ -220,6 +244,21 @@ def _refill_hook():
     return InFlightSuccessiveHalving(
         eta=2.0, min_iter=REFILL_MIN_ITER_UNITS * REFILL_UNIT,
         max_iter=max(REFILL_LADDER) * REFILL_UNIT)
+
+
+def _devrules_workload(seed: int, population: int):
+    """One trial per lane, budgets cycled from DEVRULES_LADDER, with one
+    deliberately bad max-budget promotion for the rung rule to cut."""
+    units = [DEVRULES_LADDER[i % len(DEVRULES_LADDER)]
+             for i in range(population)]
+    cfgs = _sample_configs(population, seed + 5)
+    bad_promotion = int(np.flatnonzero(np.asarray(units) == max(units))[-1])
+    for i, (c, u) in enumerate(zip(cfgs, units)):
+        c["n_iterations"] = int(u)
+        c["learning_rate"] = _LADDER_LR[int(u)] * (1.0 + 0.05 * (i % 3))
+        c["warmup_frac"] = 0.05
+    cfgs[bad_promotion]["learning_rate"] = _LADDER_BAD_LR
+    return cfgs
 
 
 _LONG_LR = {1: 2e-4, 3: 5e-4, 9: 1e-3, 27: 2e-3}
@@ -525,6 +564,65 @@ def _probe_main(argv) -> None:
         _pbt_measure,
         equiv=lambda a, b: float(max(abs(a[k2] - b[k2]) for k2 in a))
         if set(a) == set(b) else float("inf"))
+
+    # -- device-side decision rules: the whole ladder as ONE dispatch ----------
+    # Host-rule vs device-rule on a trial-per-lane ladder (no refill
+    # contention — with queued trials the device path's batched retirement
+    # harvest could reorder rung arrivals into a different, equally valid SHA
+    # schedule), chunk covering the max budget: the host path still stops at
+    # every rung boundary / budget end, the device path runs start-to-drain
+    # as one scan and only harvests the emitted event log.
+    devcfgs = _devrules_workload(seed, population)
+
+    def _devrules_hook():
+        return InFlightSuccessiveHalving(
+            eta=2.0, min_iter=CHUNK_UNIT,
+            max_iter=max(DEVRULES_LADDER) * CHUNK_UNIT)
+
+    def _devrules_trial(device):
+        return PopulationTrial(
+            arch, CHUNK_UNIT, PBT_BATCH, PBT_SEQ, seed,
+            population=population, chunk_steps=DEVRULES_CHUNK,
+            early_stop=_devrules_hook(), refill_idle_grace_s=0.0,
+            device_rules=device)
+
+    def _devrules_cell(device, mkw):
+        def flight():
+            trial = _devrules_trial(device)
+            feedd = _feed_scheduler(devcfgs)
+            t0 = time.time()
+            trial.run_population([], scheduler=feedd, **mkw)
+            return time.time() - t0, feedd, trial
+        flight()  # warm the scan / rule-state compiles
+        dt, feedd, trial = flight()
+        row = _dispatch_row(dt, trial)
+        row["ladder_device_dispatches"] = trial.ladder_dispatches
+        row["truncated"] = trial.early_stop.n_truncated
+        row["reclaimed"] = trial.early_stop.n_reclaimed
+        row["scores"] = feedd.ordered_scores(len(devcfgs))
+        row["eff_steps"] = [int(feedd.extras[i]["steps"])
+                            for i in range(len(devcfgs))]
+        return row
+
+    def _devrules_pair(host, dev):
+        return {
+            "host": host, "device": dev,
+            "speedup": host["seconds"] / dev["seconds"],
+            "equivalence_max_abs_diff": float(max(
+                abs(a - b) for a, b in zip(host["scores"], dev["scores"]))),
+            "eff_steps_equal": host["eff_steps"] == dev["eff_steps"],
+            "truncated_equal": host["truncated"] == dev["truncated"],
+        }
+
+    res["device_rules"] = {
+        "trials": len(devcfgs), "population": population,
+        "ladder_units": DEVRULES_LADDER, "budget_unit": CHUNK_UNIT,
+        "chunk_steps": DEVRULES_CHUNK,
+        "vmapped": _devrules_pair(_devrules_cell(False, {}),
+                                  _devrules_cell(True, {})),
+        "sharded": _devrules_pair(_devrules_cell(False, {"mesh": mesh}),
+                                  _devrules_cell(True, {"mesh": mesh})),
+    }
 
     # -- async vs gated PBT: search quality on a longer horizon ----------------
     def _pbt_quality(sync: bool) -> dict:
@@ -839,6 +937,24 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
     chunked_vs_refill = chrefill["speedup"]
     chunked_dispatch_ratio = chrefill["fused"]["dispatches_per_step"]
 
+    # -- device-side decision rules: one dispatch drains the whole ladder ------
+    devrules = dict(probe["device_rules"])
+    results["device_rules"] = devrules
+    devrules_equiv = float(max(devrules[m]["equivalence_max_abs_diff"]
+                               for m in ("vmapped", "sharded")))
+    devrules_dispatches = max(
+        devrules[m]["device"]["ladder_device_dispatches"]
+        for m in ("vmapped", "sharded"))
+    devrules_ok = (
+        devrules_dispatches == 1
+        and devrules_equiv <= CHUNKED_SCORE_TOL
+        and all(devrules[m]["eff_steps_equal"]
+                and devrules[m]["truncated_equal"]
+                and devrules[m]["device"]["truncated"] >= 1
+                and devrules[m]["host"]["dispatches"] > 1
+                for m in ("vmapped", "sharded"))
+    )
+
     # refill equivalence: every trial must score exactly what the serial
     # driver scores at the trial's *effective* step count — the original
     # budget's LR schedule, cut at the truncation step (early-stop semantics);
@@ -879,6 +995,7 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
         and chunked_vs_refill >= CHUNKED_FLOOR
         and chunked_equiv <= CHUNKED_SCORE_TOL
         and chunked_dispatch_ratio < 1.0
+        and devrules_ok
         and pbt["speedup"] >= PBT_STREAM_FLOOR
         and pbt["equivalence_max_abs_diff"] <= PBT_SCORE_TOL
         and pbt["stream_host_ckpt_roundtrips"] == 0
@@ -902,6 +1019,8 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
         "equivalence_max_abs_diff": equiv,
         "refill_equivalence_max_abs_diff": refill_equiv,
         "chunked_equivalence_max_abs_diff": chunked_equiv,
+        "device_rules_ladder_dispatches": devrules_dispatches,
+        "device_rules_equivalence_max_abs_diff": devrules_equiv,
         "pbt_equivalence_max_abs_diff": pbt["equivalence_max_abs_diff"],
         "recovery_snapshot_overhead_ratio": snapshot_overhead,
         "recovery_equivalence_max_abs_diff": recovery_equiv,
@@ -917,7 +1036,14 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
             f"refill loop on the same ladder (scores bit-equal across all "
             f"four engines, {chrefill['per_step']['dispatches']} -> "
             f"{chrefill['fused']['dispatches']} device dispatches, "
-            f"{chunked_dispatch_ratio:.2f} per trained step); "
+            f"{chunked_dispatch_ratio:.2f} per trained step); device-side "
+            f"decision rules run the whole "
+            f"{len(devrules['ladder_units'])}-trial multi-rung ladder as "
+            f"{devrules_dispatches} device dispatch on both the vmapped and "
+            f"sharded engines (host-rule path: "
+            f"{devrules['vmapped']['host']['dispatches']} dispatches), scores "
+            f"and effective budgets equal to the host-rule path "
+            f"(max diff {devrules_equiv:.2g}); "
             f"streaming PBT {pbt['speedup']:.1f}x the generation-barriered "
             f"serial PBT driver at equal total steps (scores equal, "
             f"{pbt['serial_host_ckpt_roundtrips']} -> 0 host checkpoint "

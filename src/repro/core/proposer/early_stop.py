@@ -30,6 +30,62 @@ from typing import Sequence
 import numpy as np
 
 
+class DeviceRuleSpec:
+    """Numpy lowering of a rung rule for the in-scan device twin.
+
+    ``InFlightSuccessiveHalving.device_rule()`` returns one of these: the
+    rule's configuration (``boundaries``, ``eta``) as plain arrays that the
+    population engines can carry as extra ``lax.scan`` state, plus the
+    host-sync pair ``lower_history`` / ``absorb_history`` that moves the
+    staggered rule's per-rung loss history between the hook's Python dict
+    and the fixed-capacity device arrays around each fused dispatch.  The
+    spec holds a reference to its hook so truncation counters reconstructed
+    from device results land back on the object tests and telemetry read.
+    """
+
+    def __init__(self, hook: "InFlightSuccessiveHalving"):
+        self.hook = hook
+        self.eta = np.float32(hook.eta)
+        self.boundaries = np.asarray(hook.boundaries, np.float32)
+
+    def lower_history(self, capacity: int):
+        """``(hist f32[B, capacity] (+inf padded), counts i32[B])`` from the
+        hook's per-rung history.  ``capacity`` must cover the largest rung's
+        current length plus every append the next dispatch can make (at most
+        one per lane per rung)."""
+        b = len(self.hook.boundaries)
+        hist = np.full((b, int(capacity)), np.inf, np.float32)
+        counts = np.zeros((b,), np.int32)
+        for bi, bnd in enumerate(self.hook.boundaries):
+            h = self.hook._rung_history.get(bnd, [])
+            if len(h) > capacity:
+                raise ValueError(
+                    f"rung {bnd} history ({len(h)}) exceeds capacity {capacity}")
+            counts[bi] = len(h)
+            hist[bi, : len(h)] = h
+        return hist, counts
+
+    def absorb_history(self, hist, counts) -> None:
+        """Write device-side history arrays back into the hook's dict, so host
+        rules (or a later host-rule flight) continue from the same state."""
+        hist = np.asarray(hist)
+        counts = np.asarray(counts)
+        for bi, bnd in enumerate(self.hook.boundaries):
+            c = int(counts[bi])
+            self.hook._rung_history[bnd] = [float(x) for x in hist[bi, :c]]
+
+    def absorb_cuts(self, old_budgets, new_budgets, diverged) -> None:
+        """Reconstruct the hook's counters from a dispatch's budget delta:
+        a shrunk budget on a diverged lane was reclaimed, on a live lane it
+        was a rung cut."""
+        old = np.asarray(old_budgets, np.float64)
+        new = np.asarray(new_budgets, np.float64)
+        div = np.asarray(diverged, bool)
+        shrunk = new < old
+        self.hook.n_reclaimed += int((shrunk & div).sum())
+        self.hook.n_truncated += int((shrunk & ~div).sum())
+
+
 class InFlightSuccessiveHalving:
     """Rung-boundary lane truncation with reduction factor ``eta``.
 
@@ -97,7 +153,9 @@ class InFlightSuccessiveHalving:
         if n_ranked <= 1 or n_keep >= n_ranked:
             return budgets
         idx = np.flatnonzero(ranked_mask)
-        ranked = idx[np.argsort(losses[idx])]  # ascending loss = best first
+        # ascending loss = best first; stable: ties keep the lower lane index
+        # (the device twin's pairwise rank reproduces exactly this order)
+        ranked = idx[np.argsort(losses[idx], kind="stable")]
         cut = [i for i in ranked[n_keep:] if budgets[i] > step]
         budgets[cut] = step
         self.n_truncated += len(cut)
@@ -149,3 +207,17 @@ class InFlightSuccessiveHalving:
                 budgets[lane] = float(st)
                 self.n_truncated += 1
         return budgets
+
+    def device_rule(self) -> DeviceRuleSpec:
+        """Lower this rule for in-scan evaluation — the device twin of
+        ``inflight_hook()``.
+
+        The returned spec carries ``boundaries``/``eta`` as arrays; the
+        population engines evaluate the same cohort (``__call__``) and
+        staggered (``observe``) semantics as pure vectorized functions of the
+        scan-carried budgets and loss histories
+        (``repro.train.population.cohort_rule_update`` /
+        ``staggered_rule_update``), so a fused chunk truncates lanes at rung
+        boundaries without returning to the host.
+        """
+        return DeviceRuleSpec(self)

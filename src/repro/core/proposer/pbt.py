@@ -41,6 +41,34 @@ from . import Proposer, register
 DIVERGED_SCORE = -1e9
 
 
+def window_quantile(scores, count, quantile, xp=None):
+    """``(lo, hi)`` quantile scores of a sliding window, as a pure array op.
+
+    ``scores`` is the window as a fixed-size ring buffer (length W);
+    ``count`` is how many appends it has ever absorbed, so the valid region
+    is the first ``min(count, W)`` slots (a full ring is valid everywhere).
+    ``lo`` is the k-th smallest and ``hi`` the k-th largest valid score with
+    ``k = max(1, int(quantile * n))`` — exactly the thresholds
+    ``PBTLifecycle.decide`` reads off its sorted window, but expressed
+    through ``xp`` (NumPy or ``jax.numpy``) so the population engines can
+    evaluate it *inside* a fused scan (``--device-rules`` with
+    ``--pbt-async``): invalid slots are masked to +/-inf so they sort to the
+    far ends, and both thresholds come from one sort each.
+    """
+    import numpy as np
+
+    if xp is None:
+        xp = np
+    w = scores.shape[0]
+    n = xp.minimum(xp.asarray(count), w)
+    k = xp.maximum(1, (xp.asarray(quantile) * n.astype(scores.dtype))
+                   .astype(xp.int32))
+    valid = xp.arange(w) < n
+    asc_lo = xp.sort(xp.where(valid, scores, xp.inf))
+    asc_hi = xp.sort(xp.where(valid, scores, -xp.inf))
+    return xp.take(asc_lo, k - 1), xp.take(asc_hi, w - k)
+
+
 def perturb_config(space, cfg: Dict[str, Any], rng, factor: float) -> Dict[str, Any]:
     """The explore rule, shared by both PBT modes (their decision-for-decision
     equivalence depends on consuming the RNG identically): floats scale by
@@ -110,6 +138,15 @@ class PBTLifecycle:
         self.n_clones = 0
         self.n_keeps = 0
         self.n_donor_waits = 0
+        # --device-rules: the fused scan evaluates the window quantile itself
+        # (window_quantile as an in-scan op) and latches a per-lane verdict at
+        # the lane's budget end; the engine reports it here keyed by (member,
+        # round) and decide() consumes it instead of re-deriving the bottom
+        # test on the host.  Off by default — enable_device_rule() is called
+        # by the driver only under --device-rules + --pbt-async.
+        self.device_rule_on = False
+        self._device_verdicts: Dict[Tuple[int, int], Tuple[bool, float, float]] = {}
+        self.n_device_verdicts = 0
 
     # -- proposer side ----------------------------------------------------------
     def note_result(self, member: int, score: float, rnd: Optional[int] = None) -> None:
@@ -117,6 +154,29 @@ class PBTLifecycle:
             self.window.append((int(member), float(score),
                                 None if rnd is None else int(rnd)))
             self.last_score[int(member)] = float(score)
+
+    def enable_device_rule(self) -> None:
+        """Switch decide() to consume scan-emitted window-quantile verdicts
+        (--device-rules with --pbt-async).  Rounds without a verdict — e.g. a
+        member retired early by a host divergence poll — fall back to the
+        host rule, so the switch degrades gracefully."""
+        self.device_rule_on = True
+
+    def window_snapshot(self) -> List[Tuple[int, float, Optional[int]]]:
+        """The window's entries oldest-first, for lowering to the scan's ring
+        buffer before a device-rule dispatch."""
+        with self._lock:
+            return list(self.window)
+
+    def note_device_verdict(self, member: int, rnd: int, bottom: bool,
+                            lo: float, hi: float) -> None:
+        """Record the scan's latched verdict for the member's round ``rnd``:
+        whether its end-of-round score sat in the bottom quantile of the
+        device-side sliding window, plus the (lo, hi) thresholds it saw."""
+        with self._lock:
+            self._device_verdicts[(int(member), int(rnd))] = (
+                bool(bottom), float(lo), float(hi))
+            self.n_device_verdicts += 1
 
     def decide(self, member: int, own_cfg: Dict[str, Any],
                rnd: Optional[int] = None) -> Tuple[str, Optional[int], Dict[str, Any]]:
@@ -134,6 +194,8 @@ class PBTLifecycle:
         with self._lock:
             entries = list(self.window)
             my = self.last_score.get(int(member))
+            verdict = (self._device_verdicts.pop((int(member), int(rnd) - 1), None)
+                       if self.device_rule_on and rnd is not None else None)
         if rnd is not None:
             # staleness of the evidence behind this decision: a gated run
             # decides round r strictly from round r-1 scores (lag 0); the
@@ -151,11 +213,19 @@ class PBTLifecycle:
         # top-quantile donors: distinct members, best score first, never self,
         # never a diverged sentinel
         hi = sorted(scores, reverse=True)[k - 1]
+        if verdict is not None:
+            # the scan already judged this round against the window it saw at
+            # the lane's budget end — its bottom-quantile bit and thresholds
+            # replace the host re-derivation; donors still come from the host
+            # window (the device log carries verdicts, not donor identities)
+            is_bottom, _dev_lo, hi = verdict
+        else:
+            is_bottom = not (my > lo)
         donors: List[int] = []
         for m, s, _ in sorted(entries, key=lambda ms: -ms[1]):
             if s >= hi and s > DIVERGED_SCORE and m != member and m not in donors:
                 donors.append(m)
-        if my > lo or not donors:
+        if not is_bottom or not donors:
             with self._lock:
                 self.n_keeps += 1
             return "keep", None, dict(own_cfg)

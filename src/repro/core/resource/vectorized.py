@@ -117,6 +117,7 @@ class LaneScheduler:
         self.n_leased = 0
         self.n_streamed = 0
         self.n_donor_waits = 0
+        self.n_device_retired = 0  # retirements harvested from a scan's log
         self._donor_waited: set = set()  # job ids counted once, not per poll
 
     # -- manager side -----------------------------------------------------------
@@ -185,6 +186,18 @@ class LaneScheduler:
         if self._on_stream is not None:
             self._on_stream()
         job.finish(JobResult(score=float(score), extra=extra))
+
+    def complete_retirements(self, events: List[Tuple[int, float, Any]]) -> None:
+        """Consume a device dispatch's emitted retirement log (--device-rules):
+        one ``(handle, score, extra)`` triple per lane the in-scan rules ended.
+        Each settles through ``complete`` — streaming semantics, counters and
+        callbacks unchanged — but they arrive as one batch per dispatch rather
+        than one host sync per event step, and ``n_device_retired`` records
+        that the decisions were made on-device."""
+        for handle, score, extra in events:
+            self.complete(handle, score, extra=extra)
+        with self._lock:
+            self.n_device_retired += len(events)
 
     def fail(self, handle: int, error: str) -> None:
         with self._lock:

@@ -102,6 +102,54 @@ def _pow2_floor(n: int) -> int:
     return 1 << (max(int(n), 1).bit_length() - 1)
 
 
+def _pow2_ceil(n: int) -> int:
+    """Smallest power of two >= max(n, 1) — device-rule history capacities
+    come from here, so their array shapes (and thus compiled programs) stay
+    bounded as rung histories grow."""
+    return 1 << (max(int(n), 1) - 1).bit_length()
+
+
+def _poll_anchor(s: int, cadence: int) -> int:
+    """Next divergence/snapshot poll step strictly after ``s``: polls anchor
+    to an ABSOLUTE cadence (the next multiple), not a window sliding with
+    ``s`` — a sliding window recomputed every pass never comes due, which
+    both starved the capped divergence poll at chunk_steps=1 and left
+    snapshot harvests with no mid-flight event to run at."""
+    return (s // cadence + 1) * cadence
+
+
+def _next_event_step(s: int, cadence: int, starts, budgets, live,
+                     boundaries=()) -> int:
+    """The streaming engine's next host event at-or-after ``s``: the poll
+    anchor, each live lane's budget end, and the next rung boundary each lane
+    can still reach (``local < b <= budget`` — completers feed the rung
+    history too).  An event due AT ``s`` (e.g. a freshly leased zero-budget
+    job) returns ``s`` itself so the driver re-runs the event pass instead of
+    burning a dispatch on steps nobody needs."""
+    ev = _poll_anchor(s, cadence)
+    for lane in live:
+        local = s - starts[lane]
+        ev = min(ev, int(starts[lane] + budgets[lane]))
+        for b in boundaries:
+            if local < b <= budgets[lane]:
+                ev = min(ev, int(starts[lane] + b))
+                break
+    return max(ev, int(s))
+
+
+def _device_dispatch_horizon(s: int, cadence: int, starts, budgets,
+                             live) -> int:
+    """--device-rules chunk horizon: rung boundaries and individual budget
+    ends are handled INSIDE the scan, so the host only stops at the
+    divergence/snapshot poll anchor or once every live lane's budget is over
+    (the scan would be all no-ops past that)."""
+    ev = _poll_anchor(s, cadence)
+    ends = [int(starts[lane] + budgets[lane]) for lane in live]
+    if ends:
+        ev = min(ev, max(ends))
+    return max(ev, int(s))
+
+
 def make_trial(arch: str, steps: int, batch: int, seq: int, seed: int):
     """Legacy trial callable: config dict -> score, recompiling per trial.
 
@@ -186,7 +234,7 @@ class PopulationTrial:
                  early_stop=None, per_trial_init: bool = False,
                  refill_idle_grace_s: float = 0.25, lifecycle=None,
                  chunk_steps: int = 1, snapshot_every: int = 0,
-                 snapshots=None):
+                 snapshots=None, device_rules: bool = False):
         self.arch = arch
         self.steps = int(steps)
         self.batch = int(batch)
@@ -201,6 +249,11 @@ class PopulationTrial:
         # synthesis), re-entering the host only at event steps.  1 = the
         # per-step loop, bit-for-bit.
         self.chunk_steps = max(1, int(chunk_steps))
+        # --device-rules: evaluate the rung rule / PBT window quantile INSIDE
+        # the fused scan (rule state carried by lax.scan), so chunk boundaries
+        # no longer clamp to event-step gaps and the host only harvests
+        # retirements from the scan's emitted event log
+        self.device_rules = bool(device_rules)
         self.n_dispatches = 0       # device calls issued (steps + lane ops)
         self.n_train_steps = 0      # population steps those calls advanced
         # lane-lifecycle hook (streaming PBT): maps retire->refill directives
@@ -221,6 +274,11 @@ class PopulationTrial:
         self.n_lane_restores = 0        # leases resumed from a snapshot
         self.resumed_from_steps: list = []  # lane-local step of each restore
         self._event_seq = 0             # streaming event boundaries, all flights
+        # device dispatches from first-flight start to the first retirement
+        # harvest — "the ladder": with --device-rules a whole multi-rung
+        # cohort collapses to 1 (the headline claim CI gates on); host-rule
+        # paths pay the init op plus one dispatch per event gap
+        self.ladder_dispatches = None
         self.n_refills = 0          # lanes reused within a streaming flight
         self.n_clones = 0           # donor-clone lane ops executed on device
         self.n_splices = 0          # single-lane splice inits executed
@@ -383,6 +441,10 @@ class PopulationTrial:
         if mesh is not None:
             pstate = shard_population_state(pstate, mesh)
         hook = self.early_stop
+        if self.device_rules and hook is not None and hook.boundaries:
+            scores = self._run_batch_device_rules(
+                tc, data, k, mesh, pstate, php, budgets, streams, hook)
+            return scores[: len(configs)]
         chunk = self.chunk_steps
         if chunk > 1:
             # fused dispatch: chunk boundaries align with the host-known event
@@ -441,6 +503,56 @@ class PopulationTrial:
         scores = np.asarray(population_scores(pstate, self.DIVERGED_SCORE))
         return [float(x) for x in scores[: len(configs)]]
 
+    def _run_batch_device_rules(self, tc, data, k, mesh, pstate, php, budgets,
+                                streams, hook) -> list:
+        """Batch-protocol flight with the cohort rung rule carried *in* the
+        scan (``--device-rules``).
+
+        The host loop no longer clamps chunks to rung boundaries or restacks
+        hyperparameters after a cut: each scan step rebuilds the traced
+        ``total_steps`` from the carried budgets and applies the cohort rule
+        at boundaries on-device, so a whole ASHA ladder whose max budget fits
+        one chunk is ONE dispatch.  Only the surviving budgets come back per
+        dispatch (to bound the loop); the hook's truncation counters are
+        reconstructed from the budget delta at the end.
+        """
+        import jax.numpy as jnp
+
+        from ..data.pipeline import split_stream, split_streams
+        from ..train.population import (
+            cohort_rule_state,
+            get_compiled_population_rule_scan_step,
+            population_scores,
+        )
+
+        spec = hook.device_rule()
+        chunk = self.chunk_steps
+        init_budgets = budgets.copy()
+        if self.per_trial_streams:
+            s_lo, s_hi = (jnp.asarray(w) for w in split_streams(streams))
+        else:
+            s_lo, s_hi = (jnp.uint32(w) for w in split_stream(0))
+        s = 0
+        while s < int(budgets.max()):
+            t = _pow2_floor(min(int(budgets.max()) - s, chunk))
+            rules = cohort_rule_state(
+                budgets, np.zeros(k), np.full(k, s),
+                spec.boundaries, spec.eta)
+            steps0 = (jnp.full((k,), s, jnp.int32) if self.per_trial_streams
+                      else jnp.asarray(s, jnp.int32))
+            fn = get_compiled_population_rule_scan_step(
+                tc, k, data, t, "cohort", mesh=mesh,
+                per_trial_batch=self.per_trial_streams)
+            (pstate, rout), _ = fn(pstate, php, steps0, s_lo, s_hi, rules)
+            budgets = np.asarray(rout["budgets"], np.float64)
+            self.n_dispatches += 1
+            self.n_train_steps += t
+            s += t
+        spec.absorb_cuts(init_budgets, budgets, np.asarray(pstate["diverged"]))
+        self.last_flight_steps = s
+        scores = np.asarray(population_scores(pstate, self.DIVERGED_SCORE))
+        return [float(x) for x in scores]
+
     def _run_streaming(self, mesh, scheduler) -> list:
         """Continuous lane-refill flight (Algorithm 1's busy-resource invariant
         *inside* one compiled program).
@@ -491,12 +603,15 @@ class PopulationTrial:
         from ..optim.hparams import stack_hparams
         from ..train.population import (
             get_compiled_lane_op,
+            get_compiled_population_rule_scan_step,
             get_compiled_population_scan_step,
             get_compiled_population_step,
             get_compiled_sharded_population_step,
             init_population_state_from_keys,
             pad_population,
+            pbt_rule_state,
             shard_population_state,
+            staggered_rule_state,
         )
 
         if not self.per_trial_streams:
@@ -533,6 +648,7 @@ class PopulationTrial:
                     if lifecycle is not None else None)
         self._flight_epoch += 1
         epoch = self._flight_epoch
+        dispatches0 = self.n_dispatches
 
         # host-side lane table (lane-local: budgets/steps restart per lease;
         # lineage lanes additionally carry cumulative bases across rounds)
@@ -555,6 +671,26 @@ class PopulationTrial:
             pstate = shard_population_state(pstate, mesh)
         php = stack_hparams(hps)
         hook = self.early_stop
+        # --device-rules: lower the rung rule (staggered/async-SHA) or the PBT
+        # window quantile into the scan.  The host skips observe(), stops
+        # clamping chunks to event-step gaps, and harvests retirements from
+        # the scan's emitted budgets/verdicts instead of deciding them.
+        device_spec = None
+        if self.device_rules and hook is not None and hook.boundaries:
+            device_spec = hook.device_rule()
+        device_pbt = (self.device_rules and lifecycle is not None
+                      and getattr(lifecycle, "device_rule_on", False))
+        device_active = device_spec is not None or device_pbt
+        batch_complete = (getattr(scheduler, "complete_retirements", None)
+                          if device_active else None)
+        # device mode only: while True, pstate is still exactly its from-keys
+        # init, so a first mass fill can rebuild it instead of dispatching a
+        # masked reset — that free-ness is what lets a whole ladder be ONE call
+        virgin = True
+
+        def rule_scan_of(t, mode):
+            return get_compiled_population_rule_scan_step(
+                tc, k, data, t, mode, mesh=mesh)
         s = 0
         idle_deadline = None
         grace = self.refill_idle_grace_s
@@ -581,26 +717,16 @@ class PopulationTrial:
         next_event = 0
         s_lo, s_hi = (jnp.asarray(w) for w in split_streams(streams))
 
-        def _next_event_step() -> int:
-            # the divergence/snapshot poll is anchored to an ABSOLUTE cadence
-            # (next multiple of the poll interval), not a window sliding with
-            # ``s`` — a sliding window recomputed every pass never comes due,
-            # which both starved the capped divergence poll at chunk_steps=1
-            # and left snapshot harvests with no mid-flight event to run at
-            ev = (s // DIVERGE_CHECK_EVERY + 1) * DIVERGE_CHECK_EVERY
-            for lane in range(k):
-                if handles[lane] is None:
-                    continue
-                local = s - starts[lane]
-                ev = min(ev, int(starts[lane] + budgets[lane]))
-                if hook is not None:
-                    # next rung boundary this lane can still reach (<= budget:
-                    # completers feed the rung history too)
-                    for b in hook.boundaries:
-                        if local < b <= budgets[lane]:
-                            ev = min(ev, int(starts[lane] + b))
-                            break
-            return max(ev, s + 1)
+        def _next_event() -> int:
+            live_now = [i for i in range(k) if handles[i] is not None]
+            if device_active:
+                # rung cuts and individual budget ends are in-scan events now;
+                # the host only stops for the poll or the whole-flight drain
+                return _device_dispatch_horizon(
+                    s, DIVERGE_CHECK_EVERY, starts, budgets, live_now)
+            return _next_event_step(
+                s, DIVERGE_CHECK_EVERY, starts, budgets, live_now,
+                hook.boundaries if hook is not None else ())
 
         while True:
             live = [i for i in range(k) if handles[i] is not None]
@@ -616,6 +742,7 @@ class PopulationTrial:
                     pmask[poison] = True
                     pstate = dict(pstate, diverged=jnp.logical_or(
                         pstate["diverged"], jnp.asarray(pmask)))
+                    virgin = False
             # 1) at an event step: apply the rung rule, then retire lanes whose
             # budget is exhausted (incl. just-truncated) or that diverged
             if live and s >= next_event:
@@ -657,12 +784,13 @@ class PopulationTrial:
                     # kill@event fires AFTER any due harvest: "crash at an
                     # arbitrary event boundary" with the snapshots on disk
                     fault_plan.check("event", event=self._event_seq)
-                if hook is not None:
+                if hook is not None and device_spec is None:
                     local = np.array(
                         [s - starts[i] if handles[i] is not None else 0
                          for i in range(k)], np.float64)
                     budgets = np.asarray(
                         hook.observe(local, last, budgets, diverged), np.float64)
+                retired: list = []  # device mode: one batch per event pass
                 for lane in live:
                     local_s = int(s - starts[lane])
                     if diverged[lane] or local_s >= budgets[lane]:
@@ -673,13 +801,17 @@ class PopulationTrial:
                             # same telemetry the batch engine keeps: a diverged
                             # lane's remaining budget is dead weight reclaimed
                             hook.n_reclaimed += 1
-                        scheduler.complete(handles[lane], score, extra={
+                        extra = {
                             "steps": int(applied[lane] - applied0[lane]),
                             "total_steps": int(applied[lane]),
                             "diverged": bool(diverged[lane]),
                             "lane": lane,
                             "resumed_from_step": int(resumed_at[lane]),
-                        })
+                        }
+                        if batch_complete is not None:
+                            retired.append((handles[lane], score, extra))
+                        else:
+                            scheduler.complete(handles[lane], score, extra=extra)
                         if self.journal is not None:
                             self.journal.append(
                                 "retire", lane=lane, step=local_s,
@@ -701,6 +833,15 @@ class PopulationTrial:
                         # a lineage lane freezes without a restack: its device
                         # step counter equals its traced total_steps (or the
                         # divergence latch holds it) until the next directive
+                if retired:
+                    # the scan's emitted event log, settled in one call: the
+                    # scheduler streams each result exactly as the host-rule
+                    # path would, but with one host sync per dispatch
+                    batch_complete(retired)
+                retired_now = [i for i in range(k) if handles[i] is None
+                               and i in live]
+                if retired_now and self.ladder_dispatches is None:
+                    self.ladder_dispatches = self.n_dispatches - dispatches0
                 # the retire pass may have emptied the flight: recompute so the
                 # loop idles/returns instead of dispatching a no-op step (or,
                 # chunked, a whole no-op chunk) against all-frozen lanes
@@ -824,6 +965,7 @@ class PopulationTrial:
                             pstate = restore_fn(
                                 pstate, jnp.asarray(lane, jnp.int32),
                                 jax.device_put(snap))
+                            virgin = False
                             self.n_dispatches += 1
                             self.n_lane_restores += 1
                             starts[lane] = s - local
@@ -863,14 +1005,26 @@ class PopulationTrial:
                         donor_idx[lane] = donor_lane
                     pstate = clone_fn(pstate, jnp.asarray(mask),
                                       jnp.asarray(donor_idx, jnp.int32))
+                    virgin = False
                     self.n_clones += len(clone_jobs)
                     self.n_dispatches += 1
                     for _, _, cfg in clone_jobs:
                         lifecycle.clone_done(cfg)
-                if len(splice_jobs) == 1:
+                if splice_jobs and virgin and device_active:
+                    # first fill of a device-rule flight: nothing has trained
+                    # yet, so rebuilding the whole population from the lane
+                    # keys is bit-identical to the masked reset (idle lanes
+                    # are exactly their sentinel-key inits) and costs no
+                    # device dispatch — the ladder's single call stays single
+                    pstate = init_population_state_from_keys(
+                        jnp.stack(lane_keys), tc)
+                    if mesh is not None:
+                        pstate = shard_population_state(pstate, mesh)
+                elif len(splice_jobs) == 1:
                     lane = splice_jobs[0]
                     pstate = splice_fn(
                         pstate, jnp.asarray(lane, jnp.int32), lane_keys[lane])
+                    virgin = False
                     self.n_splices += 1
                     self.n_dispatches += 1
                 elif splice_jobs:
@@ -880,6 +1034,7 @@ class PopulationTrial:
                     reset_mask[splice_jobs] = True
                     pstate = init_fn(
                         pstate, jnp.asarray(reset_mask), jnp.stack(lane_keys))
+                    virgin = False
                     self.n_dispatches += 1
                 live = [i for i in range(k) if handles[i] is not None]
                 force_parked = False
@@ -906,7 +1061,12 @@ class PopulationTrial:
                 _time.sleep(0.002)
                 continue
             idle_deadline = None
-            next_event = _next_event_step()
+            next_event = _next_event()
+            if next_event <= s:
+                # an event is due NOW (e.g. a freshly leased zero-budget job):
+                # loop back into the event pass instead of burning a dispatch
+                # on steps nobody needs
+                continue
             # 4) advance to the next event: lane i consumes ITS OWN stream at
             # ITS OWN cursor (a refilled lane replays from 0; a keep/clone
             # round continues the member's cursor at round * round_steps).
@@ -915,7 +1075,59 @@ class PopulationTrial:
             # instead of one (plus K host-built batches) per step; chunk
             # boundaries land exactly on the event step.
             t = _pow2_floor(min(next_event - s, chunk)) if chunk > 1 else 1
-            if t > 1:
+            if device_active:
+                # rule-carrying scan (any t >= 1): budgets ride as scan state,
+                # rung cuts / window verdicts land in-scan, and the emitted
+                # rule state is the event log the host harvests from
+                steps0 = np.zeros(k, np.int64)
+                local0 = np.zeros(k, np.int64)
+                for i in range(k):
+                    if handles[i] is not None:
+                        local0[i] = s - starts[i]
+                        steps0[i] = base_data[i] + local0[i]
+                if device_spec is not None:
+                    counts_max = max((len(v) for v in
+                                      hook._rung_history.values()), default=0)
+                    cap = _pow2_ceil(counts_max + k)
+                    hist, counts = device_spec.lower_history(cap)
+                    rules = staggered_rule_state(
+                        budgets, applied0, local0,
+                        device_spec.boundaries, device_spec.eta, hist, counts)
+                    mode = "staggered"
+                else:
+                    wentries = lifecycle.window_snapshot()
+                    w = lifecycle.window.maxlen
+                    wscore = np.zeros(w, np.float32)
+                    for j, (_, sc, _) in enumerate(wentries):
+                        wscore[j] = sc
+                    rules = pbt_rule_state(
+                        budgets, applied0, local0,
+                        lifecycle.quantile, wscore, len(wentries))
+                    mode = "pbt"
+                (pstate, rout), _ = rule_scan_of(t, mode)(
+                    pstate, php, jnp.asarray(steps0, jnp.int32), s_lo, s_hi,
+                    rules)
+                virgin = False
+                if device_spec is not None:
+                    new_budgets = np.asarray(rout["budgets"], np.float64)
+                    # every device-side shrink here is a rung cut (the
+                    # staggered rule skips diverged lanes; dead-budget reclaim
+                    # stays with the host retire pass, counted there)
+                    hook.n_truncated += int((new_budgets < budgets).sum())
+                    device_spec.absorb_history(rout["hist"], rout["counts"])
+                    budgets = new_budgets
+                else:
+                    vready = np.asarray(rout["vready"])
+                    vbottom = np.asarray(rout["vbottom"])
+                    vlo = np.asarray(rout["vlo"])
+                    vhi = np.asarray(rout["vhi"])
+                    for lane in range(k):
+                        if vready[lane] and lineage[lane] is not None:
+                            lifecycle.note_device_verdict(
+                                lineage[lane], lane_round[lane],
+                                bool(vbottom[lane]), float(vlo[lane]),
+                                float(vhi[lane]))
+            elif t > 1:
                 steps0 = np.zeros(k, np.int64)
                 for i in range(k):
                     if handles[i] is not None:
@@ -1105,6 +1317,15 @@ def main(argv=None) -> int:
                         "retirement/PBT-round event steps, and T=1 reproduces "
                         "the per-step loop bit-for-bit.  Larger T = fewer "
                         "host dispatches but coarser divergence polling")
+    p.add_argument("--device-rules", action="store_true",
+                   help="with --vectorize: evaluate the scheduling rules "
+                        "INSIDE the fused scan — rung cuts (--inflight-stop) "
+                        "and the PBT window quantile (--pbt-async) ride as "
+                        "lax.scan carry state, so chunk boundaries stop "
+                        "clamping to event-step gaps and a whole ASHA ladder "
+                        "can run as ONE device dispatch; the host only "
+                        "harvests retirements from the scan's emitted event "
+                        "log")
     p.add_argument("--per-trial-init", action="store_true",
                    help="fold each trial's stream/job id into its init PRNG "
                         "key so trials start from distinct weights (serial and "
@@ -1210,6 +1431,14 @@ def main(argv=None) -> int:
     if args.snapshot_every and not args.lane_refill:
         p.error("--snapshot-every snapshots streaming lanes; it requires "
                 "--lane-refill")
+    if args.device_rules:
+        if args.vectorize <= 0:
+            p.error("--device-rules acts on the population engines; it "
+                    "requires --vectorize K")
+        if not (args.inflight_stop or (args.pbt_streaming and args.pbt_async)):
+            p.error("--device-rules needs an in-scan rule: --inflight-stop "
+                    "(rung cuts) or --pbt-streaming with --pbt-async "
+                    "(window-quantile verdicts)")
     per_trial_streams = not args.shared_stream
     # lane-snapshot store: armed when snapshots are being taken OR when a
     # resume may need to restore lanes a previous run persisted
@@ -1230,7 +1459,8 @@ def main(argv=None) -> int:
                                 per_trial_init=args.per_trial_init,
                                 chunk_steps=args.chunk_steps,
                                 snapshot_every=args.snapshot_every,
-                                snapshots=snap_store)
+                                snapshots=snap_store,
+                                device_rules=args.device_rules)
     elif args.legacy_recompile:
         trial = make_trial(args.arch, args.steps, args.batch, args.seq, args.seed)
     else:
@@ -1242,7 +1472,7 @@ def main(argv=None) -> int:
         "arch", "steps", "batch", "seq", "seed", "vectorize",
         "shard_population", "chunk_steps", "per_trial_init", "shared_stream",
         "lane_refill", "inflight_stop", "snapshot_every", "snapshot_dir",
-        "legacy_recompile", "pbt_streaming", "pbt_async",
+        "legacy_recompile", "pbt_streaming", "pbt_async", "device_rules",
         "max_flight_restarts")}
     t0 = time.time()
     if resume_db is not None:
@@ -1259,6 +1489,9 @@ def main(argv=None) -> int:
             p.error(f"--inflight-stop needs a rung proposer (asha/hyperband/bohb), "
                     f"got {args.proposer!r}")
         trial.early_stop = hook_factory(steps_per_unit=args.steps)
+    if args.device_rules and args.pbt_streaming:
+        # switch decide() to consume scan-emitted window-quantile verdicts
+        exp.proposer.lifecycle_hook().enable_device_rule()
     best = exp.run()
     dt = time.time() - t0
     engine = ("legacy-recompile" if args.legacy_recompile else
@@ -1268,9 +1501,12 @@ def main(argv=None) -> int:
         "proposer": args.proposer,
         "arch": args.arch,
         "engine": engine + ("+refill" if args.lane_refill else "")
-                         + ("+chunked" if args.chunk_steps > 1 else ""),
+                         + ("+chunked" if args.chunk_steps > 1 else "")
+                         + ("+devrules" if args.device_rules else ""),
         "vectorize": args.vectorize,
     }
+    if args.device_rules:
+        out["device_rules"] = True
     if args.vectorize > 0 and getattr(trial, "n_train_steps", 0):
         out["chunk_steps"] = args.chunk_steps
         out["device_dispatches"] = trial.n_dispatches
@@ -1281,6 +1517,11 @@ def main(argv=None) -> int:
         out["inflight_truncated_lanes"] = trial.early_stop.n_truncated
         out["inflight_reclaimed_diverged_lanes"] = trial.early_stop.n_reclaimed
     if args.lane_refill:
+        if getattr(trial, "ladder_dispatches", None) is not None:
+            # the first cohort's cost: 1 under --device-rules (the whole
+            # multi-rung ladder in one fused dispatch), init + one dispatch
+            # per event gap otherwise
+            out["ladder_device_dispatches"] = trial.ladder_dispatches
         out["lane_refills"] = trial.n_refills
         out["streamed_results"] = exp.rm.n_streamed
         out["refill_flights"] = exp.rm.n_refill_flights
@@ -1302,6 +1543,8 @@ def main(argv=None) -> int:
         out["pbt_lineage_resets"] = trial.n_lineage_resets
         # the streaming engine's whole point: weights never visit the host
         out["pbt_host_ckpt_roundtrips"] = trial.n_host_ckpt_roundtrips
+        if args.device_rules:
+            out["pbt_device_verdicts"] = hook.n_device_verdicts
     if result_times:
         out["first_result_s"] = round(result_times[0] - t0, 2)
         out["last_result_s"] = round(result_times[-1] - t0, 2)

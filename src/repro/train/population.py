@@ -55,6 +55,7 @@ folds the same per-trial stream id into its PRNG.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -580,6 +581,348 @@ def make_sharded_population_step(
     )
 
 
+# -- device-side decision rules -------------------------------------------------
+#
+# The fused scan above still returns to the host at every *event* step (rung
+# boundary, retirement, PBT round), which caps the chunk length at the event
+# gap.  The rule-carrying scan below removes that cap: the early-stop rung
+# rules (``repro.core.proposer.early_stop``) and the PBT sliding-window
+# quantile are re-expressed as pure vectorized functions of scan-carried
+# state, evaluated after every fused step.  A lane whose budget a rule
+# truncates freezes at the very next step *inside* the scan (its traced
+# ``total_steps`` is rebuilt from the carried budgets each step), so a whole
+# ASHA ladder runs as ONE dispatch and the host only harvests retirements
+# from the emitted per-step budget log afterwards.
+#
+# Rule-state layout (a flat dict carried through the scan next to the
+# population state; per-lane leaves shard on the population axis, history /
+# window leaves replicate):
+#
+#   common      budgets f32[K] (lane-local step budget; absolute in the
+#               batch driver where base == 0), base f32[K] (each lane's
+#               applied-step offset: ``total_steps = base + budgets``),
+#               local0 i32[K] (lane-local wall step at chunk start)
+#   cohort      boundaries f32[B], eta f32[] — the synchronized-flight rule
+#               (``InFlightSuccessiveHalving.__call__``)
+#   staggered   boundaries, eta, hist f32[B, C] (+inf padded per-rung loss
+#               history), counts i32[B] — the asynchronous-SHA rule
+#               (``InFlightSuccessiveHalving.observe``)
+#   pbt         quantile f32[], wscore f32[W] (score ring), wcount i32[],
+#               vbottom/vready bool[K], vlo/vhi f32[K] — the sliding-window
+#               quantile; verdicts latch per lane at its round-end step
+#               (``PBTLifecycle.decide`` consumes them on the host)
+
+
+def cohort_rule_update(rules, losses, diverged, local):
+    """In-scan twin of ``InFlightSuccessiveHalving.__call__``.
+
+    ``local`` is the cohort's wall step (i32[K], all lanes equal — the batch
+    driver's synchronized flights).  A no-op except at rung boundaries, where
+    diverged lanes' dead budgets are reclaimed and ranked lanes below the
+    ``1/eta`` cut are truncated to the boundary step.  The O(K^2) pairwise
+    rank reproduces ``np.argsort``'s stable ascending order (ties keep the
+    lower lane index first), so the cut set is bit-identical to the host
+    rule's.
+    """
+    budgets = rules["budgets"]
+    boundaries = rules["boundaries"]
+    eta = rules["eta"]
+    k = budgets.shape[0]
+    idx = jnp.arange(k)
+    sf = local[0].astype(jnp.float32)
+    at = jnp.any(boundaries == sf)
+    dead = diverged & (budgets > sf)
+    b2 = jnp.where(dead, sf, budgets)
+    ranked = (b2 >= sf) & (b2 > 0) & ~diverged & jnp.isfinite(losses)
+    n_ranked = ranked.sum()
+    n_keep = jnp.ceil(n_ranked.astype(jnp.float32) / eta).astype(jnp.int32)
+    lower = ((losses[None, :] < losses[:, None]) & ranked[None, :]).sum(1)
+    ties = (
+        (losses[None, :] == losses[:, None]) & ranked[None, :]
+        & (idx[None, :] < idx[:, None])
+    ).sum(1)
+    rank = lower + ties
+    noop = (n_ranked <= 1) | (n_keep >= n_ranked)
+    cut = ranked & (rank >= n_keep) & (b2 > sf) & ~noop
+    nb = jnp.where(cut, sf, b2)
+    return dict(rules, budgets=jnp.where(at, nb, budgets))
+
+
+def staggered_rule_update(rules, losses, diverged, local):
+    """In-scan twin of ``InFlightSuccessiveHalving.observe`` (async SHA).
+
+    ``local`` is each lane's own wall step (i32[K]) — refilled lanes sit at
+    different steps.  A lane whose local step lands on a rung boundary (and
+    that is live, finite and still inside its budget — a frozen lane's wall
+    clock keeps ticking past retirement inside a long chunk) appends its loss
+    to that rung's history and is truncated unless it ranks in the top
+    ``1/eta`` of the history *including* its own entry.  Simultaneous hits
+    append in lane order, reproducing the host rule's lane loop exactly.
+    ``hist`` capacity must cover every possible append (the driver sizes it
+    as current max count + K before each dispatch).
+    """
+    budgets = rules["budgets"]
+    boundaries = rules["boundaries"]
+    eta = rules["eta"]
+    hist = rules["hist"]
+    counts = rules["counts"]
+    k = budgets.shape[0]
+    n_rungs, cap = hist.shape
+    idx = jnp.arange(k)
+    lf = local.astype(jnp.float32)
+    eq = lf[:, None] == boundaries[None, :]                      # [K, B]
+    at = eq.any(1)
+    bi = jnp.argmax(eq, 1)
+    hit = (
+        at & (budgets > 0) & ~diverged
+        & jnp.isfinite(losses) & (lf <= budgets)
+    )
+    j_lt_i = idx[None, :] < idx[:, None]
+    same = hit[None, :] & hit[:, None] & (bi[None, :] == bi[:, None])
+    n_before = (same & j_lt_i).sum(1)
+    new_len = counts[bi] + n_before + 1
+    n_keep = jnp.ceil(new_len.astype(jnp.float32) / eta).astype(jnp.int32)
+    col = jnp.arange(cap)
+    rank_hist = (
+        (hist[bi] < losses[:, None]) & (col[None, :] < counts[bi][:, None])
+    ).sum(1)
+    rank_same = (same & j_lt_i & (losses[None, :] < losses[:, None])).sum(1)
+    rank = rank_hist + rank_same
+    cut = hit & (rank >= n_keep) & (budgets > lf)
+    new_budgets = jnp.where(cut, lf, budgets)
+    slot = counts[bi] + n_before
+    ok = hit & (slot < cap)
+    flat = jnp.where(ok, bi * cap + slot, n_rungs * cap)         # last = dump
+    padded = jnp.concatenate([hist.reshape(-1), jnp.zeros((1,), hist.dtype)])
+    new_hist = padded.at[flat].set(losses)[: n_rungs * cap].reshape(n_rungs, cap)
+    new_counts = counts + (ok[:, None] & eq).sum(0)
+    return dict(rules, budgets=new_budgets, hist=new_hist, counts=new_counts)
+
+
+def pbt_rule_update(rules, losses, diverged, local):
+    """In-scan PBT sliding-window quantile (``PBTLifecycle``'s async rule).
+
+    A lane hitting its round-end step (``local == budgets``; a diverged
+    lane's wall clock still reaches it) appends its score to the ring window
+    in lane order, then latches a per-lane verdict: ``vbottom`` (score at or
+    below the low quantile of the updated window), the quantile values
+    ``vlo``/``vhi``, and ``vready``.  The host harvest feeds the verdicts to
+    ``PBTLifecycle.note_device_verdict`` — donor choice and hyperparameter
+    perturbation stay host-side (they draw from the proposer's RNG).
+    Budgets are never truncated here: PBT rounds end by budget.
+    """
+    budgets = rules["budgets"]
+    wscore = rules["wscore"]
+    wcount = rules["wcount"]
+    quantile = rules["quantile"]
+    from ..core.proposer.pbt import DIVERGED_SCORE, window_quantile
+
+    k = budgets.shape[0]
+    w = wscore.shape[0]
+    idx = jnp.arange(k)
+    lf = local.astype(jnp.float32)
+    hit = (budgets > 0) & (lf == budgets)
+    score = jnp.where(
+        diverged | ~jnp.isfinite(losses), jnp.float32(DIVERGED_SCORE), -losses
+    )
+    n_before = (hit[None, :] & (idx[None, :] < idx[:, None])).sum(1)
+    slot = (wcount + n_before) % w
+    flat = jnp.where(hit, slot, w)                               # last = dump
+    padded = jnp.concatenate([wscore, jnp.zeros((1,), wscore.dtype)])
+    new_wscore = padded.at[flat].set(score)[:w]
+    new_wcount = wcount + hit.sum()
+    lo, hi = window_quantile(new_wscore, new_wcount, quantile, xp=jnp)
+    return dict(
+        rules,
+        wscore=new_wscore,
+        wcount=new_wcount,
+        vbottom=jnp.where(hit, score <= lo, rules["vbottom"]),
+        vready=rules["vready"] | hit,
+        vlo=jnp.where(hit, lo, rules["vlo"]),
+        vhi=jnp.where(hit, hi, rules["vhi"]),
+    )
+
+
+_RULE_UPDATES: Dict[str, Callable] = {
+    "cohort": cohort_rule_update,
+    "staggered": staggered_rule_update,
+    "pbt": pbt_rule_update,
+}
+# per-lane rule-state leaves (shard on the population axis; the rest replicate)
+_RULE_LANE_KEYS: Dict[str, frozenset] = {
+    "cohort": frozenset({"budgets", "base", "local0"}),
+    "staggered": frozenset({"budgets", "base", "local0"}),
+    "pbt": frozenset({"budgets", "base", "local0",
+                      "vbottom", "vready", "vlo", "vhi"}),
+}
+
+
+def cohort_rule_state(budgets, base, local0, boundaries, eta) -> Dict[str, Any]:
+    return {
+        "budgets": jnp.asarray(budgets, jnp.float32),
+        "base": jnp.asarray(base, jnp.float32),
+        "local0": jnp.asarray(local0, jnp.int32),
+        "boundaries": jnp.asarray(boundaries, jnp.float32),
+        "eta": jnp.asarray(eta, jnp.float32),
+    }
+
+
+def staggered_rule_state(
+    budgets, base, local0, boundaries, eta, hist, counts
+) -> Dict[str, Any]:
+    state = cohort_rule_state(budgets, base, local0, boundaries, eta)
+    state["hist"] = jnp.asarray(hist, jnp.float32)
+    state["counts"] = jnp.asarray(counts, jnp.int32)
+    return state
+
+
+def pbt_rule_state(
+    budgets, base, local0, quantile, wscore, wcount
+) -> Dict[str, Any]:
+    budgets = jnp.asarray(budgets, jnp.float32)
+    k = budgets.shape[0]
+    return {
+        "budgets": budgets,
+        "base": jnp.asarray(base, jnp.float32),
+        "local0": jnp.asarray(local0, jnp.int32),
+        "quantile": jnp.asarray(quantile, jnp.float32),
+        "wscore": jnp.asarray(wscore, jnp.float32),
+        "wcount": jnp.asarray(wcount, jnp.int32),
+        "vbottom": jnp.zeros((k,), bool),
+        "vready": jnp.zeros((k,), bool),
+        "vlo": jnp.zeros((k,), jnp.float32),
+        "vhi": jnp.zeros((k,), jnp.float32),
+    }
+
+
+def rule_state_specs(mode: str, axis: str = "pop") -> Dict[str, PartitionSpec]:
+    """PartitionSpecs for a rule-state dict on the population mesh."""
+    pop = PartitionSpec(axis)
+    rep = PartitionSpec()
+    lane_keys = _RULE_LANE_KEYS[mode]
+    keys = {"budgets", "base", "local0"}
+    if mode in ("cohort", "staggered"):
+        keys |= {"boundaries", "eta"}
+    if mode == "staggered":
+        keys |= {"hist", "counts"}
+    if mode == "pbt":
+        keys |= {"quantile", "wscore", "wcount", "vbottom", "vready", "vlo", "vhi"}
+    return {k: (pop if k in lane_keys else rep) for k in keys}
+
+
+def _sharded_rule_update(mode: str, axis: str) -> Callable:
+    """Wrap a rule update for a sharded scan: gather the K-length lane
+    vectors (never the train state), evaluate the global rule identically on
+    every device, and slice each device's lane block back out.  History /
+    window / config leaves are replicated, so the global computation keeps
+    them consistent across devices by construction."""
+    update = _RULE_UPDATES[mode]
+    lane_keys = _RULE_LANE_KEYS[mode]
+
+    def upd(rules, losses, diverged, local):
+        blk = losses.shape[0]
+        me = jax.lax.axis_index(axis)
+        gather = lambda x: jax.lax.all_gather(x, axis, tiled=True)
+        grules = {k: (gather(v) if k in lane_keys else v) for k, v in rules.items()}
+        gnew = update(grules, gather(losses), gather(diverged), gather(local))
+        return {
+            k: (jax.lax.dynamic_slice_in_dim(v, me * blk, blk)
+                if k in lane_keys else v)
+            for k, v in gnew.items()
+        }
+
+    return upd
+
+
+def make_population_rule_scan_step(
+    tc: TrainConfig,
+    data,
+    chunk: int,
+    mode: str,
+    per_trial_batch: bool = True,
+    rule_update: Optional[Callable] = None,
+) -> Callable:
+    """``(pstate, hp, steps0, stream_lo, stream_hi, rules)
+    -> ((pstate, rules), metrics)`` — the fused scan with an in-scan
+    decision rule.
+
+    Like ``make_population_scan_step`` but each step rebuilds the traced
+    ``hp.total_steps`` from the carried rule state (``base + budgets``) and
+    then applies ``mode``'s rule update to the post-step losses, so a rung
+    cut (or PBT verdict) lands at exactly the step the host loop would have
+    applied it — without leaving the device.  ``metrics`` gains a
+    ``budgets`` log (``[chunk, K]``): the emitted event trace the host
+    harvests retirements from.
+    """
+    from ..data.pipeline import synth_population_batch, synth_tokens, tokens_to_batch
+
+    step = make_population_train_step(tc, per_trial_batch=per_trial_batch)
+    update = _RULE_UPDATES[mode] if rule_update is None else rule_update
+
+    def scan_chunk(pstate: PopState, hp: HParams, steps0, stream_lo, stream_hi,
+                   rules):
+        def body(carry, t):
+            pst, rl = carry
+            hp_t = dataclasses.replace(hp, total_steps=rl["base"] + rl["budgets"])
+            if per_trial_batch:
+                batch = synth_population_batch(
+                    data, stream_lo, stream_hi, steps0 + t, xp=jnp)
+            else:
+                toks = synth_tokens(
+                    jnp, data, (data.global_batch,), steps0 + t,
+                    stream_lo, stream_hi)
+                batch = tokens_to_batch(jnp, data, toks)
+            new, metrics = step(pst, batch, hp_t)
+            local = rl["local0"] + t + 1
+            new_rl = update(rl, new["last_loss"], new["diverged"], local)
+            return (new, new_rl), dict(metrics, budgets=new_rl["budgets"])
+
+        return jax.lax.scan(
+            body, (pstate, rules), jnp.arange(int(chunk), dtype=jnp.int32))
+
+    return scan_chunk
+
+
+def make_sharded_population_rule_scan_step(
+    tc: TrainConfig,
+    mesh: Mesh,
+    data,
+    chunk: int,
+    mode: str,
+    per_trial_batch: bool = True,
+    axis: str = "pop",
+) -> Callable:
+    """``shard_map`` twin of the rule-carrying scan.
+
+    Training stays embarrassingly parallel (each device scans its own K/N
+    lane block), but the decision rules are *global*: at each step the
+    K-length loss/budget/latch vectors are ``all_gather``-ed (never the
+    train state), every device evaluates the identical global rule, and each
+    slices its own block of the new budgets back out — so the sharded cut
+    set is bit-identical to the vmapped engine's by construction.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    fn = make_population_rule_scan_step(
+        tc, data, chunk, mode, per_trial_batch=per_trial_batch,
+        rule_update=_sharded_rule_update(mode, axis),
+    )
+    pop = PartitionSpec(axis)
+    rep = PartitionSpec()
+    lane = pop if per_trial_batch else rep
+    rules_spec = rule_state_specs(mode, axis)
+    # check_rep=False: the history/window leaves ARE replicated (every device
+    # runs the identical global update on all_gather-ed inputs), but the
+    # static replication checker cannot infer that through the gather
+    return shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(pop, pop, lane, lane, lane, rules_spec),
+        out_specs=((pop, rules_spec), PartitionSpec(None, axis)),
+        check_rep=False,
+    )
+
+
 def pad_population(k: int, mesh: Optional[Mesh]) -> int:
     """Smallest population size >= k that divides evenly over ``mesh``."""
     n = 1 if mesh is None else mesh.size
@@ -685,6 +1028,49 @@ def get_compiled_population_scan_step(
             else:
                 built = make_sharded_population_scan_step(
                     tc, mesh, data, chunk,
+                    per_trial_batch=per_trial_batch, axis=axis)
+            fn = jax.jit(built, donate_argnums=0)
+            _POP_CACHE[key] = fn
+    return fn
+
+
+def get_compiled_population_rule_scan_step(
+    tc: TrainConfig,
+    population: int,
+    data,
+    chunk: int,
+    mode: str,
+    mesh: Optional[Mesh] = None,
+    per_trial_batch: bool = True,
+    axis: str = "pop",
+):
+    """Memoized jitted rule-carrying fused scan (``--device-rules``).
+
+    Keyed like the plain scan programs plus the rule ``mode`` — the rule
+    update is baked into the scan body.  The staggered mode's history
+    capacity and the PBT mode's window length are *shapes* of the rules
+    pytree, not part of the key: ``jax.jit`` specializes on them internally,
+    and drivers size them to powers of two so an experiment compiles a
+    bounded program set.
+    """
+    if mesh is not None and population % mesh.size:
+        raise ValueError(
+            f"population {population} does not divide over {mesh.size} devices; "
+            f"pad to {pad_population(population, mesh)} with 0-budget trials"
+        )
+    key = (
+        static_step_key(tc), int(population), bool(per_trial_batch),
+        "rulescan", str(mode), int(chunk), data.spec_key,
+    ) + ((tuple(d.id for d in mesh.devices.flat), axis) if mesh is not None else ())
+    with _POP_CACHE_LOCK:
+        fn = _POP_CACHE.get(key)
+        if fn is None:
+            if mesh is None:
+                built = make_population_rule_scan_step(
+                    tc, data, chunk, mode, per_trial_batch=per_trial_batch)
+            else:
+                built = make_sharded_population_rule_scan_step(
+                    tc, mesh, data, chunk, mode,
                     per_trial_batch=per_trial_batch, axis=axis)
             fn = jax.jit(built, donate_argnums=0)
             _POP_CACHE[key] = fn

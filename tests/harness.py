@@ -1,0 +1,97 @@
+"""Shared cross-engine differential harness.
+
+One seeded multi-rung ladder workload, pushed through every population-engine
+cell — {vmapped, sharded} x {per-step, chunked} x {host-rule, device-rule} —
+in both the batch protocol (cohort rung rule) and the streaming lane-refill
+protocol (staggered/async-SHA rule), plus the serial-driver reference.
+``test_engine_matrix.py`` asserts the pairwise equivalence promises over
+these cells; the ad-hoc pairwise checks this replaces lived in
+``test_chunked.py`` / ``test_lane_refill.py``.
+
+Every cell runs the SAME workload at the SAME population size (``LANES`` —
+the conftest-forced virtual-device count, so vmapped and sharded cells share
+one K and the comparison is lane-for-lane).  Each cell gets a fresh
+``InFlightSuccessiveHalving`` hook; rule telemetry (truncations, reclaims)
+rides back with the scores so the matrix can assert the device twins make
+the *same decisions*, not just converge to close numbers.
+"""
+import numpy as np
+
+from repro.core.proposer.early_stop import InFlightSuccessiveHalving
+from repro.core.resource.vectorized import QueueFeedScheduler
+from repro.launch.hpo import PopulationTrial
+
+SEQ, BATCH = 16, 2
+ARCH = "starcoder2-3b"
+STEPS_PER_UNIT = 2
+# one K for every cell: equals the 8-virtual-device CPU mesh conftest forces,
+# so the sharded cells need no padding and compare lane-for-lane with vmapped
+LANES = 8
+ETA, MIN_ITER, MAX_ITER = 2.0, 2, 8
+
+
+def ladder(n=6):
+    """The seeded workload: geometric LRs with budgets cycling 2/4/8 steps,
+    so both rung boundaries (2 and 4) fire with a mixed cohort — some lanes
+    end exactly at a boundary, some pass through, some get cut."""
+    lrs = np.geomspace(3e-4, 4e-3, n)
+    budgets = ([1, 2, 4, 1, 2, 4] * ((n + 5) // 6))[:n]
+    return [{"learning_rate": float(lr), "stream": i, "n_iterations": int(b)}
+            for i, (lr, b) in enumerate(zip(lrs, budgets))]
+
+
+def rung_hook():
+    """A fresh rung rule per cell: boundaries {2, 4} under an 8-step cap."""
+    return InFlightSuccessiveHalving(eta=ETA, min_iter=MIN_ITER,
+                                     max_iter=MAX_ITER)
+
+
+def _trial(chunk, device):
+    return PopulationTrial(ARCH, steps=STEPS_PER_UNIT, batch=BATCH, seq=SEQ,
+                           seed=0, population=LANES, early_stop=rung_hook(),
+                           refill_idle_grace_s=0.0, chunk_steps=chunk,
+                           device_rules=device)
+
+
+def run_batch_cell(cfgs, chunk=1, device=False, mesh=None):
+    """Batch protocol: one synchronized flight, cohort rung rule
+    (``InFlightSuccessiveHalving.__call__`` on host, ``cohort_rule_update``
+    in-scan with ``device=True``)."""
+    trial = _trial(chunk, device)
+    scores = trial.run_population(list(cfgs), mesh=mesh)
+    return {
+        "scores": scores,
+        "n_truncated": trial.early_stop.n_truncated,
+        "n_reclaimed": trial.early_stop.n_reclaimed,
+        "dispatches": trial.n_dispatches,
+        "train_steps": trial.n_train_steps,
+    }
+
+
+def run_streaming_cell(cfgs, chunk=1, device=False, mesh=None):
+    """Streaming protocol: lane-refill flight fed by a fixed queue, staggered
+    rung rule (``observe`` on host, ``staggered_rule_update`` in-scan)."""
+    trial = _trial(chunk, device)
+    feed = QueueFeedScheduler(list(cfgs))
+    trial.run_population([], mesh=mesh, scheduler=feed)
+    n = len(cfgs)
+    assert len(feed.scores) == n, "every queued config must stream a result"
+    return {
+        "scores": feed.ordered_scores(n),
+        "steps": [feed.extras[i]["steps"] for i in range(n)],
+        "diverged": [feed.extras[i]["diverged"] for i in range(n)],
+        "n_truncated": trial.early_stop.n_truncated,
+        "n_reclaimed": trial.early_stop.n_reclaimed,
+        "dispatches": trial.n_dispatches,
+        "train_steps": trial.n_train_steps,
+    }
+
+
+def run_serial_reference(cfgs, eff_steps):
+    """Serial-driver scores measured at the population cells' effective
+    budgets: the compile-once per-trial loop, cut at each trial's (possibly
+    rung-truncated) step count — the ground truth every engine must match."""
+    trial = PopulationTrial(ARCH, steps=STEPS_PER_UNIT, batch=BATCH, seq=SEQ,
+                            seed=0)
+    return [trial.serial_score_at(dict(c), steps=st)
+            for c, st in zip(cfgs, eff_steps)]

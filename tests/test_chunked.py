@@ -210,51 +210,13 @@ def _hook():
     return InFlightSuccessiveHalving(eta=2.0, min_iter=2, max_iter=8)
 
 
-def test_batch_flights_chunked_bit_equal_with_rung_boundaries():
-    cfgs = _ladder(4)
-    s1 = PopulationTrial(ARCH, steps=2, batch=BATCH, seq=SEQ, seed=0,
-                         population=4, early_stop=_hook()
-                         ).run_population(cfgs)
-    t8 = PopulationTrial(ARCH, steps=2, batch=BATCH, seq=SEQ, seed=0,
-                         population=4, early_stop=_hook(), chunk_steps=8)
-    s8 = t8.run_population(cfgs)
-    assert s1 == s8, "chunked flights must reproduce the per-step loop"
-    assert t8.n_dispatches < t8.n_train_steps, \
-        "chunking must collapse dispatches below one per step"
-
-
-def test_streaming_refill_chunked_bit_equal(tc):
-    """Chunk boundaries land on retirements + rung boundaries: the streaming
-    engine's scores, effective budgets and lane schedule are unchanged."""
-    cfgs = _ladder(6)
-    outs = {}
-    for chunk in (1, 8):
-        t = PopulationTrial(ARCH, steps=2, batch=BATCH, seq=SEQ, seed=0,
-                            population=2, early_stop=_hook(),
-                            refill_idle_grace_s=0.0, chunk_steps=chunk)
-        feed = QueueFeedScheduler(cfgs)
-        t.run_population([], scheduler=feed)
-        outs[chunk] = (feed.ordered_scores(len(cfgs)),
-                       [feed.extras[i]["steps"] for i in range(len(cfgs))],
-                       [feed.extras[i]["lane"] for i in range(len(cfgs))],
-                       t.last_flight_steps)
-    assert outs[1] == outs[8]
-
-
-@multi_device
-def test_streaming_refill_chunked_sharded_bit_equal():
-    mesh = population_mesh()
-    cfgs = _ladder(6)
-    outs = {}
-    for chunk in (1, 4):
-        t = PopulationTrial(ARCH, steps=2, batch=BATCH, seq=SEQ, seed=0,
-                            population=jax.device_count(),
-                            early_stop=_hook(), refill_idle_grace_s=0.0,
-                            chunk_steps=chunk)
-        feed = QueueFeedScheduler(cfgs)
-        t.run_population([], mesh=mesh, scheduler=feed)
-        outs[chunk] = feed.ordered_scores(len(cfgs))
-    assert outs[1] == outs[4]
+# NOTE: the pairwise chunked-vs-per-step equivalence checks (batch flights
+# with rung boundaries, streaming refill, sharded streaming) moved into the
+# cross-engine matrix — tests/test_engine_matrix.py — which covers
+# {vmapped, sharded} x {per-step, chunked} x {host-rule, device-rule} against
+# one shared workload (tests/harness.py).  This module keeps the chunk
+# machinery's own contracts: device batch synthesis, scan-vs-loop equality,
+# divergence retirement, pow2 decomposition, clone ops, cache hygiene.
 
 
 def test_streaming_divergent_lane_retires_under_chunking():

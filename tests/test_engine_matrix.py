@@ -1,0 +1,238 @@
+"""Cross-engine differential matrix.
+
+One seeded ladder workload (``harness.ladder``) through every engine cell —
+{vmapped, sharded} x {per-step, chunked} x {host-rule, device-rule} — in both
+the batch (cohort rule) and streaming (staggered rule) protocols, plus the
+serial reference.  The equivalence promises, asserted pairwise:
+
+* within the vmapped family of one protocol: **bit-equal** scores, effective
+  budgets and rule decisions across chunk sizes and host/device rules;
+* sharded vs vmapped: scores within 1e-6 max abs diff, same rule decisions;
+* population vs the serial driver (at the host-rule effective budgets):
+  rtol 1e-5.
+
+Each cell runs once per module (lazy, cached in a module fixture); the tests
+just compare.  The in-scan rule updates are additionally unit-checked against
+their host twins on randomized inputs, independent of any driver.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from harness import ladder, run_batch_cell, run_serial_reference, \
+    run_streaming_cell, rung_hook
+from repro.distributed.sharding import population_mesh
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2, reason="needs a multi-device (virtual CPU) mesh"
+)
+
+# (cell name, chunk_steps, device_rules, sharded)
+CELLS = [
+    ("vmapped-perstep-host", 1, False, False),
+    ("vmapped-perstep-device", 1, True, False),
+    ("vmapped-chunked-host", 8, False, False),
+    ("vmapped-chunked-device", 8, True, False),
+    ("sharded-perstep-host", 1, False, True),
+    ("sharded-perstep-device", 1, True, True),
+    ("sharded-chunked-host", 8, False, True),
+    ("sharded-chunked-device", 8, True, True),
+]
+REFERENCE = "vmapped-perstep-host"
+VMAPPED = [c[0] for c in CELLS if not c[3] and c[0] != REFERENCE]
+SHARDED = [c[0] for c in CELLS if c[3]]
+
+
+@pytest.fixture(scope="module")
+def cfgs():
+    return ladder(6)
+
+
+@pytest.fixture(scope="module")
+def cells(cfgs):
+    """Every matrix cell, computed once: ``cells[protocol][name]``."""
+    mesh = population_mesh() if jax.device_count() > 1 else None
+    out = {"batch": {}, "streaming": {}}
+    for name, chunk, device, sharded in CELLS:
+        if sharded and mesh is None:
+            continue
+        m = mesh if sharded else None
+        out["batch"][name] = run_batch_cell(
+            cfgs, chunk=chunk, device=device, mesh=m)
+        out["streaming"][name] = run_streaming_cell(
+            cfgs, chunk=chunk, device=device, mesh=m)
+    return out
+
+
+def _cell(cells, protocol, name):
+    if name not in cells[protocol]:
+        pytest.skip("needs a multi-device (virtual CPU) mesh")
+    return cells[protocol][name]
+
+
+# -- vmapped family: bit-equality ------------------------------------------------
+
+
+@pytest.mark.parametrize("name", VMAPPED)
+@pytest.mark.parametrize("protocol", ["batch", "streaming"])
+def test_vmapped_cells_bit_equal(cells, protocol, name):
+    """Chunking and device rules are pure engine choices: same scores to the
+    bit, same truncation/reclaim decisions, same effective budgets."""
+    ref = cells[protocol][REFERENCE]
+    got = cells[protocol][name]
+    assert got["scores"] == ref["scores"]
+    assert got["n_truncated"] == ref["n_truncated"]
+    assert got["n_reclaimed"] == ref["n_reclaimed"]
+    if protocol == "streaming":
+        assert got["steps"] == ref["steps"]
+        assert got["diverged"] == ref["diverged"]
+
+
+# -- sharded family: 1e-6 scores, identical decisions ----------------------------
+
+
+@multi_device
+@pytest.mark.parametrize("name", SHARDED)
+@pytest.mark.parametrize("protocol", ["batch", "streaming"])
+def test_sharded_cells_match_vmapped(cells, protocol, name):
+    ref = cells[protocol][REFERENCE]
+    got = _cell(cells, protocol, name)
+    np.testing.assert_allclose(got["scores"], ref["scores"],
+                               rtol=0, atol=1e-6)
+    assert got["n_truncated"] == ref["n_truncated"]
+    assert got["n_reclaimed"] == ref["n_reclaimed"]
+    if protocol == "streaming":
+        assert got["steps"] == ref["steps"]
+
+
+# -- serial reference ------------------------------------------------------------
+
+
+def test_streaming_matches_serial_reference(cells, cfgs):
+    """The serial driver, cut at each trial's effective (possibly truncated)
+    budget, reproduces the streaming engine's scores trial-for-trial."""
+    ref = cells["streaming"][REFERENCE]
+    serial = run_serial_reference(cfgs, ref["steps"])
+    np.testing.assert_allclose(ref["scores"], serial, rtol=1e-5, atol=1e-6)
+
+
+def test_rule_cuts_actually_fired(cells):
+    """The workload is only a differential test if the rung rule bites: at
+    least one lane must be truncated in each protocol's reference cell."""
+    assert cells["batch"][REFERENCE]["n_truncated"] >= 1
+    assert cells["streaming"][REFERENCE]["n_truncated"] >= 1
+    steps = cells["streaming"][REFERENCE]["steps"]
+    assert any(0 < s < 8 for s in steps), \
+        "some lane must retire mid-ladder (truncated short of max budget)"
+
+
+# -- the headline dispatch claim -------------------------------------------------
+
+
+def test_device_rules_collapse_ladder_to_one_dispatch(cells):
+    """With the rule in the scan, chunk boundaries stop clamping to event
+    gaps: the whole 8-step ladder is ONE device call in both protocols
+    (streaming's initial mass fill rides the free virgin rebuild), while the
+    host-rule chunked path pays one dispatch per rung gap."""
+    assert cells["batch"]["vmapped-chunked-device"]["dispatches"] == 1
+    assert cells["streaming"]["vmapped-chunked-device"]["dispatches"] == 1
+    assert cells["batch"]["vmapped-chunked-host"]["dispatches"] > 1
+    assert cells["streaming"]["vmapped-chunked-host"]["dispatches"] > 1
+
+
+# -- in-scan rule updates vs their host twins (randomized, driver-free) ----------
+
+
+def test_cohort_rule_update_matches_host_on_random_cases():
+    from repro.train.population import cohort_rule_state, cohort_rule_update
+
+    rng = np.random.default_rng(7)
+    k = 8
+    for _ in range(25):
+        hook = rung_hook()
+        step = int(rng.choice(hook.boundaries + [3]))  # off-boundary = no-op
+        budgets = rng.choice([0.0, 2.0, 4.0, 8.0], k)
+        # eighths are f32-exact; repeats force tie-breaks, inf forces skips
+        losses = rng.choice([0.5, 0.625, 0.75, 0.75, 1.0, np.inf], k)
+        diverged = rng.random(k) < 0.25
+        want = hook(step, losses, budgets, diverged)
+        rules = cohort_rule_state(budgets, np.zeros(k), np.zeros(k),
+                                  hook.boundaries, hook.eta)
+        got = cohort_rule_update(
+            rules, jnp.asarray(losses, jnp.float32), jnp.asarray(diverged),
+            jnp.full((k,), step, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(got["budgets"], np.float64),
+                                      want)
+
+
+def test_staggered_rule_update_matches_host_on_random_cases():
+    """Two hooks, one random tape: the host ``observe`` and the in-scan
+    update must make identical cuts AND leave identical rung histories —
+    including simultaneous boundary hits, which the device resolves with the
+    same lane-order appends as the host loop."""
+    from repro.train.population import staggered_rule_state, \
+        staggered_rule_update
+
+    rng = np.random.default_rng(11)
+    k = 8
+    host, dev = rung_hook(), rung_hook()
+    spec = dev.device_rule()
+    for _ in range(25):
+        budgets = rng.choice([0.0, 2.0, 4.0, 8.0], k)
+        # live lanes sit anywhere inside their budget (the driver invariant)
+        local = np.array([rng.integers(0, int(b) + 1) for b in budgets])
+        losses = rng.choice([0.5, 0.625, 0.75, 0.75, 1.0, np.inf], k)
+        diverged = rng.random(k) < 0.25
+        want = host.observe(local, losses, budgets, diverged)
+        hist, counts = spec.lower_history(64)
+        rules = staggered_rule_state(budgets, np.zeros(k), np.zeros(k),
+                                     spec.boundaries, spec.eta, hist, counts)
+        got = staggered_rule_update(
+            rules, jnp.asarray(losses, jnp.float32), jnp.asarray(diverged),
+            jnp.asarray(local, jnp.int32))
+        spec.absorb_history(got["hist"], got["counts"])
+        np.testing.assert_array_equal(np.asarray(got["budgets"], np.float64),
+                                      want)
+    assert dev._rung_history == host._rung_history
+    assert host.n_truncated > 0, "the tape must exercise at least one cut"
+
+
+def test_window_quantile_matches_host_thresholds():
+    from repro.core.proposer.pbt import window_quantile
+
+    rng = np.random.default_rng(3)
+    for _ in range(25):
+        w = int(rng.integers(4, 17))
+        n = int(rng.integers(1, w + 1))
+        q = float(rng.choice([0.25, 0.4, 0.5]))
+        ring = np.zeros(w, np.float32)
+        ring[:n] = rng.choice(np.arange(-8, 8, 0.25), n).astype(np.float32)
+        scores = sorted(float(x) for x in ring[:n])
+        kq = max(1, int(q * n))
+        lo, hi = window_quantile(jnp.asarray(ring), jnp.asarray(n),
+                                 jnp.float32(q), xp=jnp)
+        assert float(lo) == scores[kq - 1]
+        assert float(hi) == sorted(scores, reverse=True)[kq - 1]
+
+
+def test_device_rules_smoke_cli(capsys):
+    """The CI smoke entry (`REPRO_DEVRULES_SMOKE=1`) runs the heavier CLI
+    with --device-rules; locally a lighter variant stays always-on.  Either
+    way the first cohort's whole ladder must cost ONE device dispatch."""
+    import json
+    import os
+
+    from repro.launch.hpo import main
+
+    heavy = os.environ.get("REPRO_DEVRULES_SMOKE") == "1"
+    argv = ["--proposer", "asha", "--vectorize", "4", "--inflight-stop",
+            "--lane-refill", "--chunk-steps", "64" if heavy else "16",
+            "--device-rules", "--n-samples", "6" if heavy else "4",
+            "--steps", "8" if heavy else "4", "--batch", "2", "--seq", "16"]
+    assert main(argv) == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["engine"].endswith("+devrules"), out["engine"]
+    assert out["ladder_device_dispatches"] == 1, out
+    assert out["dispatches_per_step"] < 1.0, out

@@ -1,0 +1,156 @@
+"""Event-cadence arithmetic for the streaming drivers.
+
+The streaming engine only re-enters the host at *event* steps: the absolute
+divergence/snapshot poll anchor, lane budget ends, rung boundaries (host
+rules), or — with --device-rules — just the poll anchor and the whole-flight
+drain.  These are pure integer helpers, so they get direct unit tests here
+instead of riding only inside full flights; the off-by-one this pins down is
+the chunk-boundary case where an event is due AT the current step (a freshly
+leased zero-budget job, a poll anchor the loop just landed on): the helpers
+must return ``s`` itself — never a step in the past — so the driver re-runs
+the event pass instead of dispatching a negative-length (or no-op) chunk.
+"""
+import numpy as np
+import pytest
+
+from repro.core.resource.vectorized import QueueFeedScheduler
+from repro.launch.hpo import (
+    PopulationTrial,
+    _device_dispatch_horizon,
+    _next_event_step,
+    _poll_anchor,
+    _pow2_ceil,
+    _pow2_floor,
+)
+
+
+# -- pow2 helpers -----------------------------------------------------------------
+
+
+def test_pow2_floor_and_ceil():
+    assert [_pow2_floor(n) for n in (1, 2, 3, 7, 8, 9, 64)] == \
+        [1, 2, 2, 4, 8, 8, 64]
+    assert [_pow2_ceil(n) for n in (1, 2, 3, 7, 8, 9, 64)] == \
+        [1, 2, 4, 8, 8, 16, 64]
+    # degenerate inputs clamp to 1 instead of crashing or returning 0
+    assert _pow2_floor(0) == _pow2_ceil(0) == 1
+    assert _pow2_floor(-3) == _pow2_ceil(-3) == 1
+
+
+# -- poll anchor: absolute cadence ------------------------------------------------
+
+
+def test_poll_anchor_is_absolute_and_strictly_ahead():
+    # anchors at multiples of the cadence, strictly after s
+    assert _poll_anchor(0, 8) == 8
+    assert _poll_anchor(7, 8) == 8
+    assert _poll_anchor(8, 8) == 16     # ON a multiple: the NEXT one
+    assert _poll_anchor(9, 8) == 16
+    # a non-multiple current step still anchors to the absolute grid — the
+    # window must not slide with s (a sliding window never comes due)
+    assert _poll_anchor(3, 8) == 8
+    assert _poll_anchor(11, 8) == 16
+    for s in range(40):
+        nxt = _poll_anchor(s, 8)
+        assert nxt > s and nxt % 8 == 0
+
+
+# -- host-rule event step ---------------------------------------------------------
+
+
+def test_next_event_step_picks_nearest_of_all_sources():
+    starts = np.array([0, 2, 0])
+    budgets = np.array([8.0, 4.0, 2.0])
+    live = [0, 1, 2]
+    # sources at s=0: poll anchor 16, budget ends {8, 6, 2}, rung boundary 2
+    # for lane 0 (local 0 < 2 <= 8) and lane 2; lane 1's first reachable
+    # boundary is 2 at global 4.  Nearest: 2.
+    assert _next_event_step(0, 16, starts, budgets, live, (2, 4)) == 2
+    # at s=2 lane 2 is done (local == budget): its end is AT s -> returns s
+    assert _next_event_step(2, 16, starts, budgets, live, (2, 4)) == 2
+    # lane 2 retired: next is lane 0's rung-4 boundary / lane 1's global 4
+    assert _next_event_step(2, 16, starts, budgets, [0, 1], (2, 4)) == 4
+    # no boundaries: budget ends only
+    assert _next_event_step(0, 16, starts, budgets, [0], ()) == 8
+    # no live lanes: the poll anchor
+    assert _next_event_step(5, 16, starts, budgets, [], (2, 4)) == 16
+
+
+def test_next_event_step_never_returns_the_past():
+    """The chunk-boundary off-by-one: a lane whose budget end or boundary is
+    already behind ``s`` (it froze mid-chunk; the loop advanced past it) must
+    not drag the next event backwards — the helper clamps to ``s``."""
+    starts = np.array([0, 0])
+    budgets = np.array([2.0, 8.0])
+    # s=3: lane 0 ended at 2 (in the past), lane 1's boundary 4 is ahead
+    assert _next_event_step(3, 16, starts, budgets, [0, 1], (2, 4)) == 3
+    # once lane 0 is retired the true next event shows through
+    assert _next_event_step(3, 16, starts, budgets, [1], (2, 4)) == 4
+    # a zero-budget lease: due NOW, at any s — including s=0 (no dispatch)
+    assert _next_event_step(0, 16, np.array([0]), np.array([0.0]), [0]) == 0
+    for s in range(12):
+        got = _next_event_step(s, 16, starts, budgets, [0, 1], (2, 4))
+        assert got >= s
+
+
+def test_next_event_gap_bounded_by_cadence():
+    """Between events the engine is blind to divergence: the gap from any s
+    to its next event never exceeds the poll cadence."""
+    starts = np.array([0, 3])
+    budgets = np.array([64.0, 32.0])
+    for cadence in (8, 16):
+        for s in range(0, 40):
+            got = _next_event_step(s, cadence, starts, budgets, [0, 1], (2, 4))
+            assert s <= got <= s + cadence
+
+
+# -- device-rule horizon ----------------------------------------------------------
+
+
+def test_device_dispatch_horizon_ignores_event_gaps():
+    starts = np.array([0, 0, 0])
+    budgets = np.array([2.0, 4.0, 8.0])
+    live = [0, 1, 2]
+    # rung boundaries and individual ends are in-scan events now: the horizon
+    # is the LAST live end (8), capped by the poll anchor
+    assert _device_dispatch_horizon(0, 16, starts, budgets, live) == 8
+    assert _device_dispatch_horizon(0, 4, starts, budgets, live) == 4
+    # mid-flight: still the max end, not the short lanes'
+    assert _device_dispatch_horizon(3, 16, starts, budgets, live) == 8
+    # past every end (all lanes frozen in-scan): clamps to s, never the past
+    assert _device_dispatch_horizon(9, 16, starts, budgets, live) == 9
+    # zero-budget lease: due now
+    assert _device_dispatch_horizon(0, 16, np.array([0]), np.array([0.0]),
+                                    [0]) == 0
+    # no live lanes: the poll anchor
+    assert _device_dispatch_horizon(5, 16, starts, budgets, []) == 16
+
+
+# -- integration: a zero-budget job completes without a dispatch ------------------
+
+
+@pytest.mark.parametrize("device_rules", [False, True])
+def test_zero_budget_lease_completes_without_training(device_rules):
+    """n_iterations=0 is the degenerate lease the clamp protects: its event
+    is due the moment it is leased, so it must retire on the spot (0 steps,
+    sentinel-free) instead of panicking the dispatch loop — alongside a real
+    lane that trains normally."""
+    from repro.core.proposer.early_stop import InFlightSuccessiveHalving
+
+    cfgs = [
+        {"learning_rate": 1e-3, "stream": 0, "n_iterations": 0},
+        {"learning_rate": 2e-3, "stream": 1, "n_iterations": 2},
+    ]
+    hook = InFlightSuccessiveHalving(eta=2.0, min_iter=2, max_iter=8)
+    trial = PopulationTrial("starcoder2-3b", steps=1, batch=2, seq=16, seed=0,
+                            population=2, refill_idle_grace_s=0.0,
+                            early_stop=hook, chunk_steps=8,
+                            device_rules=device_rules)
+    feed = QueueFeedScheduler(cfgs)
+    trial.run_population([], scheduler=feed)
+    assert len(feed.scores) == 2
+    assert feed.extras[0]["steps"] == 0
+    assert feed.extras[1]["steps"] == 2
+    assert feed.extras[1]["diverged"] is False
+    assert trial.n_train_steps == 2, \
+        "the zero-budget lease must not buy any training dispatch"
