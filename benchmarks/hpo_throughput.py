@@ -56,6 +56,19 @@ the CPU smoke config:
   dispatch (vmapped and sharded), scores and effective budgets match the
   host-rule path within ``CHUNKED_SCORE_TOL``, and the rule actually cut
   lanes (a ladder with nothing to truncate would gate nothing);
+* **elastic_regrid**   — **elastic two-level regrid** (``--elastic-regrid``):
+  at every rung boundary the survivors' full train state is re-laid-out from
+  K lanes x W devices-per-lane to K' x W' (``make_lane_regrid`` +
+  ``plan_regrid``), so later rungs train fewer trials wider and faster
+  instead of idling freed devices.  Measured fixed-width sharded flight vs
+  the elastic flight leasing an ``ElasticLanePool``, on a shrink-heavy
+  ladder (one trial per lane, most lanes retiring at the first rung) at a
+  heavier per-lane geometry (``ELASTIC_BATCH`` x ``ELASTIC_SEQ``) where the
+  per-lane FLOP reduction dominates dispatch overhead.  Gate: at least one
+  regrid fired, the pod stays fully leased after every cut (rows x width
+  tiles the device count), wall-clock beats the fixed-width flight by
+  ``ELASTIC_FLOOR``, scores match within ``CHUNKED_SCORE_TOL`` (resharding
+  changes layout, never math) and the rung rule truncated the same trials;
 * **pbt_stream**       — Population-Based Training on the streaming engine
   (``--pbt-streaming``): members live in lanes, exploit is a compiled donor
   clone (``make_lane_clone``) and weights never visit the host — measured
@@ -156,6 +169,22 @@ REFILL_MIN_ITER_UNITS = 4
 # host-rule path still re-enters at every event step.
 DEVRULES_LADDER = [1, 1, 2, 2, 2, 4, 4, 4]
 DEVRULES_CHUNK = 32
+
+# elastic-regrid row: a shrink-heavy ladder (one trial per lane, most lanes
+# retiring at the first rung) at a heavier per-lane batch geometry than the
+# other rows — the row measures the *compute* the regrid removes from later
+# rungs (fewer, wider lanes), which at the smoke batch sizes is drowned by
+# per-op dispatch overheads that do not scale with lane count.  Rung-0 lanes
+# get a deliberately dead lr so the promotions reliably survive the cut and
+# the flight actually regrids.  The fixed-width baseline runs the same ladder
+# sharded over the same mesh; the two flights do identical work up to the
+# first cut, so the whole-flight ratio is attributable to the later rungs.
+ELASTIC_UNITS = [1, 1, 1, 1, 2, 2, 8, 8]
+ELASTIC_LR = {1: 1e-5, 2: 1e-3, 8: 2e-3}
+ELASTIC_BATCH = 8
+ELASTIC_SEQ = 64
+# committed 8-virtual-device run shows ~1.5x; the floor absorbs CI timer noise
+ELASTIC_FLOOR = 1.1
 
 # streaming PBT vs the generation-barriered serial driver: equal total steps,
 # shared RNG.  The serial baseline runs K*ROUNDS rounds one member at a time
@@ -262,6 +291,18 @@ def _devrules_workload(seed: int, population: int):
 
 
 _LONG_LR = {1: 2e-4, 3: 5e-4, 9: 1e-3, 27: 2e-3}
+
+
+def _elastic_workload(seed: int, population: int):
+    """One trial per lane, budgets from ELASTIC_UNITS: rung-0 lanes carry a
+    dead lr, promotions a live one, so the first boundary reliably leaves a
+    strict subset of lanes alive and every later rung runs post-regrid."""
+    cfgs = _sample_configs(population, seed + 7)
+    for i, (c, u) in enumerate(zip(cfgs, ELASTIC_UNITS)):
+        c["n_iterations"] = int(u)
+        c["learning_rate"] = ELASTIC_LR[int(u)] * (1.0 + 0.05 * (i % 3))
+        c["warmup_frac"] = 0.05
+    return cfgs
 
 
 def _long_ladder_workload(seed: int):
@@ -624,6 +665,65 @@ def _probe_main(argv) -> None:
                                   _devrules_cell(True, {"mesh": mesh})),
     }
 
+    # -- elastic two-level regrid: survivors absorb freed devices --------------
+    # Fixed-width sharded baseline vs the elastic engine with a leased
+    # ElasticLanePool on the same shrink-heavy ladder: identical work up to
+    # the first cut, then the elastic flight trains fewer, wider lanes.
+    from repro.core.resource.sharded import ElasticLanePool
+
+    ecfgs = _elastic_workload(seed, population)
+
+    def _elastic_hook():
+        return InFlightSuccessiveHalving(
+            eta=2.0, min_iter=CHUNK_UNIT,
+            max_iter=max(ELASTIC_UNITS) * CHUNK_UNIT)
+
+    def _elastic_trial(elastic):
+        return PopulationTrial(
+            arch, CHUNK_UNIT, ELASTIC_BATCH, ELASTIC_SEQ, seed,
+            population=population, chunk_steps=CHUNK_STEPS,
+            early_stop=_elastic_hook(), refill_idle_grace_s=0.0,
+            elastic_regrid=elastic)
+
+    def _fixed_flight():
+        trial = _elastic_trial(False)
+        t0 = time.time()
+        scores = trial.run_population(list(ecfgs), mesh=mesh)
+        return time.time() - t0, scores, trial
+
+    def _elastic_flight():
+        trial = _elastic_trial(True)
+        pool = ElasticLanePool()
+        t0 = time.time()
+        scores = trial.run_population(list(ecfgs), elastic=pool)
+        return time.time() - t0, scores, trial, pool
+
+    _fixed_flight()    # warm the sharded step/scan compiles at this geometry
+    _elastic_flight()  # warm the per-K elastic programs + regrid gathers
+    fixed_s, fixed_scores, ftrial = _fixed_flight()
+    elastic_s, elastic_scores, etrial, pool = _elastic_flight()
+    n_dev = jax.device_count()
+    res["elastic_regrid"] = {
+        "trials": len(ecfgs), "population": population,
+        "ladder_units": ELASTIC_UNITS, "budget_unit": CHUNK_UNIT,
+        "batch": ELASTIC_BATCH, "seq": ELASTIC_SEQ,
+        "chunk_steps": CHUNK_STEPS, "n_devices": n_dev,
+        "fixed_seconds": fixed_s, "elastic_seconds": elastic_s,
+        "later_rung_speedup": fixed_s / elastic_s,
+        "regrids": etrial.n_regrids,
+        "lane_width_history": etrial.lane_width_history,
+        "pool_width_history": pool.width_history,
+        # rows = n/width device rows, each carrying lanes/rows trials: the
+        # pod is fully re-leased after every cut, no partial rows
+        "full_occupancy": all(
+            n_dev % w == 0 and l % (n_dev // w) == 0
+            for l, w in etrial.lane_width_history),
+        "equivalence_max_abs_diff": float(max(
+            abs(a - b) for a, b in zip(fixed_scores, elastic_scores))),
+        "truncated_equal": (ftrial.early_stop.n_truncated
+                            == etrial.early_stop.n_truncated),
+    }
+
     # -- async vs gated PBT: search quality on a longer horizon ----------------
     def _pbt_quality(sync: bool) -> dict:
         trial = PopulationTrial(arch, PBT_ROUND_STEPS, PBT_BATCH, PBT_SEQ,
@@ -955,6 +1055,17 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
                 for m in ("vmapped", "sharded"))
     )
 
+    # -- elastic two-level regrid: survivors absorb freed devices --------------
+    elastic = dict(probe["elastic_regrid"])
+    results["elastic_regrid"] = elastic
+    elastic_ok = (
+        elastic["regrids"] >= 1
+        and elastic["full_occupancy"]
+        and elastic["later_rung_speedup"] >= ELASTIC_FLOOR
+        and elastic["equivalence_max_abs_diff"] <= CHUNKED_SCORE_TOL
+        and elastic["truncated_equal"]
+    )
+
     # refill equivalence: every trial must score exactly what the serial
     # driver scores at the trial's *effective* step count — the original
     # budget's LR schedule, cut at the truncation step (early-stop semantics);
@@ -996,6 +1107,7 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
         and chunked_equiv <= CHUNKED_SCORE_TOL
         and chunked_dispatch_ratio < 1.0
         and devrules_ok
+        and elastic_ok
         and pbt["speedup"] >= PBT_STREAM_FLOOR
         and pbt["equivalence_max_abs_diff"] <= PBT_SCORE_TOL
         and pbt["stream_host_ckpt_roundtrips"] == 0
@@ -1021,6 +1133,9 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
         "chunked_equivalence_max_abs_diff": chunked_equiv,
         "device_rules_ladder_dispatches": devrules_dispatches,
         "device_rules_equivalence_max_abs_diff": devrules_equiv,
+        "elastic_regrid_later_rung_speedup": elastic["later_rung_speedup"],
+        "elastic_regrid_equivalence_max_abs_diff":
+            elastic["equivalence_max_abs_diff"],
         "pbt_equivalence_max_abs_diff": pbt["equivalence_max_abs_diff"],
         "recovery_snapshot_overhead_ratio": snapshot_overhead,
         "recovery_equivalence_max_abs_diff": recovery_equiv,
@@ -1043,7 +1158,13 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
             f"sharded engines (host-rule path: "
             f"{devrules['vmapped']['host']['dispatches']} dispatches), scores "
             f"and effective budgets equal to the host-rule path "
-            f"(max diff {devrules_equiv:.2g}); "
+            f"(max diff {devrules_equiv:.2g}); elastic two-level regrid "
+            f"re-leases the pod at every rung cut "
+            f"({elastic['regrids']} regrids, lane/width history "
+            f"{elastic['lane_width_history']}) and runs the same shrink-heavy "
+            f"ladder {elastic['later_rung_speedup']:.2f}x faster than the "
+            f"fixed-width sharded flight (floor {ELASTIC_FLOOR}x, scores "
+            f"within {elastic['equivalence_max_abs_diff']:.2g}); "
             f"streaming PBT {pbt['speedup']:.1f}x the generation-barriered "
             f"serial PBT driver at equal total steps (scores equal, "
             f"{pbt['serial_host_ckpt_roundtrips']} -> 0 host checkpoint "

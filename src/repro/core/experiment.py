@@ -84,6 +84,10 @@ class Experiment:
                 rm_kwargs["workdir"] = self.exp_config["workdir"]
             if self.exp_config.get("lane_refill"):
                 rm_kwargs["lane_refill"] = True
+            if self.exp_config.get("elastic_regrid"):
+                # sharded manager only: lane geometry leased through an
+                # ElasticLanePool so rung survivors absorb freed devices
+                rm_kwargs["elastic_regrid"] = True
             for k in ("max_flight_restarts", "restart_backoff_s",
                       "finish_join_timeout_s"):
                 if self.exp_config.get(k) is not None:

@@ -31,9 +31,82 @@ from __future__ import annotations
 
 from typing import Any, Callable, List, Optional, Sequence
 
-from . import register
+from . import ResourceManager, register
+from .elastic import ElasticResourceManager
 from .mesh_pool import tile_pod
 from .vectorized import VectorizedResourceManager, accepts_kwarg
+
+
+class _SlicePool(ResourceManager):
+    """Bookkeeping-only pool whose resources are device-slice leases, not job
+    slots.  ``ElasticLanePool`` scales it in/out as lane geometry changes; no
+    job ever binds to a slice lease, so ``scale_in`` can never mark a running
+    flight LOST (that is the job-slot pool's failure protocol, not ours)."""
+
+    def run(self, job, target) -> None:  # pragma: no cover - never dispatched
+        raise RuntimeError("_SlicePool leases device slices; it does not run jobs")
+
+
+class ElasticLanePool:
+    """Width-annotated device leases for the elastic-regrid engine.
+
+    The pool tiles its device row into ``width``-wide slices with
+    ``mesh_pool.tile_pod`` and leases them through an ``ElasticResourceManager``
+    so every geometry change is an observable scale event: ``regrid(survivors)``
+    scale-ins the old ``slice[...]xW{w}`` leases and scale-outs the new, wider
+    set, then hands back the matching two-level ``(pop, model)`` mesh.  The
+    trial calls ``plan_regrid`` through here at each rung boundary; the
+    full-occupancy invariant (every device row carries a live lane) is the
+    planner's, the lease protocol is this class's.
+    """
+
+    def __init__(self, devices: Optional[Sequence[Any]] = None,
+                 width: int = 1, axis: str = "pop"):
+        import jax
+
+        self.devices = list(devices) if devices is not None else jax.devices()
+        self.axis = axis
+        self.manager = ElasticResourceManager(base=_SlicePool())
+        self.width = 0
+        self.lanes = 0
+        self.width_history: List[int] = []
+        self.n_regrids = 0
+        self._lease_ids: List[str] = []
+        self._retile(int(width))
+
+    def _retile(self, width: int) -> None:
+        n = len(self.devices)
+        if width <= 0 or n % width:
+            raise ValueError(f"width {width} does not tile {n} devices")
+        old = self._lease_ids
+        slices = tile_pod((1, n), (1, width), devices=self.devices)
+        self._lease_ids = [f"{s.slice_id}xW{width}" for s in slices]
+        self.manager.scale_out(self._lease_ids)
+        self.manager.scale_in(old)
+        self.width = width
+        self.width_history.append(width)
+
+    def mesh(self):
+        from ...distributed.sharding import population_mesh
+
+        return population_mesh(self.devices, axis=self.axis,
+                               width=self.width if self.width > 1 else None)
+
+    def plan(self, n_survivors: int):
+        from ...train.population import plan_regrid
+
+        return plan_regrid(len(self.devices), n_survivors)
+
+    def regrid(self, n_survivors: int):
+        """Re-lease the pod for ``n_survivors`` live trials: returns the
+        ``(rows, width, lanes)`` plan and the new mesh.  A no-op plan (same
+        width) still refreshes nothing and emits no scale events."""
+        rows, width, lanes = self.plan(n_survivors)
+        if width != self.width:
+            self._retile(width)
+            self.n_regrids += 1
+        self.lanes = lanes
+        return (rows, width, lanes), self.mesh()
 
 
 @register("sharded")
@@ -43,6 +116,7 @@ class ShardedPopulationResourceManager(VectorizedResourceManager):
         n_parallel: int = 8,
         devices: Optional[Sequence[Any]] = None,
         axis: str = "pop",
+        elastic_regrid: bool = False,
         **kwargs,
     ):
         from ...distributed.sharding import population_mesh
@@ -70,6 +144,12 @@ class ShardedPopulationResourceManager(VectorizedResourceManager):
         # sick device should not take the whole experiment down with it
         self._degraded = False
         self.n_degraded_flights = 0
+        # --elastic-regrid: lane geometry becomes a leased, scalable resource;
+        # the trial regrids through the pool at rung boundaries so width
+        # changes ride the ElasticResourceManager's scale-out/in protocol
+        self.elastic = (
+            ElasticLanePool(devices=devs, axis=axis) if elastic_regrid else None
+        )
 
     def _on_flight_death(self, attempt: int) -> None:
         if not self._degraded and attempt >= self.supervisor.max_restarts:
@@ -87,6 +167,8 @@ class ShardedPopulationResourceManager(VectorizedResourceManager):
         kwargs = {}
         if accepts_kwarg(runner, "mesh") and not self._degraded:
             kwargs["mesh"] = self.mesh
+        if self.elastic is not None and accepts_kwarg(runner, "elastic"):
+            kwargs["elastic"] = self.elastic
         if self._degraded:
             self.n_degraded_flights += 1
         if scheduler is not None:  # streaming (lane-refill) flight

@@ -125,22 +125,88 @@ def build_sharding(tree_shapes, tree_specs, rules: Rules, mesh: Mesh):
 # -- population (HPO trial) axis ------------------------------------------------------
 
 
-def population_mesh(devices: Optional[Sequence[Any]] = None, axis: str = "pop") -> Mesh:
-    """1-D mesh over ``devices`` (default: all) whose single axis is the HPO
+def population_mesh(
+    devices: Optional[Sequence[Any]] = None,
+    axis: str = "pop",
+    width: Optional[int] = None,
+    model_axis: str = "model",
+) -> Mesh:
+    """Mesh over ``devices`` (default: all) whose leading axis is the HPO
     *population* axis — K trials shard over it as K/N per device (see
-    ``repro.train.population.make_sharded_population_step``).  Distinct from
-    the (data, model) axes inside one trial: a population mesh parallelizes
-    *across* trials, a mesh-pool slice parallelizes *within* one."""
+    ``repro.train.population.make_sharded_population_step``).
+
+    With ``width`` the mesh becomes **two-level**: ``(pop, model)`` with
+    ``width`` devices per lane row, so each trial is itself a ``width``-way
+    model-parallel program while trials still parallelize across the ``pop``
+    rows (the elastic-regrid engine widens ``width`` as rung cuts shrink the
+    survivor set).  Distinct from the (data, model) axes of a mesh-pool
+    slice only in that the leading axis crosses trials, not batches."""
     devs = list(devices) if devices is not None else jax.devices()
-    return Mesh(np.array(devs, dtype=object), axis_names=(axis,))
+    if width is None:
+        return Mesh(np.array(devs, dtype=object), axis_names=(axis,))
+    w = int(width)
+    if w <= 0 or len(devs) % w:
+        raise ValueError(
+            f"width {width} does not tile {len(devs)} devices into lane rows")
+    grid = np.array(devs, dtype=object).reshape(len(devs) // w, w)
+    return Mesh(grid, axis_names=(axis, model_axis))
+
+
+def two_level_mesh(
+    devices: Optional[Sequence[Any]] = None,
+    width: int = 1,
+    axis: str = "pop",
+    model_axis: str = "model",
+) -> Mesh:
+    """``(pop = N/width, model = width)`` mesh — see ``population_mesh``."""
+    return population_mesh(devices, axis=axis, width=width,
+                           model_axis=model_axis)
 
 
 def population_specs(tree: Any, mesh: Mesh, axis: str = "pop") -> Any:
     """NamedSharding tree placing every leaf's leading (population) dim on
     ``axis`` — used to put a population state / stacked HParams on the mesh
-    before the first sharded step so jit never has to reshard inputs."""
-    spec = NamedSharding(mesh, PartitionSpec(axis))
-    return jax.tree.map(lambda _: spec, tree)
+    before the first sharded step so jit never has to reshard inputs.
+
+    Rank-aware: rank-0 leaves, and leaves whose leading dim does not divide
+    over the population axis (scalar rule state, history rings, window
+    counters), replicate instead of getting a leading-dim spec
+    unconditionally — a spec naming a mesh axis a leaf cannot carry is a
+    lowering error, not a fallback."""
+    n = int(mesh.shape[axis])
+    pop = NamedSharding(mesh, PartitionSpec(axis))
+    rep = NamedSharding(mesh, PartitionSpec())
+
+    def one(leaf: Any):
+        shape = getattr(leaf, "shape", ())
+        if len(shape) < 1 or shape[0] % n:
+            return rep
+        return pop
+
+    return jax.tree.map(one, tree)
+
+
+def two_level_state_specs(
+    tree: Any, specs: Any, mesh: Mesh, axis: str = "pop"
+) -> Any:
+    """NamedSharding tree for a population state on a two-level mesh.
+
+    Every leaf keeps its leading K (population) dim on ``axis``; the trailing
+    *intra-trial* dims are partitioned per-leaf by composing the leaf's
+    logical-axes spec through the ordinary ``make_rules``/``build_pspec``
+    machinery restricted to the mesh's non-population axes — so a lane's
+    parameters and optimizer moments shard over its own device row exactly
+    like a single-trial program would, instead of the blanket leading-dim
+    ``population_specs``.  ``specs`` mirrors ``tree`` with logical-name
+    tuples for the *trailing* dims (``()`` for per-lane scalars such as the
+    step counter or the divergence latch)."""
+    rules = make_rules(tuple(a for a in mesh.axis_names if a != axis))
+
+    def one(leaf: Any, logical):
+        inner = build_pspec(leaf.shape[1:], logical, rules, mesh)
+        return NamedSharding(mesh, PartitionSpec(axis, *inner))
+
+    return map_specs(tree, specs, one)
 
 
 # -- activation constraints inside model code -----------------------------------------

@@ -95,59 +95,14 @@ import time
 
 import numpy as np
 
-
-def _pow2_floor(n: int) -> int:
-    """Largest power of two <= max(n, 1) — chunk sizes come from here, so an
-    experiment compiles at most log2(chunk_steps)+1 fused-scan programs."""
-    return 1 << (max(int(n), 1).bit_length() - 1)
-
-
-def _pow2_ceil(n: int) -> int:
-    """Smallest power of two >= max(n, 1) — device-rule history capacities
-    come from here, so their array shapes (and thus compiled programs) stay
-    bounded as rung histories grow."""
-    return 1 << (max(int(n), 1) - 1).bit_length()
-
-
-def _poll_anchor(s: int, cadence: int) -> int:
-    """Next divergence/snapshot poll step strictly after ``s``: polls anchor
-    to an ABSOLUTE cadence (the next multiple), not a window sliding with
-    ``s`` — a sliding window recomputed every pass never comes due, which
-    both starved the capped divergence poll at chunk_steps=1 and left
-    snapshot harvests with no mid-flight event to run at."""
-    return (s // cadence + 1) * cadence
-
-
-def _next_event_step(s: int, cadence: int, starts, budgets, live,
-                     boundaries=()) -> int:
-    """The streaming engine's next host event at-or-after ``s``: the poll
-    anchor, each live lane's budget end, and the next rung boundary each lane
-    can still reach (``local < b <= budget`` — completers feed the rung
-    history too).  An event due AT ``s`` (e.g. a freshly leased zero-budget
-    job) returns ``s`` itself so the driver re-runs the event pass instead of
-    burning a dispatch on steps nobody needs."""
-    ev = _poll_anchor(s, cadence)
-    for lane in live:
-        local = s - starts[lane]
-        ev = min(ev, int(starts[lane] + budgets[lane]))
-        for b in boundaries:
-            if local < b <= budgets[lane]:
-                ev = min(ev, int(starts[lane] + b))
-                break
-    return max(ev, int(s))
-
-
-def _device_dispatch_horizon(s: int, cadence: int, starts, budgets,
-                             live) -> int:
-    """--device-rules chunk horizon: rung boundaries and individual budget
-    ends are handled INSIDE the scan, so the host only stops at the
-    divergence/snapshot poll anchor or once every live lane's budget is over
-    (the scan would be all no-ops past that)."""
-    ev = _poll_anchor(s, cadence)
-    ends = [int(starts[lane] + budgets[lane]) for lane in live]
-    if ends:
-        ev = min(ev, max(ends))
-    return max(ev, int(s))
+from .chunkplan import (
+    ChunkPlanner,
+    device_dispatch_horizon as _device_dispatch_horizon,
+    next_event_step as _next_event_step,
+    poll_anchor as _poll_anchor,
+    pow2_ceil as _pow2_ceil,
+    pow2_floor as _pow2_floor,
+)
 
 
 def make_trial(arch: str, steps: int, batch: int, seq: int, seed: int):
@@ -234,7 +189,8 @@ class PopulationTrial:
                  early_stop=None, per_trial_init: bool = False,
                  refill_idle_grace_s: float = 0.25, lifecycle=None,
                  chunk_steps: int = 1, snapshot_every: int = 0,
-                 snapshots=None, device_rules: bool = False):
+                 snapshots=None, device_rules: bool = False,
+                 elastic_regrid: bool = False):
         self.arch = arch
         self.steps = int(steps)
         self.batch = int(batch)
@@ -254,6 +210,15 @@ class PopulationTrial:
         # no longer clamp to event-step gaps and the host only harvests
         # retirements from the scan's emitted event log
         self.device_rules = bool(device_rules)
+        # --elastic-regrid: at rung boundaries (batch) / once the feed drains
+        # (streaming), gather the surviving lanes into a smaller population
+        # and re-lay it out over the freed devices (two-level (pop, model)
+        # mesh when a lane pool is attached; plain lane-count shrink on the
+        # single-device vmapped engine).  Resharding changes layout, never
+        # math: scores reproduce the fixed-width run.
+        self.elastic_regrid = bool(elastic_regrid)
+        self.n_regrids = 0          # lane-geometry changes executed
+        self.lane_width_history: list = []  # [lanes, devices-per-lane] per regrid
         self.n_dispatches = 0       # device calls issued (steps + lane ops)
         self.n_train_steps = 0      # population steps those calls advanced
         # lane-lifecycle hook (streaming PBT): maps retire->refill directives
@@ -380,13 +345,16 @@ class PopulationTrial:
                 return self.DIVERGED_SCORE
         return -loss
 
-    def run_population(self, configs, mesh=None, scheduler=None) -> list:
+    def run_population(self, configs, mesh=None, scheduler=None,
+                       elastic=None) -> list:
         """Batch protocol: K trials in one vmapped (optionally sharded) device
         program.  With ``mesh`` the population axis splits over its devices;
         K is padded so it divides evenly (padding lanes get a 0-step budget).
         With ``scheduler`` the call switches to the streaming lane-refill
         protocol (``configs`` must be empty — jobs arrive via ``lease()`` and
-        results leave via ``complete()``).
+        results leave via ``complete()``).  ``elastic`` is the sharded
+        manager's ``ElasticLanePool`` (``--elastic-regrid``): rung survivors
+        regrid onto wider lanes through its scale-out/in lease protocol.
         """
         import dataclasses
 
@@ -411,7 +379,7 @@ class PopulationTrial:
                 raise ValueError(
                     "streaming mode: seed proposals through the scheduler, not configs"
                 )
-            return self._run_streaming(mesh, scheduler)
+            return self._run_streaming(mesh, scheduler, elastic=elastic)
 
         tc, data = self._setup()
         budgets = np.array([float(self._n_steps(c)) for c in configs])
@@ -427,17 +395,27 @@ class PopulationTrial:
         streams += [-(i + 1) for i in range(len(streams), k)]
         budgets = np.concatenate([budgets, np.zeros(k - len(budgets))])
         php = stack_hparams(hps)
+        elastic_on = elastic is not None or self.elastic_regrid
+        if elastic_on and self.device_rules:
+            raise ValueError(
+                "--elastic-regrid and --device-rules are mutually exclusive: "
+                "in-scan rule state is K-shaped, a regrid changes K mid-flight")
+        if self.per_trial_init:
+            keys = jnp.stack([self._init_key(s) for s in streams])
+            pstate = init_population_state_from_keys(keys, tc)
+        else:
+            pstate = init_population_state(jax.random.PRNGKey(self.seed), tc, k)
+        if elastic_on:
+            scores = self._run_batch_elastic(
+                tc, data, k, pstate, php, budgets, streams, hps,
+                self.early_stop, elastic)
+            return scores[: len(configs)]
         if mesh is not None:
             pstep = get_compiled_sharded_population_step(
                 tc, k, mesh=mesh, per_trial_batch=self.per_trial_streams)
         else:
             pstep = get_compiled_population_step(
                 tc, k, per_trial_batch=self.per_trial_streams)
-        if self.per_trial_init:
-            keys = jnp.stack([self._init_key(s) for s in streams])
-            pstate = init_population_state_from_keys(keys, tc)
-        else:
-            pstate = init_population_state(jax.random.PRNGKey(self.seed), tc, k)
         if mesh is not None:
             pstate = shard_population_state(pstate, mesh)
         hook = self.early_stop
@@ -460,18 +438,13 @@ class PopulationTrial:
                     tc, k, data, t, mesh=mesh,
                     per_trial_batch=self.per_trial_streams)
 
+        planner = ChunkPlanner(
+            chunk_steps=chunk,
+            boundaries=hook.boundaries if hook is not None else ())
         s = 0
         while s < int(budgets.max()):
-            t = 1
-            if chunk > 1:
-                max_b = int(budgets.max())
-                nxt = max_b
-                if hook is not None:
-                    for bnd in hook.boundaries:
-                        if s < bnd <= max_b:
-                            nxt = min(nxt, bnd)
-                            break
-                t = _pow2_floor(min(nxt - s, chunk))
+            max_b = int(budgets.max())
+            t = planner.chunk_to(s, planner.next_cohort_event(s, max_b))
             if t > 1:
                 steps0 = (jnp.full((k,), s, jnp.int32) if self.per_trial_streams
                           else jnp.asarray(s, jnp.int32))
@@ -527,6 +500,8 @@ class PopulationTrial:
 
         spec = hook.device_rule()
         chunk = self.chunk_steps
+        # boundaries live in-scan: the planner only caps chunks at flight end
+        planner = ChunkPlanner(chunk_steps=chunk)
         init_budgets = budgets.copy()
         if self.per_trial_streams:
             s_lo, s_hi = (jnp.asarray(w) for w in split_streams(streams))
@@ -534,7 +509,7 @@ class PopulationTrial:
             s_lo, s_hi = (jnp.uint32(w) for w in split_stream(0))
         s = 0
         while s < int(budgets.max()):
-            t = _pow2_floor(min(int(budgets.max()) - s, chunk))
+            t = planner.chunk_to(s, int(budgets.max()))
             rules = cohort_rule_state(
                 budgets, np.zeros(k), np.full(k, s),
                 spec.boundaries, spec.eta)
@@ -553,7 +528,138 @@ class PopulationTrial:
         scores = np.asarray(population_scores(pstate, self.DIVERGED_SCORE))
         return [float(x) for x in scores]
 
-    def _run_streaming(self, mesh, scheduler) -> list:
+    def _run_batch_elastic(self, tc, data, k, pstate, php, budgets, streams,
+                           hps, hook, pool) -> list:
+        """Batch-protocol flight with elastic lane regrids
+        (``--elastic-regrid``).
+
+        Runs the vmapped engine (never ``shard_map`` — device placement is
+        explicit) and, at each rung boundary after the cohort rule fires,
+        *regrids*: the surviving lanes' full train state is gathered into a
+        smaller population via the ``regrid`` lane-lifecycle op, retired
+        lanes' scores are harvested first, and — when a ``ElasticLanePool``
+        is attached — the compact state is ``device_put`` onto a new
+        two-level ``(pop, model)`` mesh whose lane rows are *wider*, so later
+        rungs train fewer trials faster instead of stepping frozen lanes.
+        Without a pool (single-device vectorized manager) the regrid still
+        shrinks K to the next power of two, cutting the frozen lanes'
+        dead compute.
+
+        The invariant: resharding changes layout, never math.  Per-lane
+        arithmetic is lane-independent under vmap, so survivor scores are
+        bit-equal to the fixed-width run on the same engine family (and
+        within 1e-6 across device placements, where cross-row reductions
+        reassociate).
+        """
+        import dataclasses
+
+        import jax
+        import jax.numpy as jnp
+
+        from ..data.pipeline import split_stream, split_streams
+        from ..optim.hparams import stack_hparams
+        from ..train.population import (
+            get_compiled_population_scan_step,
+            get_compiled_population_step,
+            place_two_level,
+            population_scores,
+            regrid_population_state,
+        )
+
+        chunk = self.chunk_steps
+        planner = ChunkPlanner(
+            chunk_steps=chunk,
+            boundaries=hook.boundaries if hook is not None else ())
+        if pool is not None:
+            pstate = place_two_level(pstate, tc, pool.mesh())
+        k0 = k
+        orig = list(range(k))      # current lane -> original trial index
+        final = np.full(k0, self.DIVERGED_SCORE, np.float64)
+        budgets = np.asarray(budgets, np.float64)
+        streams = list(streams)
+        hps = list(hps)
+
+        def splits():
+            if self.per_trial_streams:
+                return tuple(jnp.asarray(w) for w in split_streams(streams))
+            return tuple(jnp.uint32(w) for w in split_stream(0))
+
+        s = 0
+        while len(budgets) and s < int(budgets.max()):
+            t = planner.chunk_to(s, planner.next_cohort_event(
+                s, int(budgets.max())))
+            if t > 1:
+                s_lo, s_hi = splits()
+                steps0 = (jnp.full((k,), s, jnp.int32)
+                          if self.per_trial_streams
+                          else jnp.asarray(s, jnp.int32))
+                scan = get_compiled_population_scan_step(
+                    tc, k, data, t, per_trial_batch=self.per_trial_streams)
+                pstate, _ = scan(pstate, php, steps0, s_lo, s_hi)
+            else:
+                batch = (data.make_population_batch(s, streams)
+                         if self.per_trial_streams else data.make_batch(s))
+                pstep = get_compiled_population_step(
+                    tc, k, per_trial_batch=self.per_trial_streams)
+                pstate, _ = pstep(pstate, batch, php)
+            self.n_dispatches += 1
+            self.n_train_steps += t
+            s += t
+            if hook is None or s not in hook.boundaries:
+                continue
+            new_budgets = np.asarray(hook(
+                s, np.asarray(pstate["last_loss"]), budgets,
+                np.asarray(pstate["diverged"])), np.float64)
+            if (new_budgets != budgets).any():
+                budgets = new_budgets
+                php = dataclasses.replace(
+                    php, total_steps=jnp.asarray(budgets, jnp.float32))
+            # -- the regrid decision: can the survivors absorb freed lanes? --
+            survivors = [i for i in range(k) if budgets[i] > s]
+            if not 0 < len(survivors) < k:
+                continue
+            if pool is not None:
+                _, width, k2 = pool.plan(len(survivors))
+                shrink = k2 != k or width != pool.width
+            else:
+                width, k2 = 1, _pow2_ceil(len(survivors))
+                shrink = k2 < k
+            if not shrink:
+                continue
+            # harvest retired lanes' final scores BEFORE their state leaves
+            # the population (their budgets froze them; the scores are final)
+            cur = np.asarray(population_scores(pstate, self.DIVERGED_SCORE))
+            live_set = set(survivors)
+            for i in range(k):
+                if i not in live_set:
+                    final[orig[i]] = cur[i]
+            mesh2 = None
+            if pool is not None:
+                _, mesh2 = pool.regrid(len(survivors))
+            pstate = regrid_population_state(
+                pstate, survivors, tc, mesh=mesh2, pad_to=k2)
+            self.n_dispatches += 1
+            pad = k2 - len(survivors)
+            orig = [orig[i] for i in survivors] + [-1] * pad
+            budgets = np.array([budgets[i] for i in survivors] + [0.0] * pad)
+            streams = [streams[i] for i in survivors] \
+                + [-(k0 + j + 1) for j in range(pad)]
+            hps = [hps[i] for i in survivors] \
+                + [self._hparams({}, 0) for _ in range(pad)]
+            php = dataclasses.replace(
+                stack_hparams(hps),
+                total_steps=jnp.asarray(budgets, jnp.float32))
+            k = k2
+            self.n_regrids += 1
+            self.lane_width_history.append([int(k2), int(width)])
+        self.last_flight_steps = s
+        cur = np.asarray(population_scores(pstate, self.DIVERGED_SCORE))
+        for j in range(k):
+            if orig[j] >= 0:
+                final[orig[j]] = cur[j]
+        return [float(x) for x in final]
+
+    def _run_streaming(self, mesh, scheduler, elastic=None) -> list:
         """Continuous lane-refill flight (Algorithm 1's busy-resource invariant
         *inside* one compiled program).
 
@@ -620,23 +726,42 @@ class PopulationTrial:
                 "must replay its own stream from its own step 0 (drop "
                 "--shared-stream)"
             )
+        elastic_on = elastic is not None or self.elastic_regrid
+        if elastic_on and self.device_rules:
+            raise ValueError(
+                "--elastic-regrid and --device-rules are mutually exclusive: "
+                "in-scan rule state is K-shaped, a regrid changes K mid-flight")
+        if elastic_on and self.lifecycle is not None:
+            raise ValueError(
+                "--elastic-regrid is incompatible with streaming PBT: "
+                "keep/clone directives pin members to lanes a regrid reindexes")
+        if elastic_on:
+            # elastic flights run the vmapped engine with explicit placement
+            # (the pool's two-level mesh); shard_map programs have a fixed K
+            mesh = None
         tc, data = self._setup()
         k = pad_population(max(self.population, 1), mesh)
-        if mesh is not None:
-            pstep = get_compiled_sharded_population_step(
-                tc, k, mesh=mesh, per_trial_batch=True)
-        else:
-            pstep = get_compiled_population_step(tc, k, per_trial_batch=True)
-        # single lane -> splice (one init, traced lane index); several lanes in
-        # one round -> the masked from-keys reset (one dispatch for the batch)
-        splice_fn = get_compiled_lane_op(tc, k, "splice", mesh=mesh)
-        init_fn = get_compiled_lane_op(tc, k, "init", mesh=mesh)
-        # crash-safety pair: harvest a live lane to host / splice a harvested
-        # snapshot back into a fresh flight's lane (read-only + write twins)
-        snap_fn = restore_fn = None
-        if self.snapshots is not None:
-            snap_fn = get_compiled_lane_op(tc, k, "snapshot", mesh=mesh)
-            restore_fn = get_compiled_lane_op(tc, k, "restore", mesh=mesh)
+
+        def _ops(kk):
+            """(Re)build the per-K compiled entry points — called once up
+            front and again after every elastic regrid changes K."""
+            ps = (get_compiled_sharded_population_step(
+                      tc, kk, mesh=mesh, per_trial_batch=True)
+                  if mesh is not None else
+                  get_compiled_population_step(tc, kk, per_trial_batch=True))
+            # single lane -> splice (one init, traced lane index); several
+            # lanes in one round -> the masked from-keys reset (one dispatch)
+            sp = get_compiled_lane_op(tc, kk, "splice", mesh=mesh)
+            ini = get_compiled_lane_op(tc, kk, "init", mesh=mesh)
+            # crash-safety pair: harvest a live lane to host / splice a
+            # harvested snapshot back into a fresh flight's lane
+            sn = rs = None
+            if self.snapshots is not None:
+                sn = get_compiled_lane_op(tc, kk, "snapshot", mesh=mesh)
+                rs = get_compiled_lane_op(tc, kk, "restore", mesh=mesh)
+            return ps, sp, ini, sn, rs
+
+        pstep, splice_fn, init_fn, snap_fn, restore_fn = _ops(k)
         from ..core import faultinject
         fault_plan = faultinject.get_plan()
         chunk = self.chunk_steps
@@ -669,6 +794,10 @@ class PopulationTrial:
         pstate = init_population_state_from_keys(jnp.stack(lane_keys), tc)
         if mesh is not None:
             pstate = shard_population_state(pstate, mesh)
+        elif elastic is not None:
+            from ..train.population import place_two_level
+
+            pstate = place_two_level(pstate, tc, elastic.mesh())
         php = stack_hparams(hps)
         hook = self.early_stop
         # --device-rules: lower the rung rule (staggered/async-SHA) or the PBT
@@ -713,7 +842,9 @@ class PopulationTrial:
         # chunk so big chunks are not split by it — the divergence-reclaim
         # latency is the price of fewer dispatches (shrink --chunk-steps if
         # your search space diverges a lot).
-        DIVERGE_CHECK_EVERY = max(8, chunk)
+        planner = ChunkPlanner(
+            chunk_steps=chunk,
+            boundaries=hook.boundaries if hook is not None else ())
         next_event = 0
         s_lo, s_hi = (jnp.asarray(w) for w in split_streams(streams))
 
@@ -722,11 +853,8 @@ class PopulationTrial:
             if device_active:
                 # rung cuts and individual budget ends are in-scan events now;
                 # the host only stops for the poll or the whole-flight drain
-                return _device_dispatch_horizon(
-                    s, DIVERGE_CHECK_EVERY, starts, budgets, live_now)
-            return _next_event_step(
-                s, DIVERGE_CHECK_EVERY, starts, budgets, live_now,
-                hook.boundaries if hook is not None else ())
+                return planner.device_horizon(s, starts, budgets, live_now)
+            return planner.next_stream_event(s, starts, budgets, live_now)
 
         while True:
             live = [i for i in range(k) if handles[i] is not None]
@@ -1038,6 +1166,66 @@ class PopulationTrial:
                     self.n_dispatches += 1
                 live = [i for i in range(k) if handles[i] is not None]
                 force_parked = False
+            # -- elastic regrid: once the feed has drained (scheduler closed,
+            # nothing parked) and retirements have emptied at least half the
+            # lanes, gather the survivors into a smaller population laid out
+            # over the freed devices — later rungs train fewer trials wider
+            # instead of stepping frozen lanes.  Ascending lane order is
+            # preserved, so the staggered rule's history appends (and thus
+            # every later cut) match the fixed-width run exactly.
+            live = [i for i in range(k) if handles[i] is not None]
+            if (elastic_on and live and not parked
+                    and getattr(scheduler, "closed", False)
+                    and len(live) <= k // 2):
+                if elastic is not None:
+                    _, width, k2 = elastic.plan(len(live))
+                    shrink = k2 != k or width != elastic.width
+                else:
+                    width, k2 = 1, _pow2_ceil(len(live))
+                    shrink = k2 < k
+                if shrink:
+                    mesh2 = None
+                    if elastic is not None:
+                        _, mesh2 = elastic.regrid(len(live))
+                    from ..train.population import regrid_population_state
+
+                    pstate = regrid_population_state(
+                        pstate, live, tc, mesh=mesh2, pad_to=k2)
+                    self.n_dispatches += 1
+                    pad = k2 - len(live)
+
+                    def _gather(seq, fill):
+                        return [seq[i] for i in live] + \
+                            [fill(j) for j in range(pad)]
+
+                    def _garr(arr, dtype):
+                        out = np.zeros(k2, dtype)
+                        out[: len(live)] = [arr[i] for i in live]
+                        return out
+
+                    handles = _gather(handles, lambda j: None)
+                    used = _gather(used, lambda j: True)
+                    lineage = _gather(lineage, lambda j: None)
+                    lane_round = _gather(lane_round, lambda j: 0)
+                    hps = _gather(hps, lambda j: self._hparams({}, 0))
+                    streams = _gather(
+                        streams, lambda j: -(len(live) + j + 1))
+                    lane_keys = _gather(
+                        lane_keys,
+                        lambda j: self._init_key(-(len(live) + j + 1)))
+                    starts = _garr(starts, np.int64)
+                    base_data = _garr(base_data, np.int64)
+                    applied0 = _garr(applied0, np.int64)
+                    lane_applied = _garr(lane_applied, np.int64)
+                    budgets = _garr(budgets, np.float64)
+                    resumed_at = _garr(resumed_at, np.int64)
+                    k = k2
+                    pstep, splice_fn, init_fn, snap_fn, restore_fn = _ops(k)
+                    live = list(range(len(handles) - pad))
+                    virgin = False
+                    php_dirty = True
+                    self.n_regrids += 1
+                    self.lane_width_history.append([int(k2), int(width)])
             if php_dirty:
                 php = stack_hparams(hps)
                 s_lo, s_hi = (jnp.asarray(w) for w in split_streams(streams))
@@ -1074,7 +1262,7 @@ class PopulationTrial:
             # batches are synthesized on device — one dispatch per chunk
             # instead of one (plus K host-built batches) per step; chunk
             # boundaries land exactly on the event step.
-            t = _pow2_floor(min(next_event - s, chunk)) if chunk > 1 else 1
+            t = planner.chunk_to(s, next_event)
             if device_active:
                 # rule-carrying scan (any t >= 1): budgets ride as scan state,
                 # rung cuts / window verdicts land in-scan, and the emitted
@@ -1326,6 +1514,18 @@ def main(argv=None) -> int:
                         "can run as ONE device dispatch; the host only "
                         "harvests retirements from the scan's emitted event "
                         "log")
+    p.add_argument("--elastic-regrid", action="store_true",
+                   help="with --vectorize and a rung rule (--inflight-stop): "
+                        "at rung boundaries, gather the surviving lanes into "
+                        "a smaller population laid out over the freed devices "
+                        "— a two-level (pop, model) mesh with wider lane rows "
+                        "under --shard-population, a lane-count shrink on the "
+                        "single-device engine — so later rungs train fewer "
+                        "trials faster instead of stepping frozen lanes; "
+                        "streaming flights (--lane-refill) shrink the same "
+                        "way once the proposal feed drains.  Resharding "
+                        "changes layout, never math: per-trial scores "
+                        "reproduce the fixed-width run")
     p.add_argument("--per-trial-init", action="store_true",
                    help="fold each trial's stream/job id into its init PRNG "
                         "key so trials start from distinct weights (serial and "
@@ -1439,6 +1639,18 @@ def main(argv=None) -> int:
             p.error("--device-rules needs an in-scan rule: --inflight-stop "
                     "(rung cuts) or --pbt-streaming with --pbt-async "
                     "(window-quantile verdicts)")
+    if args.elastic_regrid:
+        if args.vectorize <= 0:
+            p.error("--elastic-regrid acts on the population engines; it "
+                    "requires --vectorize K")
+        if args.device_rules:
+            p.error("--elastic-regrid is incompatible with --device-rules: "
+                    "in-scan rule state is K-shaped, a regrid changes K "
+                    "mid-flight")
+        if args.pbt_streaming:
+            p.error("--elastic-regrid is incompatible with --pbt-streaming: "
+                    "keep/clone directives pin members to lanes a regrid "
+                    "reindexes")
     per_trial_streams = not args.shared_stream
     # lane-snapshot store: armed when snapshots are being taken OR when a
     # resume may need to restore lanes a previous run persisted
@@ -1453,6 +1665,8 @@ def main(argv=None) -> int:
         exp_cfg["n_parallel"] = args.vectorize
         if args.lane_refill:
             exp_cfg["lane_refill"] = True
+        if args.elastic_regrid and args.shard_population:
+            exp_cfg["elastic_regrid"] = True
         trial = PopulationTrial(args.arch, args.steps, args.batch, args.seq,
                                 args.seed, population=args.vectorize,
                                 per_trial_streams=per_trial_streams,
@@ -1460,7 +1674,8 @@ def main(argv=None) -> int:
                                 chunk_steps=args.chunk_steps,
                                 snapshot_every=args.snapshot_every,
                                 snapshots=snap_store,
-                                device_rules=args.device_rules)
+                                device_rules=args.device_rules,
+                                elastic_regrid=args.elastic_regrid)
     elif args.legacy_recompile:
         trial = make_trial(args.arch, args.steps, args.batch, args.seq, args.seed)
     else:
@@ -1473,7 +1688,7 @@ def main(argv=None) -> int:
         "shard_population", "chunk_steps", "per_trial_init", "shared_stream",
         "lane_refill", "inflight_stop", "snapshot_every", "snapshot_dir",
         "legacy_recompile", "pbt_streaming", "pbt_async", "device_rules",
-        "max_flight_restarts")}
+        "elastic_regrid", "max_flight_restarts")}
     t0 = time.time()
     if resume_db is not None:
         exp = Experiment.resume(resume_db, trial, exp_id=resume_exp_id)
@@ -1502,11 +1717,15 @@ def main(argv=None) -> int:
         "arch": args.arch,
         "engine": engine + ("+refill" if args.lane_refill else "")
                          + ("+chunked" if args.chunk_steps > 1 else "")
-                         + ("+devrules" if args.device_rules else ""),
+                         + ("+devrules" if args.device_rules else "")
+                         + ("+elastic" if args.elastic_regrid else ""),
         "vectorize": args.vectorize,
     }
     if args.device_rules:
         out["device_rules"] = True
+    if args.elastic_regrid:
+        out["regrids"] = trial.n_regrids
+        out["lane_width_history"] = trial.lane_width_history
     if args.vectorize > 0 and getattr(trial, "n_train_steps", 0):
         out["chunk_steps"] = args.chunk_steps
         out["device_dispatches"] = trial.n_dispatches

@@ -64,9 +64,18 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec
 
 from ..configs.base import TrainConfig
-from ..distributed.sharding import population_mesh, population_specs
+from ..distributed.sharding import (
+    population_mesh,
+    population_specs,
+    two_level_state_specs,
+)
 from ..optim.hparams import HParams
-from .train_step import init_train_state, make_hparam_train_step, static_step_key
+from .train_step import (
+    init_train_state,
+    make_hparam_train_step,
+    static_step_key,
+    train_state_specs,
+)
 
 PopState = Dict[str, Any]
 
@@ -294,6 +303,102 @@ def make_lane_restore(tc: TrainConfig) -> Callable:
         }
 
     return restore
+
+
+def make_lane_regrid(tc: TrainConfig) -> Callable:
+    """``(pstate, survivors) -> pstate'`` — the sixth lane-lifecycle op.
+
+    At a rung boundary the cut lanes are dead weight: the flight keeps
+    stepping K lanes while only the survivors still train.  The regrid
+    gathers the survivors' FULL train state (params, optimizer moments,
+    master copy, step counter, divergence latch, ``last_loss``) into a
+    compact K' = len(survivors) population — ``jnp.take`` on the lane axis
+    per leaf, the whole-population generalization of the single-lane
+    snapshot/restore pair.  ``survivors`` is int32[K'] of surviving lane
+    indices in ascending order (order preservation is what keeps the
+    staggered rule's lane-order appends identical across regrids); callers
+    pad it by repeating a survivor whose padded copy gets a 0-step budget.
+
+    Resharding changes layout, never math: the compact state is the same
+    bits the survivors held at K lanes, and ``regrid_population_state``
+    then ``device_put``s it onto a new (fewer-lanes x wider) two-level mesh
+    so later rungs train fewer trials wider instead of idling freed devices.
+    Like ``snapshot`` this op must NOT donate: K' differs from K, so the
+    input buffers are never reusable, and the driver drops the old state.
+    """
+
+    def regrid(pstate: PopState, survivors: jax.Array) -> PopState:
+        take = lambda x: jnp.take(x, survivors, axis=0)
+        return jax.tree.map(take, pstate)
+
+    return regrid
+
+
+def make_sharded_lane_regrid(tc: TrainConfig, mesh: Mesh, axis: str = "pop") -> Callable:
+    """Mesh twin of the regrid gather.  The output lane count K' differs
+    from K and survivors cross lane blocks, so there is no ``shard_map``
+    formulation — the jitted gather runs under GSPMD (which lowers the
+    cross-device ``take``), and the caller re-lays the compact state out on
+    the *new* mesh with ``device_put`` (``regrid_population_state``)."""
+    return make_lane_regrid(tc)
+
+
+def plan_regrid(n_devices: int, n_survivors: int) -> Tuple[int, int, int]:
+    """``(rows, width, lanes)`` geometry for S survivors over N devices.
+
+    ``rows`` is the largest divisor of N such that laying the survivors out
+    contiguously (``ceil(S / rows)`` lanes per row, padding at the tail)
+    leaves **no device row idle** — the full-occupancy invariant the elastic
+    engine maintains after every cut.  ``width = N / rows`` devices then
+    serve each lane row, and ``lanes = rows * ceil(S / rows)`` is the padded
+    population size (padding lanes carry a 0-step budget)."""
+    n = max(1, int(n_devices))
+    s = max(1, int(n_survivors))
+    for rows in sorted((d for d in range(1, n + 1) if n % d == 0),
+                       reverse=True):
+        per = -(-s // rows)
+        if rows <= s and (rows - 1) * per < s:
+            return rows, n // rows, rows * per
+    return 1, n, s  # unreachable: rows=1 always satisfies the invariant
+
+
+def place_two_level(pstate: PopState, tc: TrainConfig, mesh: Mesh,
+                    axis: str = "pop") -> PopState:
+    """``device_put`` a population state onto a two-level ``(pop, model)``
+    mesh: the lane axis spreads over ``axis`` and each lane's parameter /
+    optimizer leaves shard over its own device row through the per-leaf
+    composed specs (``two_level_state_specs`` x ``train_state_specs``)."""
+    specs = {"inner": train_state_specs(tc), "diverged": (), "last_loss": ()}
+    return jax.device_put(
+        pstate, two_level_state_specs(pstate, specs, mesh, axis=axis))
+
+
+def regrid_population_state(
+    pstate: PopState,
+    survivors,
+    tc: TrainConfig,
+    mesh: Optional[Mesh] = None,
+    axis: str = "pop",
+    pad_to: Optional[int] = None,
+) -> PopState:
+    """Gather ``survivors`` into a compact K' population and (optionally)
+    re-lay it out on a new two-level mesh.
+
+    The gather is the compiled ``regrid`` lane op (cached like every other
+    lifecycle op); ``pad_to`` pads the survivor list to a fixed K' by
+    repeating the first survivor (padding copies get 0-step budgets from the
+    caller's hparam restack, so they freeze immediately and their scores are
+    never read).  With ``mesh`` the compact state is ``device_put`` onto the
+    new lane-row layout — resharding changes layout, never math."""
+    k = int(pstate["diverged"].shape[0])
+    idx = [int(i) for i in survivors]
+    k2 = max(int(pad_to) if pad_to else len(idx), 1)
+    idx = (idx + [idx[0] if idx else 0] * k2)[:k2]
+    fn = get_compiled_lane_op(tc, k, "regrid")
+    compact = fn(pstate, jnp.asarray(idx, jnp.int32))
+    if mesh is not None:
+        compact = place_two_level(compact, tc, mesh, axis=axis)
+    return compact
 
 
 def make_sharded_lane_init(tc: TrainConfig, mesh: Mesh, axis: str = "pop") -> Callable:
@@ -1087,8 +1192,12 @@ _LANE_OPS: Dict[str, Tuple[Callable, Callable]] = {
     "splice": (make_lane_splice, make_sharded_lane_splice),
     "snapshot": (make_lane_snapshot, make_sharded_lane_snapshot),
     "restore": (make_lane_restore, make_sharded_lane_restore),
+    "regrid": (make_lane_regrid, make_sharded_lane_regrid),
 }
-_READONLY_LANE_OPS = frozenset({"snapshot"})
+# snapshot reads the state the flight keeps training on; regrid's output has
+# a different lane count than its input, so the buffers are never reusable —
+# neither may donate.
+_READONLY_LANE_OPS = frozenset({"snapshot", "regrid"})
 
 
 def get_compiled_lane_op(
@@ -1101,7 +1210,8 @@ def get_compiled_lane_op(
     """Memoized ``jax.jit`` of a lane-lifecycle op.
 
     ``op`` is one of ``init`` / ``clone`` / ``splice`` / ``snapshot`` /
-    ``restore``; with ``mesh`` the ``shard_map`` twin is compiled instead
+    ``restore`` / ``regrid``; with ``mesh`` the ``shard_map`` twin is compiled
+    instead
     (keyed like the sharded population step, so a streaming flight compiles
     each op it uses exactly once).  Mutating ops donate the population state;
     ``snapshot`` reads it and leaves the flight state alive.

@@ -87,6 +87,61 @@ def run_streaming_cell(cfgs, chunk=1, device=False, mesh=None):
     }
 
 
+def _elastic_trial(chunk):
+    return PopulationTrial(ARCH, steps=STEPS_PER_UNIT, batch=BATCH, seq=SEQ,
+                           seed=0, population=LANES, early_stop=rung_hook(),
+                           refill_idle_grace_s=0.0, chunk_steps=chunk,
+                           elastic_regrid=True)
+
+
+def run_elastic_batch_cell(cfgs, chunk=1, pool=False):
+    """Elastic batch protocol (``--elastic-regrid``): cohort rung rule with
+    lane regrids at each boundary.  ``pool=True`` leases device slices
+    through an ``ElasticLanePool`` so survivors re-layout onto the two-level
+    ``(pop, model)`` mesh; ``pool=False`` is the vmapped elastic engine
+    (pure lane compaction, bit-comparable to the fixed-width cells)."""
+    from repro.core.resource.sharded import ElasticLanePool
+
+    trial = _elastic_trial(chunk)
+    elastic = ElasticLanePool() if pool else None
+    scores = trial.run_population(list(cfgs), elastic=elastic)
+    return {
+        "scores": scores,
+        "n_truncated": trial.early_stop.n_truncated,
+        "n_reclaimed": trial.early_stop.n_reclaimed,
+        "dispatches": trial.n_dispatches,
+        "train_steps": trial.n_train_steps,
+        "regrids": trial.n_regrids,
+        "lane_width_history": trial.lane_width_history,
+        "pool_widths": elastic.width_history if pool else None,
+    }
+
+
+def run_elastic_streaming_cell(cfgs, chunk=1, pool=False):
+    """Elastic streaming protocol: lane-refill flight whose tail regrids once
+    the feed drains and live lanes fall to half the pod or fewer."""
+    from repro.core.resource.sharded import ElasticLanePool
+
+    trial = _elastic_trial(chunk)
+    elastic = ElasticLanePool() if pool else None
+    feed = QueueFeedScheduler(list(cfgs))
+    trial.run_population([], scheduler=feed, elastic=elastic)
+    n = len(cfgs)
+    assert len(feed.scores) == n, "every queued config must stream a result"
+    return {
+        "scores": feed.ordered_scores(n),
+        "steps": [feed.extras[i]["steps"] for i in range(n)],
+        "diverged": [feed.extras[i]["diverged"] for i in range(n)],
+        "n_truncated": trial.early_stop.n_truncated,
+        "n_reclaimed": trial.early_stop.n_reclaimed,
+        "dispatches": trial.n_dispatches,
+        "train_steps": trial.n_train_steps,
+        "regrids": trial.n_regrids,
+        "lane_width_history": trial.lane_width_history,
+        "pool_widths": elastic.width_history if pool else None,
+    }
+
+
 def run_serial_reference(cfgs, eff_steps):
     """Serial-driver scores measured at the population cells' effective
     budgets: the compile-once per-trial loop, cut at each trial's (possibly

@@ -1,0 +1,284 @@
+"""Elastic two-level population mesh — the lane-regrid lifecycle op.
+
+The acceptance invariant: a regrid changes *layout*, never *math*.  An
+``--elastic-regrid`` ASHA ladder must reproduce the fixed-width run's
+per-trial scores — bit-equal within the vmapped family (regrid = pure lane
+compaction), <= 1e-6 when the survivors re-layout onto the two-level
+``(pop, model)`` mesh through the ``ElasticLanePool`` — while the rung rule
+makes the *same decisions* (truncations, reclaims, effective budgets).
+
+On top of the differential cells: unit coverage for ``plan_regrid``
+geometry (full-occupancy invariant), the ``regrid`` lane op itself
+(gather + pad semantics), the pool's scale-event observability, the
+mutual-exclusion guards, and the CI smoke entry.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from harness import LANES, ladder, run_batch_cell, run_elastic_batch_cell, \
+    run_elastic_streaming_cell, run_streaming_cell
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2, reason="needs a multi-device (virtual CPU) mesh"
+)
+
+# (cell name, chunk_steps, pooled two-level placement)
+CELLS = [
+    ("elastic-perstep", 1, False),
+    ("elastic-chunked", 8, False),
+    ("elastic-perstep-pooled", 1, True),
+    ("elastic-chunked-pooled", 8, True),
+]
+VMAPPED = [c[0] for c in CELLS if not c[2]]
+POOLED = [c[0] for c in CELLS if c[2]]
+
+
+@pytest.fixture(scope="module")
+def cfgs():
+    return ladder(6)
+
+
+@pytest.fixture(scope="module")
+def cells(cfgs):
+    """Reference fixed-width cells plus every elastic cell, computed once."""
+    out = {
+        "batch": {"fixed": run_batch_cell(cfgs, chunk=1)},
+        "streaming": {"fixed": run_streaming_cell(cfgs, chunk=1)},
+    }
+    for name, chunk, pooled in CELLS:
+        if pooled and jax.device_count() < 2:
+            continue
+        out["batch"][name] = run_elastic_batch_cell(
+            cfgs, chunk=chunk, pool=pooled)
+        out["streaming"][name] = run_elastic_streaming_cell(
+            cfgs, chunk=chunk, pool=pooled)
+    return out
+
+
+def _cell(cells, protocol, name):
+    if name not in cells[protocol]:
+        pytest.skip("needs a multi-device (virtual CPU) mesh")
+    return cells[protocol][name]
+
+
+# -- the invariant: regrids change layout, never math ----------------------------
+
+
+@pytest.mark.parametrize("name", VMAPPED)
+@pytest.mark.parametrize("protocol", ["batch", "streaming"])
+def test_vmapped_elastic_bit_equal_fixed_width(cells, protocol, name):
+    """Within the vmapped family a regrid is a pure lane compaction: scores,
+    rule decisions and effective budgets match the fixed-width run to the
+    bit — and the workload must actually regrid for this to test anything."""
+    ref = cells[protocol]["fixed"]
+    got = cells[protocol][name]
+    assert got["regrids"] > 0, "workload never regridded; cells are vacuous"
+    assert got["scores"] == ref["scores"]
+    assert got["n_truncated"] == ref["n_truncated"]
+    assert got["n_reclaimed"] == ref["n_reclaimed"]
+    if protocol == "streaming":
+        assert got["steps"] == ref["steps"]
+        assert got["diverged"] == ref["diverged"]
+
+
+@multi_device
+@pytest.mark.parametrize("name", POOLED)
+@pytest.mark.parametrize("protocol", ["batch", "streaming"])
+def test_pooled_elastic_matches_fixed_width(cells, protocol, name):
+    """Two-level placement re-lays survivors across devices; GSPMD may
+    re-associate reductions, so scores match to 1e-6 while every rule
+    decision stays identical."""
+    ref = cells[protocol]["fixed"]
+    got = _cell(cells, protocol, name)
+    assert got["regrids"] > 0
+    np.testing.assert_allclose(got["scores"], ref["scores"],
+                               rtol=0, atol=1e-6)
+    assert got["n_truncated"] == ref["n_truncated"]
+    assert got["n_reclaimed"] == ref["n_reclaimed"]
+    if protocol == "streaming":
+        assert got["steps"] == ref["steps"]
+
+
+@multi_device
+@pytest.mark.parametrize("protocol", ["batch", "streaming"])
+def test_pooled_regrid_keeps_pod_fully_occupied(cells, protocol):
+    """After every cut the pod is fully re-leased: lanes x width covers the
+    whole device row, and the pool's width grows monotonically as survivors
+    thin out (shrink-only workload)."""
+    n = jax.device_count()
+    got = _cell(cells, protocol, "elastic-perstep-pooled")
+    assert got["lane_width_history"], "pooled cell recorded no regrids"
+    for lanes, width in got["lane_width_history"]:
+        # rows = n/width device rows, each carrying lanes/rows trials:
+        # lanes x width is a whole multiple of the pod, never a partial row
+        assert n % width == 0 and lanes % (n // width) == 0, (lanes, width, n)
+    widths = got["pool_widths"]
+    assert widths[0] == 1 and widths == sorted(widths), widths
+
+
+# -- plan_regrid geometry --------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,s,want", [
+    (8, 8, (8, 1, 8)),   # full house: no widening possible
+    (8, 4, (4, 2, 4)),   # halve the lanes, double the width
+    (8, 3, (2, 4, 4)),   # 3 survivors pad to 4 lanes of width 4 wait-free
+    (8, 5, (2, 4, 6)),   # rows=4 would idle a row ((4-1)*2 >= 5 fails)
+    (8, 1, (1, 8, 1)),   # last survivor takes the whole pod
+    (6, 4, (2, 3, 4)),   # non-power-of-two pod
+    (1, 3, (1, 1, 3)),   # single device: width can never grow
+])
+def test_plan_regrid_geometry(n, s, want):
+    from repro.train.population import plan_regrid
+
+    assert plan_regrid(n, s) == want
+
+
+@pytest.mark.parametrize("n", [1, 2, 6, 8, 12])
+def test_plan_regrid_full_occupancy_invariant(n):
+    """For every survivor count: rows*width tiles the pod exactly, every row
+    carries at least one live survivor, and lanes >= survivors (pad only)."""
+    from repro.train.population import plan_regrid
+
+    for s in range(1, 2 * n + 1):
+        rows, width, lanes = plan_regrid(n, s)
+        assert rows * width == n
+        assert lanes >= s and lanes % rows == 0
+        assert (rows - 1) * (lanes // rows) < s, \
+            "a device row would carry only dead pad lanes"
+
+
+# -- the regrid lane op: gather + pad semantics ----------------------------------
+
+
+def test_regrid_op_gathers_and_pads():
+    """``regrid`` compacts survivor lanes in order and pads by repeating the
+    first survivor; padded copies are frozen via total_steps=0, not here."""
+    from repro.configs.base import ParallelConfig, TrainConfig
+    from repro.configs import get_smoke_config
+    from repro.train.population import init_population_state_from_keys, \
+        regrid_population_state
+
+    tc = TrainConfig(model=get_smoke_config("starcoder2-3b"),
+                     parallel=ParallelConfig(remat="none"), seed=0)
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    pstate = init_population_state_from_keys(keys, tc)
+    out = regrid_population_state(pstate, [2, 0], tc, pad_to=4)
+
+    def check(src, dst):
+        src, dst = np.asarray(src), np.asarray(dst)
+        np.testing.assert_array_equal(dst[0], src[2])
+        np.testing.assert_array_equal(dst[1], src[0])
+        np.testing.assert_array_equal(dst[2], src[2])  # pad = survivor 0
+        np.testing.assert_array_equal(dst[3], src[2])
+
+    jax.tree.map(check, pstate, out)
+
+
+def test_regrid_op_is_cached_and_readonly():
+    """The op lives in the lane-op cache (one compile per K) and must not
+    donate its inputs: the output K' differs from K, so the source buffers
+    are never reusable — and the source state must survive the call."""
+    from repro.configs.base import ParallelConfig, TrainConfig
+    from repro.configs import get_smoke_config
+    from repro.train.population import get_compiled_lane_op, \
+        init_population_state_from_keys
+
+    tc = TrainConfig(model=get_smoke_config("starcoder2-3b"),
+                     parallel=ParallelConfig(remat="none"), seed=0)
+    assert get_compiled_lane_op(tc, 4, "regrid") is \
+        get_compiled_lane_op(tc, 4, "regrid")
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    pstate = init_population_state_from_keys(keys, tc)
+    before = np.asarray(pstate["last_loss"]).copy()
+    get_compiled_lane_op(tc, 4, "regrid")(pstate, jnp.arange(2, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(pstate["last_loss"]), before)
+
+
+# -- ElasticLanePool: scale events are observable --------------------------------
+
+
+@multi_device
+def test_elastic_pool_emits_scale_events():
+    from repro.core.resource.sharded import ElasticLanePool
+
+    n = jax.device_count()
+    pool = ElasticLanePool()
+    assert pool.width == 1 and len(pool._lease_ids) == n
+    assert all(i.endswith("xW1") for i in pool._lease_ids)
+
+    (rows, width, lanes), mesh = pool.regrid(n // 2)
+    assert rows * width == n and pool.n_regrids == 1
+    assert len(pool._lease_ids) == rows
+    assert all(i.endswith(f"xW{width}") for i in pool._lease_ids)
+    # old width-1 leases were scaled in, new ones out — both visible in the
+    # elastic manager's bookkeeping
+    assert pool.manager.n_total() == rows
+    assert set(mesh.shape.keys()) == {"pop", "model"}
+    assert mesh.shape["pop"] * mesh.shape["model"] == n
+
+    # same survivor count again: a no-op plan emits no new scale events
+    pool.regrid(n // 2)
+    assert pool.n_regrids == 1 and pool.width_history.count(width) == 1
+
+
+def test_elastic_pool_rejects_untileable_width():
+    from repro.core.resource.sharded import ElasticLanePool
+
+    with pytest.raises(ValueError, match="does not tile"):
+        ElasticLanePool(devices=jax.devices(), width=3 * jax.device_count())
+
+
+# -- mutual-exclusion guards -----------------------------------------------------
+
+
+def test_elastic_rejects_device_rules():
+    from harness import _elastic_trial
+
+    trial = _elastic_trial(1)
+    trial.device_rules = True
+    with pytest.raises(ValueError, match="device-rules"):
+        trial.run_population(ladder(2))
+
+
+def test_cli_rejects_incompatible_engines():
+    from repro.launch.hpo import main
+
+    base = ["--proposer", "asha", "--vectorize", "4", "--inflight-stop",
+            "--n-samples", "2", "--steps", "2", "--batch", "2", "--seq", "16"]
+    with pytest.raises(SystemExit):
+        main(base + ["--elastic-regrid", "--device-rules"])
+    with pytest.raises(SystemExit):
+        main(["--proposer", "pbt", "--vectorize", "4", "--pbt-streaming",
+              "--elastic-regrid", "--n-samples", "2", "--steps", "2"])
+    with pytest.raises(SystemExit):
+        main(["--proposer", "asha", "--elastic-regrid", "--n-samples", "2"])
+
+
+# -- CI smoke entry --------------------------------------------------------------
+
+
+def test_elastic_smoke_cli(capsys):
+    """The CI smoke entry (`REPRO_ELASTIC_SMOKE=1`) runs the heavier CLI with
+    --elastic-regrid; locally a lighter variant stays always-on.  The ladder
+    must regrid at least once and stamp the engine suffix."""
+    import json
+    import os
+
+    from repro.launch.hpo import main
+
+    heavy = os.environ.get("REPRO_ELASTIC_SMOKE") == "1"
+    argv = ["--proposer", "asha", "--vectorize", "8" if heavy else "4",
+            "--inflight-stop", "--elastic-regrid",
+            "--n-samples", "6" if heavy else "4",
+            "--steps", "2", "--batch", "2", "--seq", "16"]
+    if heavy:
+        argv += ["--shard-population"]
+    assert main(argv) == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["engine"].endswith("+elastic"), out["engine"]
+    assert out["regrids"] > 0, out
+    assert out["lane_width_history"], out

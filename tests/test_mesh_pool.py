@@ -1,0 +1,121 @@
+"""Geometry edges of the mesh-slice resource pool.
+
+``tile_pod`` is the quantum allocator under both the TPU-native
+``MeshPoolResourceManager`` and the elastic lane pool's width-annotated
+leases — its row-major contiguity, label format and error contract are
+load-bearing for resource ids that survive in journals and snapshots.
+Covered here: non-power-of-two pods, 1-device slices, virtual pods, the
+does-not-tile / not-enough-devices failure modes, and the two-level mesh
+construction layered on top.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.resource.mesh_pool import MeshSlice, tile_pod
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2, reason="needs a multi-device (virtual CPU) mesh"
+)
+
+
+# -- tile_pod geometry -----------------------------------------------------------
+
+
+def test_tile_pod_non_power_of_two_row():
+    """A (1, 6) pod tiles into width-3 slices: two row-major tiles, ids
+    naming the exact grid window each occupies."""
+    slices = tile_pod((1, 6), (1, 3), virtual=True)
+    assert [s.slice_id for s in slices] == \
+        ["slice[0:1,0:3]", "slice[0:1,3:6]"]
+    assert [s.origin for s in slices] == [(0, 0), (0, 3)]
+    assert all(s.shape == (1, 3) for s in slices)
+    # contiguity: each tile holds consecutive columns of its row
+    assert slices[1].devices == ("chip(0,3)", "chip(0,4)", "chip(0,5)")
+
+
+def test_tile_pod_single_device_slices():
+    """1x1 slices: every chip is its own resource, in row-major order."""
+    slices = tile_pod((2, 3), (1, 1), virtual=True)
+    assert len(slices) == 6
+    assert slices[0].devices == ("chip(0,0)",)
+    assert slices[-1].slice_id == "slice[1:2,2:3]"
+    assert [s.origin for s in slices] == \
+        [(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2)]
+
+
+def test_tile_pod_2d_blocks_are_contiguous_rectangles():
+    """A 4x4 pod in 2x2 blocks: each slice is a rectangle of the grid, not a
+    scattered chip set (contiguity is the ICI locality contract)."""
+    slices = tile_pod((4, 4), (2, 2), virtual=True)
+    assert len(slices) == 4
+    assert slices[1].devices == \
+        ("chip(0,2)", "chip(0,3)", "chip(1,2)", "chip(1,3)")
+
+
+def test_tile_pod_virtual_pods_scale_without_devices():
+    """The paper's Fig. 3 regime: 256 virtual slices on a deviceless host."""
+    slices = tile_pod((16, 16), (1, 1), virtual=True)
+    assert len(slices) == 256
+    assert all(s.virtual for s in slices)
+    with pytest.raises(RuntimeError, match="virtual"):
+        slices[0].mesh()
+
+
+def test_tile_pod_rejects_untileable_slice():
+    with pytest.raises(ValueError, match="does not tile"):
+        tile_pod((1, 8), (1, 3), virtual=True)
+    with pytest.raises(ValueError, match="does not tile"):
+        tile_pod((2, 2), (3, 1), virtual=True)
+
+
+def test_tile_pod_rejects_short_device_list():
+    with pytest.raises(ValueError, match="need 4 devices"):
+        tile_pod((2, 2), (1, 1), devices=jax.devices()[:1])
+
+
+@multi_device
+def test_real_slice_builds_named_mesh():
+    n = jax.device_count()
+    (sl,) = tile_pod((1, n), (1, n))
+    assert not sl.virtual
+    mesh = sl.mesh(axis_names=("pop", "model"))
+    assert dict(mesh.shape) == {"pop": 1, "model": n}
+
+
+# -- the two-level population mesh layered on tile_pod geometry ------------------
+
+
+@multi_device
+def test_population_mesh_two_level_width():
+    from repro.distributed.sharding import population_mesh
+
+    n = jax.device_count()
+    flat = population_mesh()
+    assert tuple(flat.axis_names) == ("pop",)
+    assert flat.shape["pop"] == n
+
+    two = population_mesh(width=n)
+    assert tuple(two.axis_names) == ("pop", "model")
+    assert two.shape["pop"] == 1 and two.shape["model"] == n
+
+    with pytest.raises(ValueError, match="tile"):
+        population_mesh(width=3 * n)
+
+
+def test_population_specs_replicates_rank0_and_indivisible():
+    """Rank-aware specs: scalar leaves and leading dims the mesh cannot
+    divide fall back to replication instead of a lowering error."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import population_mesh, population_specs
+
+    n = jax.device_count()
+    mesh = population_mesh()
+    tree = {"w": jnp.zeros((n, 3)), "s": jnp.zeros(()), "odd": jnp.zeros((n + 1,))}
+    specs = population_specs(tree, mesh)
+    assert specs["w"].spec == P("pop")
+    assert specs["s"].spec == P()
+    assert specs["odd"].spec == P()
