@@ -30,7 +30,7 @@ range, far from any real (small, non-negative) trial stream.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Sequence, Tuple
+from typing import Any, Dict, Protocol, Sequence, Tuple
 
 import numpy as np
 
@@ -247,6 +247,156 @@ class SyntheticLM:
         lo, hi = split_streams(streams)
         return synth_population_batch(
             self, lo, hi, np.asarray(steps, np.int64), xp=np)
+
+
+class HostDataset(Protocol):
+    """What the prefetch ring needs from a host data source.
+
+    One method: a *lane block* — per-lane token rows for K population lanes,
+    each lane at its own step cursor, shaped ``(K, batch, seq_len + 1)`` int32
+    (the raw ``synth_tokens`` layout; ``tokens_to_batch`` splits it into
+    tokens/targets/mask on device).  Implementations must be pure functions
+    of ``(streams, steps)`` so a crash-restored flight replays the same
+    bytes — the ring's resume contract is exactly the data-cursor contract
+    the synthetic stream already has.
+    """
+
+    seq_len: int
+    global_batch: int
+
+    def lane_block(self, streams: Sequence[int], steps) -> np.ndarray:
+        """Token rows ``(K, global_batch, seq_len + 1)`` int32 for lane ``i``
+        reading ``streams[i]`` at step ``steps[i]``."""
+        ...
+
+    # Implementations may additionally provide
+    #     lane_window(streams, steps, n) -> (n, K, global_batch, seq_len + 1)
+    # — ``n`` consecutive lane blocks built in one vectorized call,
+    # bit-identical to stacking ``lane_block`` per step.  The ring's fill
+    # thread prefers it: one call per prefetch window instead of one per
+    # step keeps the host fill cheap enough to hide behind device compute.
+
+
+@dataclasses.dataclass
+class SynthHostDataset:
+    """``HostDataset`` over the counter-based synthetic stream — the ring's
+    bit-equality oracle.  ``lane_block`` evaluates the SAME ``synth_tokens``
+    the fused scan traces on device (``xp=numpy`` here, ``xp=jax.numpy``
+    there), so a ring filled from this adapter reproduces the in-scan synth
+    engine's batches bit-for-bit: the cross-engine matrix can assert ring-fed
+    scores equal in-scan-synth scores exactly."""
+
+    spec: SyntheticLM
+
+    @property
+    def seq_len(self) -> int:
+        return int(self.spec.seq_len)
+
+    @property
+    def global_batch(self) -> int:
+        return int(self.spec.global_batch)
+
+    def lane_block(self, streams: Sequence[int], steps) -> np.ndarray:
+        lo, hi = split_streams(streams)
+        st = np.asarray([int(s) for s in steps], np.int64)
+        return synth_tokens(np, self.spec, (len(streams), self.global_batch),
+                            st[:, None], lo[:, None], hi[:, None])
+
+    def lane_window(self, streams: Sequence[int], steps, n: int) -> np.ndarray:
+        """``n`` consecutive ``lane_block`` slabs — steps ``steps[i] + t`` for
+        ``t in [0, n)`` — built in ONE vectorized synthesis call, shape
+        ``(n, K, global_batch, seq_len + 1)``.  Bit-identical to stacking
+        ``lane_block`` per step; one call amortizes the hash-round overhead
+        over the whole prefetch window instead of paying it per step, which
+        is what keeps the ring's fill thread cheap enough to hide."""
+        lo, hi = split_streams(streams)
+        st = np.asarray([int(s) for s in steps], np.int64)
+        step = (st[None, :, None]
+                + np.arange(int(n), dtype=np.int64)[:, None, None])
+        return synth_tokens(
+            np, self.spec, (int(n), len(streams), self.global_batch),
+            step, lo[None, :, None], hi[None, :, None])
+
+
+@dataclasses.dataclass
+class ArrayHostDataset:
+    """``HostDataset`` over a real token corpus held in host memory: a
+    ``(n_rows, seq_len + 1)`` int32 array (e.g. a memory-mapped tokenized
+    shard).  Lane ``i`` at step ``s`` reads ``global_batch`` consecutive rows
+    starting at ``(streams[i] * stream_stride + s * global_batch) % n_rows``
+    — per-trial streams start at disjoint offsets and the cursor is just the
+    step counter, so resume replays identically."""
+
+    tokens: np.ndarray
+    global_batch: int
+    stream_stride: int = 997  # co-prime-ish lane offset into the corpus
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32)
+        assert self.tokens.ndim == 2 and len(self.tokens) > 0
+
+    @property
+    def seq_len(self) -> int:
+        return int(self.tokens.shape[1]) - 1
+
+    def lane_block(self, streams: Sequence[int], steps) -> np.ndarray:
+        n = len(self.tokens)
+        b = int(self.global_batch)
+        out = np.empty((len(streams), b, self.tokens.shape[1]), np.int32)
+        for i, (stream, step) in enumerate(zip(streams, steps)):
+            start = (int(stream) * self.stream_stride + int(step) * b) % n
+            idx = (start + np.arange(b)) % n
+            out[i] = self.tokens[idx]
+        return out
+
+    def lane_window(self, streams: Sequence[int], steps, n: int) -> np.ndarray:
+        """``n`` consecutive ``lane_block`` slabs in one gather, shape
+        ``(n, K, global_batch, seq_len + 1)`` — same rows as stacking
+        ``lane_block`` per step."""
+        nrows = len(self.tokens)
+        b = int(self.global_batch)
+        sid = np.asarray([int(s) for s in streams], np.int64)
+        st = np.asarray([int(s) for s in steps], np.int64)
+        step = st[None, :] + np.arange(int(n), dtype=np.int64)[:, None]
+        start = sid[None, :] * self.stream_stride + step * b
+        idx = (start[..., None] + np.arange(b)) % nrows
+        return self.tokens[idx]
+
+
+class HostPrefetcher:
+    """Prefetch-ahead feed for the SERIAL drivers: build batch ``s+1`` and
+    dispatch its ``jax.device_put`` while the (asynchronously dispatched)
+    step ``s`` program is still running, BEFORE the driver blocks on step
+    ``s``'s loss.  A plain generator cannot do this — the consumer blocks on
+    ``float(metrics["loss"])`` before it would ever pull the next item — so
+    the serial loops call ``pop(s)`` / ``prefetch(s + 1)`` explicitly around
+    the blocking read.  Batches are byte-identical to the direct
+    ``make_batch`` path (same builder, same coordinates); only the timing of
+    the host work moves.
+    """
+
+    def __init__(self, build):
+        self._build = build  # step -> host batch (dict of numpy arrays)
+        self._next: Any = None  # (step, device batch) or None
+
+    def _put(self, step: int):
+        import jax
+
+        return jax.device_put(self._build(step))
+
+    def prefetch(self, step: int) -> None:
+        """Stage batch ``step`` on device ahead of time (async dispatch)."""
+        self._next = (step, self._put(step))
+
+    def pop(self, step: int):
+        """The batch for ``step``: the staged one if it matches, else built
+        on the spot (first step, or a driver that skipped around)."""
+        if self._next is not None and self._next[0] == step:
+            batch = self._next[1]
+            self._next = None
+            return batch
+        self._next = None
+        return self._put(step)
 
 
 @dataclasses.dataclass

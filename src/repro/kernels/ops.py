@@ -39,7 +39,37 @@ def _interpret() -> bool:
 
 
 # -- rmsnorm ---------------------------------------------------------------------
-def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _fused_rmsnorm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    """Pallas rmsnorm on the training hot path (``--fused-rmsnorm``).
+
+    The forward pass is the kernel (interpret mode off TPU — it handles
+    unaligned feature dims, so the %128 tile gate below does not apply);
+    the backward pass is the reference norm's VJP — exact w.r.t. the same
+    math, and it keeps the kernel free of a hand-written transpose rule.
+    """
+    from .rmsnorm import rmsnorm_pallas
+
+    return rmsnorm_pallas(x, gamma, eps=eps, interpret=_interpret())
+
+
+def _fused_rmsnorm_fwd(x, gamma, eps):
+    return _fused_rmsnorm(x, gamma, eps), (x, gamma)
+
+
+def _fused_rmsnorm_bwd(eps, res, g):
+    x, gamma = res
+    _, vjp = jax.vjp(lambda xx, gg: ref.rmsnorm(xx, gg, eps), x, gamma)
+    return vjp(g)
+
+
+_fused_rmsnorm.defvjp(_fused_rmsnorm_fwd, _fused_rmsnorm_bwd)
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6,
+            fused: bool = False) -> jax.Array:
+    if fused and _FORCE != "ref":
+        return _fused_rmsnorm(x, gamma, float(eps))
     if _use_pallas() and x.shape[-1] % 128 == 0:
         from .rmsnorm import rmsnorm_pallas
 

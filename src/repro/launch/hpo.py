@@ -118,7 +118,7 @@ def make_trial(arch: str, steps: int, batch: int, seq: int, seed: int):
 
         from ..configs import get_smoke_config
         from ..configs.base import ParallelConfig, TrainConfig
-        from ..data.pipeline import SyntheticLM
+        from ..data.pipeline import HostPrefetcher, SyntheticLM
         from ..train.train_step import init_train_state, make_train_step
 
         cfg = get_smoke_config(arch)
@@ -137,9 +137,15 @@ def make_trial(arch: str, steps: int, batch: int, seq: int, seed: int):
         data = SyntheticLM(cfg.vocab_size, seq, batch, seed=seed)
         state = init_train_state(jax.random.PRNGKey(seed), tc)
         step_fn = jax.jit(make_train_step(tc))
+        # prefetch-ahead host feed: batch s+1 is built and device_put while
+        # the (async-dispatched) step s still runs, BEFORE the blocking loss
+        # read — same bytes as the direct make_batch path, less device idle
+        feed = HostPrefetcher(data.make_batch)
         loss = float("inf")
         for s in range(n_steps):
-            state, metrics = step_fn(state, data.make_batch(s))
+            state, metrics = step_fn(state, feed.pop(s))
+            if s + 1 < n_steps:
+                feed.prefetch(s + 1)
             loss = float(metrics["loss"])
             if not np.isfinite(loss):
                 return -1e9  # diverged
@@ -190,7 +196,8 @@ class PopulationTrial:
                  refill_idle_grace_s: float = 0.25, lifecycle=None,
                  chunk_steps: int = 1, snapshot_every: int = 0,
                  snapshots=None, device_rules: bool = False,
-                 elastic_regrid: bool = False):
+                 elastic_regrid: bool = False, data_ring: bool = False,
+                 ring_windows: int = 2, fused_rmsnorm: bool = False):
         self.arch = arch
         self.steps = int(steps)
         self.batch = int(batch)
@@ -217,6 +224,22 @@ class PopulationTrial:
         # single-device vmapped engine).  Resharding changes layout, never
         # math: scores reproduce the fixed-width run.
         self.elastic_regrid = bool(elastic_regrid)
+        # --data-ring: feed the fused scan from a device-resident prefetch
+        # ring host-filled ahead of the consumer (repro.data.ring) instead of
+        # in-scan synthesis — the path real datasets take into the chunked
+        # engine.  The synth-backed host adapter reproduces the in-scan
+        # engine bit-for-bit.
+        self.data_ring = bool(data_ring)
+        self.ring_windows = max(2, int(ring_windows))
+        self.host_dataset = None    # HostDataset override (default: synth)
+        self.ring_fill_wait_s = 0.0   # device time spent waiting on host fill
+        self.ring_fill_busy_s = 0.0   # host time spent producing windows
+        self.ring_overlap_frac = 1.0  # fraction of fill hidden behind compute
+        self.n_ring_fills = 0
+        self.n_ring_invalidations = 0
+        # --fused-rmsnorm: run the Pallas rmsnorm kernel (interpret mode off
+        # TPU) inside the population train step instead of the reference norm
+        self.fused_rmsnorm = bool(fused_rmsnorm)
         self.n_regrids = 0          # lane-geometry changes executed
         self.lane_width_history: list = []  # [lanes, devices-per-lane] per regrid
         self.n_dispatches = 0       # device calls issued (steps + lane ops)
@@ -267,7 +290,13 @@ class PopulationTrial:
                 from ..configs.base import ParallelConfig, TrainConfig
                 from ..data.pipeline import SyntheticLM
 
+                import dataclasses
+
                 cfg = get_smoke_config(self.arch)
+                if self.fused_rmsnorm:
+                    # a *static* model field: the compile caches key on it via
+                    # static_step_key, so fused and reference programs never mix
+                    cfg = dataclasses.replace(cfg, fused_rmsnorm=True)
                 self._data = SyntheticLM(cfg.vocab_size, self.seq, self.batch,
                                          seed=self.seed)
                 self._tc = TrainConfig(model=cfg, parallel=ParallelConfig(remat="none"),
@@ -318,6 +347,38 @@ class PopulationTrial:
             return base
         return jax.random.fold_in(base, int(stream) & 0xFFFFFFFF)
 
+    def _make_ring(self, data, k: int, chunk: int, mesh=None):
+        """Build the device-resident prefetch ring for a flight
+        (``--data-ring``): ``ring_windows`` chunk-windows of per-lane token
+        slabs, host-filled from ``host_dataset`` (default: the synth adapter
+        — the bit-equality oracle for the in-scan engine).  On a mesh the
+        lane axis shards over ``pop`` so each device holds only its own
+        lanes' slabs."""
+        from ..data.pipeline import SynthHostDataset
+        from ..data.ring import PrefetchRing
+
+        sharding = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            sharding = NamedSharding(
+                mesh, PartitionSpec(None, "pop", None, None))
+        ds = self.host_dataset if self.host_dataset is not None \
+            else SynthHostDataset(data)
+        return PrefetchRing(ds, population=k, win_steps=chunk,
+                            windows=self.ring_windows, sharding=sharding)
+
+    def _absorb_ring(self, ring) -> None:
+        """Stop a flight's ring and roll its telemetry into the trial."""
+        ring.stop()
+        self.ring_fill_wait_s += ring.fill_wait_s
+        self.ring_fill_busy_s += ring.fill_busy_s
+        self.n_ring_fills += ring.n_fills
+        self.n_ring_invalidations += ring.n_invalidations
+        if self.ring_fill_busy_s > 0.0:
+            self.ring_overlap_frac = max(0.0, min(
+                1.0, 1.0 - self.ring_fill_wait_s / self.ring_fill_busy_s))
+
     def __call__(self, config: dict) -> float:
         """Serial protocol, sharing the process-wide compiled step."""
         return self.serial_score_at(config, None)
@@ -328,6 +389,7 @@ class PopulationTrial:
         own total budget — so ``steps < budget`` reproduces exactly what a
         rung-truncated population lane reports: the ordinary trajectory, cut
         at the truncation step."""
+        from ..data.pipeline import HostPrefetcher
         from ..train.train_step import get_compiled_train_step, init_train_state
 
         tc, data = self._setup()
@@ -337,9 +399,12 @@ class PopulationTrial:
         hp = self._hparams(config, n_steps)
         step_fn = get_compiled_train_step(tc)
         state = init_train_state(self._init_key(stream), tc)
+        feed = HostPrefetcher(lambda t: data.make_batch(t, stream=stream))
         loss = float("inf")
         for s in range(run_steps):
-            state, metrics = step_fn(state, data.make_batch(s, stream=stream), hp)
+            state, metrics = step_fn(state, feed.pop(s), hp)
+            if s + 1 < run_steps:
+                feed.prefetch(s + 1)
             loss = float(metrics["loss"])
             if not np.isfinite(loss):
                 return self.DIVERGED_SCORE
@@ -424,6 +489,7 @@ class PopulationTrial:
                 tc, data, k, mesh, pstate, php, budgets, streams, hook)
             return scores[: len(configs)]
         chunk = self.chunk_steps
+        ring = None
         if chunk > 1:
             # fused dispatch: chunk boundaries align with the host-known event
             # steps (rung boundaries, flight end), so the rung rule below sees
@@ -438,39 +504,71 @@ class PopulationTrial:
                     tc, k, data, t, mesh=mesh,
                     per_trial_batch=self.per_trial_streams)
 
+            if self.data_ring:
+                from ..train.population import \
+                    get_compiled_population_ring_scan_step
+
+                # every lane's data cursor IS the global step in the batch
+                # protocol, so offsets are zero and lanes never re-key
+                ring = self._make_ring(data, k, chunk, mesh=mesh)
+                ring.set_lanes(streams, [0] * k, at_step=0)
+
+                def ring_scan_of(t):
+                    return get_compiled_population_ring_scan_step(
+                        tc, k, data, t, ring.capacity, mesh=mesh)
+
         planner = ChunkPlanner(
             chunk_steps=chunk,
             boundaries=hook.boundaries if hook is not None else ())
         s = 0
-        while s < int(budgets.max()):
-            max_b = int(budgets.max())
-            t = planner.chunk_to(s, planner.next_cohort_event(s, max_b))
-            if t > 1:
-                steps0 = (jnp.full((k,), s, jnp.int32) if self.per_trial_streams
-                          else jnp.asarray(s, jnp.int32))
-                pstate, _ = scan_of(t)(pstate, php, steps0, s_lo, s_hi)
-            else:
-                if self.per_trial_streams:
-                    batch = data.make_population_batch(s, streams)
+        try:
+            while s < int(budgets.max()):
+                max_b = int(budgets.max())
+                event = planner.next_cohort_event(s, max_b)
+                t = planner.chunk_to(s, event)
+                if ring is not None:
+                    # chunk horizons stay capped to filled windows: block here
+                    # until the host has staged exactly this chunk on device
+                    # (counted as ring_fill_wait_s), so the dispatch sequence
+                    # is identical to the in-scan engine's
+                    ring.wait_filled(s, t)
+                if t > 1 and ring is not None:
+                    with ring.reserve() as slots:
+                        pstate, _ = ring_scan_of(t)(
+                            pstate, php, slots,
+                            jnp.asarray(s % ring.capacity, jnp.int32))
+                elif t > 1:
+                    steps0 = (jnp.full((k,), s, jnp.int32)
+                              if self.per_trial_streams
+                              else jnp.asarray(s, jnp.int32))
+                    pstate, _ = scan_of(t)(pstate, php, steps0, s_lo, s_hi)
                 else:
-                    batch = data.make_batch(s)
-                pstate, _ = pstep(pstate, batch, php)
-            self.n_dispatches += 1
-            self.n_train_steps += t
-            s += t
-            if hook is not None and s in hook.boundaries:
-                new_budgets = hook(
-                    s,
-                    np.asarray(pstate["last_loss"]),
-                    budgets,
-                    np.asarray(pstate["diverged"]),
-                )
-                if (new_budgets != budgets).any():
-                    # the budget is a *traced* leaf: truncating it freezes the
-                    # losing lanes on the next step without a recompile
-                    budgets = new_budgets
-                    php = dataclasses.replace(
-                        php, total_steps=jnp.asarray(budgets, jnp.float32))
+                    if self.per_trial_streams:
+                        batch = data.make_population_batch(s, streams)
+                    else:
+                        batch = data.make_batch(s)
+                    pstate, _ = pstep(pstate, batch, php)
+                self.n_dispatches += 1
+                self.n_train_steps += t
+                s += t
+                if ring is not None:
+                    ring.consume_to(s)
+                if hook is not None and s in hook.boundaries:
+                    new_budgets = hook(
+                        s,
+                        np.asarray(pstate["last_loss"]),
+                        budgets,
+                        np.asarray(pstate["diverged"]),
+                    )
+                    if (new_budgets != budgets).any():
+                        # the budget is a *traced* leaf: truncating it freezes
+                        # the losing lanes on the next step without a recompile
+                        budgets = new_budgets
+                        php = dataclasses.replace(
+                            php, total_steps=jnp.asarray(budgets, jnp.float32))
+        finally:
+            if ring is not None:
+                self._absorb_ring(ring)
         # telemetry: how long the flight actually ran (in-flight stops shrink it)
         self.last_flight_steps = s
         scores = np.asarray(population_scores(pstate, self.DIVERGED_SCORE))
@@ -812,6 +910,21 @@ class PopulationTrial:
         device_active = device_spec is not None or device_pbt
         batch_complete = (getattr(scheduler, "complete_retirements", None)
                           if device_active else None)
+        ring = None
+        if self.data_ring and chunk > 1 and not device_active \
+                and not elastic_on:
+            # host-fed fused scans: the ring re-keys at every lane-table
+            # change (the php_dirty hook below) with each live lane's private
+            # data-cursor offset, so refilled/restored lanes resume their own
+            # stream mid-ring
+            from ..train.population import \
+                get_compiled_population_ring_scan_step
+
+            ring = self._make_ring(data, k, chunk, mesh=mesh)
+
+            def ring_scan_of(t):
+                return get_compiled_population_ring_scan_step(
+                    tc, k, data, t, ring.capacity, mesh=mesh)
         # device mode only: while True, pstate is still exactly its from-keys
         # init, so a first mass fill can rebuild it instead of dispatching a
         # masked reset — that free-ness is what lets a whole ladder be ONE call
@@ -904,6 +1017,11 @@ class PopulationTrial:
                             "applied": int(applied[lane]),
                             "applied0": int(applied0[lane]),
                             "budget": float(budgets[lane]),
+                            # the lane's data cursor at this boundary: a
+                            # restored lease re-derives base_data from it so a
+                            # ring-fed (or any host-fed) flight resumes the
+                            # stream mid-window exactly
+                            "data_cursor": int(base_data[lane] + local),
                         })
                         if self.journal is not None:
                             self.journal.append("snapshot", lane=lane, step=local,
@@ -1099,6 +1217,12 @@ class PopulationTrial:
                             starts[lane] = s - local
                             resumed_at[lane] = local
                             self.resumed_from_steps.append(local)
+                            if "data_cursor" in meta:
+                                # restore the lane's data cursor too: the ring
+                                # (and the in-scan cursors) replay the stream
+                                # from exactly the snapshot's position
+                                base_data[lane] = int(
+                                    meta["data_cursor"]) - local
                             base_sched = int(meta.get("applied0", 0))
                             if self.journal is not None:
                                 self.journal.append(
@@ -1229,6 +1353,14 @@ class PopulationTrial:
             if php_dirty:
                 php = stack_hparams(hps)
                 s_lo, s_hi = (jnp.asarray(w) for w in split_streams(streams))
+                if ring is not None:
+                    # lane table changed: re-key the ring so lane i's slab at
+                    # global step s' is its own stream at base_data + s' -
+                    # starts (idle lanes fill from their sentinel stream —
+                    # masked lanes never apply those batches)
+                    offs = [int(base_data[i] - starts[i])
+                            if handles[i] is not None else 0 for i in range(k)]
+                    ring.set_lanes(streams, offs, at_step=s)
             if not live:
                 # 3) flight idle: linger briefly for late proposals (Algorithm 1
                 # may be mid-callback), then return the lanes
@@ -1263,6 +1395,13 @@ class PopulationTrial:
             # instead of one (plus K host-built batches) per step; chunk
             # boundaries land exactly on the event step.
             t = planner.chunk_to(s, next_event)
+            if ring is not None:
+                # chunk horizons stay capped to filled windows: block until
+                # the host has staged exactly this chunk (counted as
+                # ring_fill_wait_s) instead of shrinking the chunk — a
+                # different chunk split would reorder result arrival under a
+                # stateful proposer and break engine score-equivalence
+                ring.wait_filled(s, t)
             if device_active:
                 # rule-carrying scan (any t >= 1): budgets ride as scan state,
                 # rung cuts / window verdicts land in-scan, and the emitted
@@ -1315,6 +1454,14 @@ class PopulationTrial:
                                 lineage[lane], lane_round[lane],
                                 bool(vbottom[lane]), float(vlo[lane]),
                                 float(vhi[lane]))
+            elif t > 1 and ring is not None:
+                # ring-fed fused scan: slabs for steps [s, s+t) are already on
+                # device (wait_filled capped t), so the per-lane cursors ride
+                # in the ring contents, not in traced stream words
+                with ring.reserve() as slots:
+                    pstate, _ = ring_scan_of(t)(
+                        pstate, php, slots,
+                        jnp.asarray(s % ring.capacity, jnp.int32))
             elif t > 1:
                 steps0 = np.zeros(k, np.int64)
                 for i in range(k):
@@ -1332,6 +1479,10 @@ class PopulationTrial:
             self.n_dispatches += 1
             self.n_train_steps += t
             s += t
+            if ring is not None:
+                ring.consume_to(s)
+        if ring is not None:
+            self._absorb_ring(ring)
         self.last_flight_steps = s
         return []
 
@@ -1411,10 +1562,15 @@ def run_pbt_serial(trial: PopulationTrial, proposer) -> dict:
                 base_sched = 0
             hp = trial._hparams(cfg, base_sched + n_steps)
             base_data = r * n_steps
+            from ..data.pipeline import HostPrefetcher
+
+            feed = HostPrefetcher(
+                lambda t: data.make_batch(base_data + t, stream=stream))
             loss, n_applied = float("inf"), 0
             for t in range(n_steps):
-                state, metrics = step_fn(
-                    state, data.make_batch(base_data + t, stream=stream), hp)
+                state, metrics = step_fn(state, feed.pop(t), hp)
+                if t + 1 < n_steps:
+                    feed.prefetch(t + 1)
                 loss = float(metrics["loss"])
                 if not np.isfinite(loss):
                     break
@@ -1526,6 +1682,24 @@ def main(argv=None) -> int:
                         "way once the proposal feed drains.  Resharding "
                         "changes layout, never math: per-trial scores "
                         "reproduce the fixed-width run")
+    p.add_argument("--data-ring", action="store_true",
+                   help="with --vectorize and --chunk-steps T > 1: feed the "
+                        "fused scans from a device-resident prefetch ring "
+                        "(repro.data.ring) host-filled ahead of the consumer "
+                        "instead of in-scan batch synthesis — the path real "
+                        "host datasets take into the chunked engine.  The "
+                        "default synth-backed fill reproduces the in-scan "
+                        "engine's scores bit-for-bit; telemetry lands in the "
+                        "CLI JSON (ring_fill_wait_s, overlap_frac)")
+    p.add_argument("--ring-windows", type=int, default=2, metavar="W",
+                   help="with --data-ring: prefetch depth in chunk-windows "
+                        "(>= 2; 2 = classic double buffering — one window "
+                        "training, one filling)")
+    p.add_argument("--fused-rmsnorm", action="store_true",
+                   help="run the Pallas rmsnorm kernel (interpret mode off "
+                        "TPU) inside the train step instead of the reference "
+                        "norm — the kernel-revival path for the population "
+                        "engines")
     p.add_argument("--per-trial-init", action="store_true",
                    help="fold each trial's stream/job id into its init PRNG "
                         "key so trials start from distinct weights (serial and "
@@ -1651,6 +1825,23 @@ def main(argv=None) -> int:
             p.error("--elastic-regrid is incompatible with --pbt-streaming: "
                     "keep/clone directives pin members to lanes a regrid "
                     "reindexes")
+    if args.data_ring:
+        if args.vectorize <= 0 or args.chunk_steps <= 1:
+            p.error("--data-ring feeds the fused scans; it requires "
+                    "--vectorize K and --chunk-steps T > 1")
+        if args.shared_stream:
+            p.error("--data-ring fills per-lane slabs; drop --shared-stream")
+        if args.device_rules:
+            p.error("--data-ring is incompatible with --device-rules: the "
+                    "rule-carrying scan synthesizes its own batches (in-scan "
+                    "cursors ride the rule state)")
+        if args.elastic_regrid:
+            p.error("--data-ring is incompatible with --elastic-regrid: the "
+                    "ring's lane axis is K-shaped, a regrid changes K "
+                    "mid-flight")
+        if args.ring_windows < 2:
+            p.error("--ring-windows must be >= 2 (one window training, one "
+                    "filling)")
     per_trial_streams = not args.shared_stream
     # lane-snapshot store: armed when snapshots are being taken OR when a
     # resume may need to restore lanes a previous run persisted
@@ -1675,20 +1866,25 @@ def main(argv=None) -> int:
                                 snapshot_every=args.snapshot_every,
                                 snapshots=snap_store,
                                 device_rules=args.device_rules,
-                                elastic_regrid=args.elastic_regrid)
+                                elastic_regrid=args.elastic_regrid,
+                                data_ring=args.data_ring,
+                                ring_windows=args.ring_windows,
+                                fused_rmsnorm=args.fused_rmsnorm)
     elif args.legacy_recompile:
         trial = make_trial(args.arch, args.steps, args.batch, args.seq, args.seed)
     else:
         trial = PopulationTrial(args.arch, args.steps, args.batch, args.seq,
                                 args.seed, per_trial_streams=per_trial_streams,
-                                per_trial_init=args.per_trial_init)
+                                per_trial_init=args.per_trial_init,
+                                fused_rmsnorm=args.fused_rmsnorm)
     # the stored CLI geometry is what --resume rebuilds the trial from
     exp_cfg["cli"] = {k: getattr(args, k) for k in (
         "arch", "steps", "batch", "seq", "seed", "vectorize",
         "shard_population", "chunk_steps", "per_trial_init", "shared_stream",
         "lane_refill", "inflight_stop", "snapshot_every", "snapshot_dir",
         "legacy_recompile", "pbt_streaming", "pbt_async", "device_rules",
-        "elastic_regrid", "max_flight_restarts")}
+        "elastic_regrid", "data_ring", "ring_windows", "fused_rmsnorm",
+        "max_flight_restarts")}
     t0 = time.time()
     if resume_db is not None:
         exp = Experiment.resume(resume_db, trial, exp_id=resume_exp_id)
@@ -1717,6 +1913,7 @@ def main(argv=None) -> int:
         "arch": args.arch,
         "engine": engine + ("+refill" if args.lane_refill else "")
                          + ("+chunked" if args.chunk_steps > 1 else "")
+                         + ("+ring" if args.data_ring else "")
                          + ("+devrules" if args.device_rules else "")
                          + ("+elastic" if args.elastic_regrid else ""),
         "vectorize": args.vectorize,
@@ -1726,12 +1923,25 @@ def main(argv=None) -> int:
     if args.elastic_regrid:
         out["regrids"] = trial.n_regrids
         out["lane_width_history"] = trial.lane_width_history
-    if args.vectorize > 0 and getattr(trial, "n_train_steps", 0):
+    if args.vectorize > 0:
+        # always emitted for the population engines: a zero-budget /
+        # all-quarantined flight reports its dispatch count with a null
+        # ratio instead of dividing by zero (or silently dropping the block)
+        trained = int(getattr(trial, "n_train_steps", 0))
         out["chunk_steps"] = args.chunk_steps
-        out["device_dispatches"] = trial.n_dispatches
-        out["trained_steps"] = trial.n_train_steps
-        out["dispatches_per_step"] = round(
-            trial.n_dispatches / trial.n_train_steps, 3)
+        out["device_dispatches"] = getattr(trial, "n_dispatches", 0)
+        out["trained_steps"] = trained
+        out["dispatches_per_step"] = (
+            round(trial.n_dispatches / trained, 3) if trained else None)
+    if args.data_ring:
+        out["ring_windows"] = args.ring_windows
+        out["ring_fills"] = trial.n_ring_fills
+        out["ring_invalidations"] = trial.n_ring_invalidations
+        out["ring_fill_wait_s"] = round(trial.ring_fill_wait_s, 4)
+        out["ring_fill_busy_s"] = round(trial.ring_fill_busy_s, 4)
+        out["overlap_frac"] = round(trial.ring_overlap_frac, 4)
+    if args.fused_rmsnorm:
+        out["fused_rmsnorm"] = True
     if getattr(trial, "early_stop", None) is not None:
         out["inflight_truncated_lanes"] = trial.early_stop.n_truncated
         out["inflight_reclaimed_diverged_lanes"] = trial.early_stop.n_reclaimed

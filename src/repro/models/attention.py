@@ -156,7 +156,7 @@ def _mla_qkc(p, x, cfg, positions):
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
     ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
     c, k_rope = ckv[..., :r], ckv[..., r:]
-    c = apply_rmsnorm(c, p["kv_norm"], cfg.norm_eps)
+    c = apply_rmsnorm(c, p["kv_norm"], cfg.norm_eps, fused=cfg.fused_rmsnorm)
     k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
     return q_nope, q_rope, c, k_rope
 

@@ -46,8 +46,9 @@ def rmsnorm_specs() -> Tuple:
     return (None,)
 
 
-def apply_rmsnorm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
-    return ops.rmsnorm(x, gamma, eps=eps)
+def apply_rmsnorm(x: jax.Array, gamma: jax.Array, eps: float,
+                  fused: bool = False) -> jax.Array:
+    return ops.rmsnorm(x, gamma, eps=eps, fused=fused)
 
 
 # -- embedding / unembedding ----------------------------------------------------------

@@ -124,7 +124,7 @@ def param_specs(cfg: ModelConfig) -> Specs:
 def _layer_apply(
     lp: Params, x: jax.Array, mixer: str, ffn: str, cfg: ModelConfig, positions: jax.Array
 ) -> Tuple[jax.Array, jax.Array]:
-    h = apply_rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    h = apply_rmsnorm(x, lp["norm1"], cfg.norm_eps, fused=cfg.fused_rmsnorm)
     if mixer == "mamba":
         h = mam.mamba_apply(lp["mixer"], h, cfg)
     elif mixer == "attn_mla":
@@ -132,18 +132,18 @@ def _layer_apply(
     else:
         h = attn.gqa_apply(lp["mixer"], h, cfg, positions, local=(mixer == "attn_local"))
     if cfg.post_norm:
-        h = apply_rmsnorm(h, lp["norm1_post"], cfg.norm_eps)
+        h = apply_rmsnorm(h, lp["norm1_post"], cfg.norm_eps, fused=cfg.fused_rmsnorm)
     x = x + h
     x = constrain(x, ("batch", "act_seq", "act_embed"))
     aux = jnp.zeros((), jnp.float32)
     if ffn != "none":
-        h = apply_rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        h = apply_rmsnorm(x, lp["norm2"], cfg.norm_eps, fused=cfg.fused_rmsnorm)
         if ffn == "moe":
             h, aux = moem.moe_apply(lp["ffn"], h, cfg)
         else:
             h = mlpm.mlp_apply(lp["ffn"], h, cfg)
         if cfg.post_norm:
-            h = apply_rmsnorm(h, lp["norm2_post"], cfg.norm_eps)
+            h = apply_rmsnorm(h, lp["norm2_post"], cfg.norm_eps, fused=cfg.fused_rmsnorm)
         x = x + h
         x = constrain(x, ("batch", "act_seq", "act_embed"))
     return x, aux
@@ -199,7 +199,7 @@ def forward(
 
     if last_only:
         x = x[:, -1:]
-    x = apply_rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    x = apply_rmsnorm(x, params["final_norm"], cfg.norm_eps, fused=cfg.fused_rmsnorm)
     logits = unembed(params["embedding"], x, cfg)
     logits = constrain(logits, ("batch", "act_seq", "vocab"))
     return logits, aux
@@ -253,7 +253,7 @@ def cache_specs(cfg: ModelConfig) -> Specs:
 def _layer_decode(
     lp: Params, x, cache, pos, mixer: str, ffn: str, cfg: ModelConfig
 ) -> Tuple[jax.Array, Params]:
-    h = apply_rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    h = apply_rmsnorm(x, lp["norm1"], cfg.norm_eps, fused=cfg.fused_rmsnorm)
     if mixer == "mamba":
         h, new_cache = mam.mamba_decode(lp["mixer"], h, cache, cfg)
     elif mixer == "attn_mla":
@@ -263,16 +263,16 @@ def _layer_decode(
             lp["mixer"], h, cache, pos, cfg, local=(mixer == "attn_local")
         )
     if cfg.post_norm:
-        h = apply_rmsnorm(h, lp["norm1_post"], cfg.norm_eps)
+        h = apply_rmsnorm(h, lp["norm1_post"], cfg.norm_eps, fused=cfg.fused_rmsnorm)
     x = x + h
     if ffn != "none":
-        h = apply_rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        h = apply_rmsnorm(x, lp["norm2"], cfg.norm_eps, fused=cfg.fused_rmsnorm)
         if ffn == "moe":
             h, _ = moem.moe_apply(lp["ffn"], h, cfg, dropless=True)  # decode: never drop
         else:
             h = mlpm.mlp_apply(lp["ffn"], h, cfg)
         if cfg.post_norm:
-            h = apply_rmsnorm(h, lp["norm2_post"], cfg.norm_eps)
+            h = apply_rmsnorm(h, lp["norm2_post"], cfg.norm_eps, fused=cfg.fused_rmsnorm)
         x = x + h
     return x, new_cache
 
@@ -298,7 +298,7 @@ def decode_step(
         return x, new_sc
 
     x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
-    x = apply_rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    x = apply_rmsnorm(x, params["final_norm"], cfg.norm_eps, fused=cfg.fused_rmsnorm)
     logits = unembed(params["embedding"], x, cfg)
     new_cache: Params = {"blocks": new_blocks}
     if cfg.prefix_pattern:

@@ -659,6 +659,66 @@ def make_sharded_population_scan_step(
     )
 
 
+def make_population_ring_scan_step(
+    tc: TrainConfig, data, chunk: int, capacity: int
+) -> Callable:
+    """``(pstate, hp, ring, slot0) -> (pstate, metrics)``: the fused scan fed
+    from a device-resident prefetch ring instead of in-scan synthesis.
+
+    ``ring`` is the ``repro.data.ring.PrefetchRing`` device array —
+    ``(capacity, K, batch, seq_len+1)`` int32 token slabs, one slab per
+    global step, host-filled ahead of the scan.  Step ``t`` of the chunk
+    reads slot ``(slot0 + t) % capacity`` with ``lax.dynamic_index_in_dim``
+    (``slot0`` is the dispatch step's slot, traced so one program serves
+    every ring phase) and splits it into the batch dict on device; the train
+    step itself — budget/divergence masking included — is identical to the
+    in-scan-synth path, so a ring filled by the host synth adapter reproduces
+    that engine bit-for-bit.  The ring argument is read-only: only the
+    population state donates.
+    """
+    from ..data.pipeline import tokens_to_batch
+
+    step = make_population_train_step(tc, per_trial_batch=True)
+    cap = int(capacity)
+
+    def scan_chunk(pstate: PopState, hp: HParams, ring, slot0):
+        def body(carry, t):
+            slab = jax.lax.dynamic_index_in_dim(
+                ring, (slot0 + t) % cap, 0, keepdims=False)
+            batch = tokens_to_batch(jnp, data, slab)
+            new, metrics = step(carry, batch, hp)
+            return new, metrics
+
+        return jax.lax.scan(
+            body, pstate, jnp.arange(int(chunk), dtype=jnp.int32))
+
+    return scan_chunk
+
+
+def make_sharded_population_ring_scan_step(
+    tc: TrainConfig,
+    mesh: Mesh,
+    data,
+    chunk: int,
+    capacity: int,
+    axis: str = "pop",
+) -> Callable:
+    """``shard_map`` twin of the ring scan: the ring's lane axis is placed on
+    the ``pop`` mesh axis, so each device scans over its own K/N lane block
+    reading only its own lanes' slabs (the host fill ``device_put``s slabs
+    with the same sharding — no gather)."""
+    from jax.experimental.shard_map import shard_map
+
+    fn = make_population_ring_scan_step(tc, data, chunk, capacity)
+    pop = PartitionSpec(axis)
+    return shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(pop, pop, PartitionSpec(None, axis), PartitionSpec()),
+        out_specs=(pop, PartitionSpec(None, axis)),
+    )
+
+
 def make_sharded_population_step(
     tc: TrainConfig,
     mesh: Mesh,
@@ -1134,6 +1194,46 @@ def get_compiled_population_scan_step(
                 built = make_sharded_population_scan_step(
                     tc, mesh, data, chunk,
                     per_trial_batch=per_trial_batch, axis=axis)
+            fn = jax.jit(built, donate_argnums=0)
+            _POP_CACHE[key] = fn
+    return fn
+
+
+def get_compiled_population_ring_scan_step(
+    tc: TrainConfig,
+    population: int,
+    data,
+    chunk: int,
+    capacity: int,
+    mesh: Optional[Mesh] = None,
+    axis: str = "pop",
+):
+    """Memoized jitted ring-fed fused scan (``--data-ring``) — the seventh
+    entry in the compiled-program family.
+
+    Keyed like the in-scan-synth programs plus the ring capacity (the slot
+    modulus is baked in) under the ``"ringscan"`` marker.  Only the
+    population state donates — the ring buffer is owned and rotated by the
+    fill thread, never by the scan.
+    """
+    if mesh is not None and population % mesh.size:
+        raise ValueError(
+            f"population {population} does not divide over {mesh.size} devices; "
+            f"pad to {pad_population(population, mesh)} with 0-budget trials"
+        )
+    key = (
+        static_step_key(tc), int(population), "ringscan", int(chunk),
+        int(capacity), data.spec_key,
+    ) + ((tuple(d.id for d in mesh.devices.flat), axis) if mesh is not None else ())
+    with _POP_CACHE_LOCK:
+        fn = _POP_CACHE.get(key)
+        if fn is None:
+            if mesh is None:
+                built = make_population_ring_scan_step(
+                    tc, data, chunk, capacity)
+            else:
+                built = make_sharded_population_ring_scan_step(
+                    tc, mesh, data, chunk, capacity, axis=axis)
             fn = jax.jit(built, donate_argnums=0)
             _POP_CACHE[key] = fn
     return fn

@@ -46,18 +46,21 @@ def rung_hook():
                                      max_iter=MAX_ITER)
 
 
-def _trial(chunk, device):
+def _trial(chunk, device, ring=False):
     return PopulationTrial(ARCH, steps=STEPS_PER_UNIT, batch=BATCH, seq=SEQ,
                            seed=0, population=LANES, early_stop=rung_hook(),
                            refill_idle_grace_s=0.0, chunk_steps=chunk,
-                           device_rules=device)
+                           device_rules=device, data_ring=ring,
+                           ring_windows=2)
 
 
-def run_batch_cell(cfgs, chunk=1, device=False, mesh=None):
+def run_batch_cell(cfgs, chunk=1, device=False, mesh=None, ring=False):
     """Batch protocol: one synchronized flight, cohort rung rule
     (``InFlightSuccessiveHalving.__call__`` on host, ``cohort_rule_update``
-    in-scan with ``device=True``)."""
-    trial = _trial(chunk, device)
+    in-scan with ``device=True``).  ``ring=True`` feeds the fused scans from
+    the host-filled prefetch ring (``--data-ring``) — the host synth adapter
+    must reproduce the in-scan synthesis exactly."""
+    trial = _trial(chunk, device, ring=ring)
     scores = trial.run_population(list(cfgs), mesh=mesh)
     return {
         "scores": scores,
@@ -65,13 +68,15 @@ def run_batch_cell(cfgs, chunk=1, device=False, mesh=None):
         "n_reclaimed": trial.early_stop.n_reclaimed,
         "dispatches": trial.n_dispatches,
         "train_steps": trial.n_train_steps,
+        "ring_fills": trial.n_ring_fills,
+        "overlap_frac": trial.ring_overlap_frac,
     }
 
 
-def run_streaming_cell(cfgs, chunk=1, device=False, mesh=None):
+def run_streaming_cell(cfgs, chunk=1, device=False, mesh=None, ring=False):
     """Streaming protocol: lane-refill flight fed by a fixed queue, staggered
     rung rule (``observe`` on host, ``staggered_rule_update`` in-scan)."""
-    trial = _trial(chunk, device)
+    trial = _trial(chunk, device, ring=ring)
     feed = QueueFeedScheduler(list(cfgs))
     trial.run_population([], mesh=mesh, scheduler=feed)
     n = len(cfgs)
@@ -84,6 +89,8 @@ def run_streaming_cell(cfgs, chunk=1, device=False, mesh=None):
         "n_reclaimed": trial.early_stop.n_reclaimed,
         "dispatches": trial.n_dispatches,
         "train_steps": trial.n_train_steps,
+        "ring_fills": trial.n_ring_fills,
+        "overlap_frac": trial.ring_overlap_frac,
     }
 
 

@@ -454,3 +454,40 @@ def test_cli_sigkill_then_resume_is_score_equivalent(tmp_path):
     assert set(a) == set(b)
     worst = max(abs(a[k] - b[k]) for k in a)
     assert worst <= 1e-6, f"kill+resume diverged from uninterrupted: {worst}"
+
+
+def test_cli_sigkill_mid_window_then_resume_restores_ring_cursors(tmp_path):
+    """The ring-fed flight (``--data-ring``) dies mid-window and resumes:
+    lane snapshots carry each lane's data cursor, so the restored flight
+    re-keys the prefetch ring mid-stream and reproduces the uninterrupted
+    ring run's scores exactly — the host feed position is part of the
+    crash-safe state, not just the weights."""
+    ring = ["--chunk-steps", "8", "--data-ring"]
+    base = _hpo_cli(tmp_path, str(tmp_path / "base.sqlite"),
+                    ring + ["--snapshot-every", "1"])
+    assert base.returncode == 0, base.stderr[-2000:]
+
+    db = str(tmp_path / "t.sqlite")
+    killed = _hpo_cli(tmp_path, db, ring + ["--snapshot-every", "1"],
+                      env_extra={faultinject.ENV_VAR: "kill@event=3"})
+    assert killed.returncode in (-signal.SIGKILL, 128 + signal.SIGKILL), \
+        f"expected SIGKILL, got rc={killed.returncode}\n{killed.stderr[-2000:]}"
+    assert os.path.isdir(db + ".lanes"), "no lane snapshots persisted"
+
+    resumed = _hpo_cli(tmp_path, db, ring + ["--resume"])
+    assert resumed.returncode == 0, resumed.stderr[-2000:]
+    out = json.loads(resumed.stdout[resumed.stdout.index("{"):])
+    assert out["resumed"] is True
+    assert out["resumed_lanes"] >= 1
+    assert max(out["resumed_from_steps"]) > 0, \
+        "resumed lanes restarted from step 0 instead of their snapshots"
+    assert out["engine"].endswith("+ring"), out["engine"]
+    assert out["ring_fills"] >= 1
+    assert 0.0 <= out["overlap_frac"] <= 1.0
+
+    a = _scores_by_stream(str(tmp_path / "base.sqlite"))
+    b = _scores_by_stream(db)
+    assert set(a) == set(b)
+    worst = max(abs(a[k] - b[k]) for k in a)
+    assert worst <= 1e-6, \
+        f"ring kill+resume diverged from uninterrupted: {worst}"

@@ -1,0 +1,368 @@
+"""Device-resident prefetch ring (``repro.data.ring``) and its host adapters.
+
+Unit level: the ``HostDataset`` adapters (synth oracle + array-backed), the
+serial ``HostPrefetcher``, the ring's fill/consume fence protocol, and the
+ring scan's bit-equality against the in-scan-synth engine — vmapped and
+sharded.  The driver-level equivalences (full flights through ``--data-ring``)
+live in ``test_engine_matrix.py`` and ``test_crash_safety.py``.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import (
+    ArrayHostDataset,
+    HostPrefetcher,
+    SynthHostDataset,
+    SyntheticLM,
+    synth_population_batch,
+    split_streams,
+)
+from repro.data.ring import PrefetchRing
+from repro.optim.hparams import hparams_from_dict, stack_hparams
+from repro.train.population import (
+    init_population_state,
+    make_population_ring_scan_step,
+    make_population_scan_step,
+)
+
+SEQ, BATCH, K = 16, 2, 4
+
+
+def _spec():
+    return SyntheticLM(vocab_size=256, seq_len=SEQ, global_batch=BATCH)
+
+
+def _tc():
+    cfg = get_smoke_config("starcoder2-3b")
+    return TrainConfig(model=cfg, total_steps=8)
+
+
+# -- host adapters ---------------------------------------------------------------
+
+
+def test_synth_host_dataset_matches_in_scan_synthesis():
+    """The bit-equality oracle: ``SynthHostDataset.lane_block`` under NumPy
+    must produce exactly the token slab ``synth_population_batch`` computes
+    under XLA for the same (stream, step) coordinates."""
+    spec = _spec()
+    ds = SynthHostDataset(spec)
+    streams = [3, 11, -5, 7]
+    steps = [0, 4, 9, 2]
+    block = ds.lane_block(streams, steps)
+    assert block.shape == (4, BATCH, SEQ + 1)
+    assert block.dtype == np.int32
+    lo, hi = split_streams(streams)
+    want = synth_population_batch(
+        spec, jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(steps, jnp.int32), xp=jnp)
+    np.testing.assert_array_equal(block[:, :, :-1],
+                                  np.asarray(want["tokens"]))
+    np.testing.assert_array_equal(block[:, :, 1:],
+                                  np.asarray(want["targets"]))
+
+
+def test_array_host_dataset_reads_consecutive_rows():
+    n, stride = 64, 997
+    toks = np.arange(n * (SEQ + 1), dtype=np.int32).reshape(n, SEQ + 1)
+    ds = ArrayHostDataset(toks, global_batch=BATCH)
+    block = ds.lane_block([0, 1], [0, 2])
+    assert block.shape == (2, BATCH, SEQ + 1)
+    np.testing.assert_array_equal(block[0], toks[:BATCH])
+    start = (stride + 2 * BATCH) % n
+    np.testing.assert_array_equal(
+        block[1], toks[(start + np.arange(BATCH)) % n])
+
+
+@pytest.mark.parametrize("make_ds", [
+    lambda: SynthHostDataset(_spec()),
+    lambda: ArrayHostDataset(
+        np.arange(64 * (SEQ + 1), dtype=np.int32).reshape(64, SEQ + 1),
+        global_batch=BATCH),
+], ids=["synth", "array"])
+def test_lane_window_bit_equals_stacked_lane_blocks(make_ds):
+    """The ring's fill thread prefers the one-call vectorized window build;
+    it must produce exactly the bytes of n stacked ``lane_block`` calls."""
+    ds = make_ds()
+    streams = [3, 11, -5, 7]
+    steps = [0, 4, 9, 2]
+    n = 5
+    got = ds.lane_window(streams, np.asarray(steps, np.int64), n)
+    want = np.stack([
+        ds.lane_block(streams, [s + t for s in steps]) for t in range(n)])
+    assert got.shape == (n, len(streams), BATCH, SEQ + 1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_array_host_dataset_wraps_around():
+    n = 5  # not a multiple of the batch: forces wraparound reads
+    toks = np.arange(n * (SEQ + 1), dtype=np.int32).reshape(n, SEQ + 1)
+    ds = ArrayHostDataset(toks, global_batch=BATCH)
+    for step in range(7):
+        block = ds.lane_block([0], [step])
+        start = (step * BATCH) % n
+        np.testing.assert_array_equal(
+            block[0], toks[(start + np.arange(BATCH)) % n])
+
+
+# -- serial prefetcher -----------------------------------------------------------
+
+
+def test_host_prefetcher_returns_identical_batches():
+    spec = _spec()
+    feed = HostPrefetcher(lambda s: spec.make_batch(s, stream=5))
+    for s in range(6):
+        got = feed.pop(s)
+        if s + 1 < 6:
+            feed.prefetch(s + 1)
+        want = spec.make_batch(s, stream=5)
+        for key in want:
+            np.testing.assert_array_equal(np.asarray(got[key]),
+                                          np.asarray(want[key]))
+
+
+def test_host_prefetcher_tolerates_step_mismatch():
+    spec = _spec()
+    feed = HostPrefetcher(lambda s: spec.make_batch(s, stream=5))
+    feed.prefetch(3)  # staged for the wrong step
+    got = feed.pop(7)
+    want = spec.make_batch(7, stream=5)
+    np.testing.assert_array_equal(np.asarray(got["tokens"]),
+                                  np.asarray(want["tokens"]))
+
+
+# -- ring fence protocol ---------------------------------------------------------
+
+
+def test_ring_fills_ahead_and_blocks_at_capacity():
+    spec = _spec()
+    ring = PrefetchRing(SynthHostDataset(spec), population=K, win_steps=4,
+                        windows=2)
+    try:
+        ring.set_lanes(list(range(K)), [0] * K, at_step=0)
+        assert ring.wait_filled(0, 8) == 8  # both windows fill unprompted
+        deadline = time.time() + 2.0
+        while ring.n_fills < 2 and time.time() < deadline:
+            time.sleep(0.01)
+        assert ring.n_fills == 2, "filler must stop at capacity, not spin"
+        ring.consume_to(4)  # frees one window
+        assert ring.wait_filled(4, 8) == 8
+    finally:
+        ring.stop()
+
+
+def test_ring_set_lanes_invalidates_prefetched_windows():
+    spec = _spec()
+    ring = PrefetchRing(SynthHostDataset(spec), population=K, win_steps=2,
+                        windows=2)
+    try:
+        ring.set_lanes(list(range(K)), [0] * K, at_step=0)
+        ring.wait_filled(0, 4)
+        assert ring.n_invalidations == 0
+        ring.set_lanes(list(range(K, 2 * K)), [3] * K, at_step=2)
+        assert ring.n_invalidations == 1
+        ring.wait_filled(2, 2)
+        with ring.reserve() as slots:
+            got = np.asarray(slots)[2 % ring.capacity]
+        want = SynthHostDataset(spec).lane_block(
+            list(range(K, 2 * K)), [3 + 2] * K)
+        np.testing.assert_array_equal(got, want)
+    finally:
+        ring.stop()
+
+
+def test_ring_set_lanes_same_table_keeps_prefetch():
+    """Re-keying with an UNCHANGED lane table (hp-only event boundaries)
+    must be a no-op: no invalidation, prefetched windows kept."""
+    spec = _spec()
+    ring = PrefetchRing(SynthHostDataset(spec), population=K, win_steps=2,
+                        windows=2)
+    try:
+        streams = list(range(K))
+        ring.set_lanes(streams, [0] * K, at_step=0)
+        ring.wait_filled(0, 4)
+        fills = ring.n_fills
+        ring.set_lanes(streams, [0] * K, at_step=2)
+        assert ring.n_invalidations == 0
+        assert ring.wait_filled(2, 2) >= 2  # still filled, no refill wait
+        assert ring.n_fills == fills
+    finally:
+        ring.stop()
+
+
+def test_ring_stop_unblocks_waiters():
+    spec = _spec()
+    ring = PrefetchRing(SynthHostDataset(spec), population=K, win_steps=2,
+                        windows=2)
+    errs = []
+
+    def waiter():
+        try:
+            ring.wait_filled(10_000)  # lanes never set: would block forever
+        except RuntimeError as e:
+            errs.append(e)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    ring.stop()
+    t.join(timeout=5.0)
+    assert not t.is_alive() and len(errs) == 1
+
+
+def test_ring_fill_errors_propagate_to_consumer():
+    class Broken:
+        seq_len, global_batch = SEQ, BATCH
+
+        def lane_block(self, streams, steps):
+            raise ValueError("boom")
+
+    ring = PrefetchRing(Broken(), population=K, win_steps=2, windows=2)
+    try:
+        ring.set_lanes(list(range(K)), [0] * K, at_step=0)
+        with pytest.raises(RuntimeError, match="ring fill failed"):
+            ring.wait_filled(0)
+    finally:
+        ring.stop()
+
+
+def test_ring_overlap_frac_bounds():
+    spec = _spec()
+    ring = PrefetchRing(SynthHostDataset(spec), population=K, win_steps=2,
+                        windows=2)
+    try:
+        assert ring.overlap_frac == 1.0  # no fills yet
+        ring.set_lanes(list(range(K)), [0] * K, at_step=0)
+        ring.wait_filled(0, 4)
+        assert 0.0 <= ring.overlap_frac <= 1.0
+    finally:
+        ring.stop()
+
+
+# -- ring scan vs in-scan synthesis ----------------------------------------------
+
+
+def _population(tc, k):
+    pstate = init_population_state(jax.random.PRNGKey(0), tc, k)
+    hp = stack_hparams([hparams_from_dict(
+        {"learning_rate": 1e-3, "n_iterations": 8}, tc)] * k)
+    return pstate, hp
+
+
+def test_ring_scan_bit_equals_in_scan_synth_across_wraparound():
+    """Two chunks through the ring — the second wraps the ring — must leave
+    the population state bit-identical to the in-scan-synth fused scan."""
+    tc = _tc()
+    spec = SyntheticLM(vocab_size=tc.model.vocab_size, seq_len=SEQ,
+                       global_batch=BATCH)
+    chunk = 4
+    streams = [2, 9, -3, 15]
+    lo, hi = (jnp.asarray(w) for w in split_streams(streams))
+
+    pstate_a, hp = _population(tc, K)
+    scan = jax.jit(make_population_scan_step(tc, spec, chunk),
+                   donate_argnums=0)
+    for c in range(2):
+        steps0 = jnp.full((K,), c * chunk, jnp.int32)
+        pstate_a, _ = scan(pstate_a, hp, steps0, lo, hi)
+
+    pstate_b, hp = _population(tc, K)
+    ring = PrefetchRing(SynthHostDataset(spec), population=K,
+                        win_steps=chunk, windows=2)
+    try:
+        ring.set_lanes(streams, [0] * K, at_step=0)
+        rscan = jax.jit(
+            make_population_ring_scan_step(tc, spec, chunk, ring.capacity),
+            donate_argnums=0)
+        for c in range(2):
+            s = c * chunk
+            ring.wait_filled(s, chunk)
+            with ring.reserve() as slots:
+                pstate_b, _ = rscan(pstate_b, hp, slots,
+                                    jnp.asarray(s % ring.capacity, jnp.int32))
+            ring.consume_to(s + chunk)
+        assert ring.n_fills >= 2
+    finally:
+        ring.stop()
+
+    for la, lb in zip(jax.tree_util.tree_leaves(pstate_a),
+                      jax.tree_util.tree_leaves(pstate_b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs a multi-device (virtual CPU) mesh")
+def test_sharded_ring_scan_matches_vmapped():
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.distributed.sharding import population_mesh
+    from repro.train.population import (
+        make_sharded_population_ring_scan_step, shard_population_state)
+
+    tc = _tc()
+    k = jax.device_count()
+    spec = SyntheticLM(vocab_size=tc.model.vocab_size, seq_len=SEQ,
+                       global_batch=BATCH)
+    chunk = 4
+    streams = list(range(1, k + 1))
+    mesh = population_mesh()
+
+    pstate_v, hp = _population(tc, k)
+    ring = PrefetchRing(SynthHostDataset(spec), population=k,
+                        win_steps=chunk, windows=2)
+    try:
+        ring.set_lanes(streams, [0] * k, at_step=0)
+        rscan = jax.jit(
+            make_population_ring_scan_step(tc, spec, chunk, ring.capacity),
+            donate_argnums=0)
+        ring.wait_filled(0, chunk)
+        with ring.reserve() as slots:
+            pstate_v, _ = rscan(pstate_v, hp, slots,
+                                jnp.asarray(0, jnp.int32))
+    finally:
+        ring.stop()
+
+    pstate_s, hp = _population(tc, k)
+    pstate_s = shard_population_state(pstate_s, mesh)
+    sharding = NamedSharding(mesh, PartitionSpec(None, "pop", None, None))
+    ring = PrefetchRing(SynthHostDataset(spec), population=k,
+                        win_steps=chunk, windows=2, sharding=sharding)
+    try:
+        ring.set_lanes(streams, [0] * k, at_step=0)
+        sscan = jax.jit(
+            make_sharded_population_ring_scan_step(
+                tc, mesh, spec, chunk, ring.capacity),
+            donate_argnums=0)
+        ring.wait_filled(0, chunk)
+        with ring.reserve() as slots:
+            pstate_s, _ = sscan(pstate_s, hp, slots,
+                                jnp.asarray(0, jnp.int32))
+    finally:
+        ring.stop()
+
+    np.testing.assert_allclose(
+        np.asarray(pstate_s["last_loss"], np.float32),
+        np.asarray(pstate_v["last_loss"], np.float32), atol=1e-6, rtol=0)
+
+
+def test_data_ring_smoke_cli():
+    """The CI smoke entry (`REPRO_RING_SMOKE=1`) runs the heavier CLI with
+    --lane-refill --chunk-steps 8 --data-ring; locally a lighter variant
+    stays always-on."""
+    import os
+
+    from repro.launch.hpo import main
+
+    heavy = os.environ.get("REPRO_RING_SMOKE") == "1"
+    argv = ["--proposer", "asha", "--vectorize", "4", "--inflight-stop",
+            "--lane-refill", "--chunk-steps", "8", "--data-ring",
+            "--n-samples", "6" if heavy else "4",
+            "--steps", "8" if heavy else "4", "--batch", "2", "--seq", "16"]
+    assert main(argv) == 0

@@ -29,16 +29,18 @@ multi_device = pytest.mark.skipif(
     jax.device_count() < 2, reason="needs a multi-device (virtual CPU) mesh"
 )
 
-# (cell name, chunk_steps, device_rules, sharded)
+# (cell name, chunk_steps, device_rules, sharded, data_ring)
 CELLS = [
-    ("vmapped-perstep-host", 1, False, False),
-    ("vmapped-perstep-device", 1, True, False),
-    ("vmapped-chunked-host", 8, False, False),
-    ("vmapped-chunked-device", 8, True, False),
-    ("sharded-perstep-host", 1, False, True),
-    ("sharded-perstep-device", 1, True, True),
-    ("sharded-chunked-host", 8, False, True),
-    ("sharded-chunked-device", 8, True, True),
+    ("vmapped-perstep-host", 1, False, False, False),
+    ("vmapped-perstep-device", 1, True, False, False),
+    ("vmapped-chunked-host", 8, False, False, False),
+    ("vmapped-chunked-device", 8, True, False, False),
+    ("vmapped-chunked-ring", 8, False, False, True),
+    ("sharded-perstep-host", 1, False, True, False),
+    ("sharded-perstep-device", 1, True, True, False),
+    ("sharded-chunked-host", 8, False, True, False),
+    ("sharded-chunked-device", 8, True, True, False),
+    ("sharded-chunked-ring", 8, False, True, True),
 ]
 REFERENCE = "vmapped-perstep-host"
 VMAPPED = [c[0] for c in CELLS if not c[3] and c[0] != REFERENCE]
@@ -55,14 +57,14 @@ def cells(cfgs):
     """Every matrix cell, computed once: ``cells[protocol][name]``."""
     mesh = population_mesh() if jax.device_count() > 1 else None
     out = {"batch": {}, "streaming": {}}
-    for name, chunk, device, sharded in CELLS:
+    for name, chunk, device, sharded, ring in CELLS:
         if sharded and mesh is None:
             continue
         m = mesh if sharded else None
         out["batch"][name] = run_batch_cell(
-            cfgs, chunk=chunk, device=device, mesh=m)
+            cfgs, chunk=chunk, device=device, mesh=m, ring=ring)
         out["streaming"][name] = run_streaming_cell(
-            cfgs, chunk=chunk, device=device, mesh=m)
+            cfgs, chunk=chunk, device=device, mesh=m, ring=ring)
     return out
 
 
@@ -126,6 +128,19 @@ def test_rule_cuts_actually_fired(cells):
     steps = cells["streaming"][REFERENCE]["steps"]
     assert any(0 < s < 8 for s in steps), \
         "some lane must retire mid-ladder (truncated short of max budget)"
+
+
+# -- prefetch ring: host-fed scans must be indistinguishable ---------------------
+
+
+@pytest.mark.parametrize("protocol", ["batch", "streaming"])
+def test_ring_cell_actually_used_the_ring(cells, protocol):
+    """The ring cells only differentially test the host-fed path if the fill
+    thread really produced windows — a silently disabled ring would pass the
+    bit-equality assertions by running the in-scan engine."""
+    got = cells[protocol]["vmapped-chunked-ring"]
+    assert got["ring_fills"] >= 1
+    assert 0.0 <= got["overlap_frac"] <= 1.0
 
 
 # -- the headline dispatch claim -------------------------------------------------
