@@ -87,6 +87,20 @@ the CPU smoke config:
   tiles the device count), wall-clock beats the fixed-width flight by
   ``ELASTIC_FLOOR``, scores match within ``CHUNKED_SCORE_TOL`` (resharding
   changes layout, never math) and the rung rule truncated the same trials;
+* **tp_width**         — **tensor-parallel population step**
+  (``--model-parallel``): ``TP_LANES`` survivors hold the whole 8-device pod
+  at widths 1 / 2 / 4 on a compute-bound geometry (``TP_D_MODEL`` /
+  ``TP_FF``, well above the smoke config).  Width 1 pads to one lane per
+  device, so most devices burn full-model compute on frozen padding lanes;
+  width W pads to 8/W rows with each live lane's heads and ff dims split W
+  ways behind psum seams.  The virtual devices share the container's single
+  core, so per-step wall-clock tracks TOTAL device compute — the width-2
+  ratio is a direct witness that the model axis *partitions* compute (the
+  pre-TP replicating regrid would time ~1.0x).  Gate: width-2 per-step
+  wall-clock beats width-1 by ``TP_FLOOR``, the lowered width-2 step carries
+  model-axis all-reduces while width-1 carries exactly zero, and the
+  survivors' scores match across widths within ``TP_SCORE_TOL`` (width is
+  layout, never math);
 * **pbt_stream**       — Population-Based Training on the streaming engine
   (``--pbt-streaming``): members live in lanes, exploit is a compiled donor
   clone (``make_lane_clone``) and weights never visit the host — measured
@@ -222,8 +236,33 @@ ELASTIC_UNITS = [1, 1, 1, 1, 2, 2, 8, 8]
 ELASTIC_LR = {1: 1e-5, 2: 1e-3, 8: 2e-3}
 ELASTIC_BATCH = 8
 ELASTIC_SEQ = 64
-# committed 8-virtual-device run shows ~1.5x; the floor absorbs CI timer noise
+# The row's model swaps the smoke GQA geometry (4 heads, kv 2 — TP-degenerate:
+# kv%width blocks attention sharding past width 2) for MHA 8x8 heads, so every
+# pool width the planner picks (2/4/8) shards attention AND the MLP.  Later
+# rungs then run width-local compute on the survivors' rows — what the regrid
+# actually removes — instead of rows of mostly-replicated math.
+ELASTIC_OVERRIDES = {"n_heads": 8, "n_kv_heads": 8, "head_dim": 8}
+# committed 8-virtual-device run shows ~2.3x; the floor absorbs CI timer noise
 ELASTIC_FLOOR = 1.1
+
+# tensor-parallel width row: TP_LANES survivors holding the full 8-device pod
+# at widths 1 / 2 / 4.  Width 1 pads to one lane per device (6 padding lanes
+# burning full-model compute); width W pads to 8/W rows with each live lane's
+# heads/ff split W ways, so total device compute — which IS wall-clock on the
+# single-core container — drops roughly with the padded lane count times the
+# width-local shard fraction.  The floor gates that the model axis carries
+# compute (pure replication would time ~1.0x); scores must not move (width is
+# layout, never math).  Geometry is compute-bound: d_model/ff well above the
+# smoke config so matmuls dominate dispatch.
+TP_LANES = 2
+TP_STEPS = 4
+TP_REPS = 3
+TP_D_MODEL = 256
+TP_FF = 1024
+TP_BATCH = 4
+TP_SEQ = 32
+TP_FLOOR = 1.3
+TP_SCORE_TOL = 1e-5
 
 # streaming PBT vs the generation-barriered serial driver: equal total steps,
 # shared RNG.  The serial baseline runs K*ROUNDS rounds one member at a time
@@ -789,7 +828,7 @@ def _probe_main(argv) -> None:
             arch, CHUNK_UNIT, ELASTIC_BATCH, ELASTIC_SEQ, seed,
             population=population, chunk_steps=CHUNK_STEPS,
             early_stop=_elastic_hook(), refill_idle_grace_s=0.0,
-            elastic_regrid=elastic)
+            elastic_regrid=elastic, model_overrides=ELASTIC_OVERRIDES)
 
     def _fixed_flight():
         trial = _elastic_trial(False)
@@ -814,6 +853,8 @@ def _probe_main(argv) -> None:
         "ladder_units": ELASTIC_UNITS, "budget_unit": CHUNK_UNIT,
         "batch": ELASTIC_BATCH, "seq": ELASTIC_SEQ,
         "chunk_steps": CHUNK_STEPS, "n_devices": n_dev,
+        "model_overrides": ELASTIC_OVERRIDES,
+        "per_rung_step_time_s": etrial.per_rung_step_time_s,
         "fixed_seconds": fixed_s, "elastic_seconds": elastic_s,
         "later_rung_speedup": fixed_s / elastic_s,
         "regrids": etrial.n_regrids,
@@ -828,6 +869,93 @@ def _probe_main(argv) -> None:
             abs(a - b) for a, b in zip(fixed_scores, elastic_scores))),
         "truncated_equal": (ftrial.early_stop.n_truncated
                             == etrial.early_stop.n_truncated),
+    }
+
+    # -- tensor-parallel width: per-step wall-clock for survivors on a full pod
+    # TP_LANES survivors hold the whole 8-device pod.  At width 1 the flight
+    # pads to one lane per device (rows == devices), so 6 of 8 devices burn
+    # full-model compute on frozen padding lanes; at width W the pod regrids
+    # to 8/W rows — fewer padding lanes, each live lane computing on
+    # width-local shards (heads/W, ff/W) with psum seams.  On this container
+    # the virtual devices share one core, so wall-clock tracks TOTAL device
+    # compute: the per-step ratio is therefore a direct witness that the
+    # model axis partitions compute — a replicating model axis (the pre-TP
+    # regrid) would keep every device at full-model cost and time ~1.0x.
+    # The geometry is deliberately compute-bound (bigger d_model/ff than the
+    # smoke config) so matmul work, not dispatch, dominates the step.
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.configs.base import ParallelConfig, TrainConfig
+    from repro.data.pipeline import SyntheticLM
+    from repro.optim.hparams import hparams_from_config, stack_hparams
+
+    jnp = jax.numpy
+    tp_model = dataclasses.replace(
+        get_smoke_config(arch), name=f"{arch}-tpbench",
+        d_model=TP_D_MODEL, head_dim=TP_D_MODEL // 4, d_ff=TP_FF)
+    tp_tc = TrainConfig(model=tp_model, parallel=ParallelConfig(remat="none"),
+                        learning_rate=1e-3, warmup_steps=1,
+                        total_steps=TP_STEPS, seed=seed)
+    tp_data = SyntheticLM(tp_model.vocab_size, TP_SEQ, TP_BATCH, seed=seed)
+    tp_batches = [tp_data.make_batch(s, stream=0) for s in range(TP_STEPS)]
+
+    def _tp_cell(width, count_psums=True):
+        m = population_mesh(width=None if width == 1 else width)
+        k = pop.pad_population(TP_LANES, m)
+        # live lanes carry distinct lrs (a trivial equivalence would not
+        # notice a lane permutation); padding lanes freeze at budget 0
+        php = stack_hparams([
+            hparams_from_config(dataclasses.replace(
+                tp_tc, learning_rate=1e-3 * (1.0 + 0.1 * i),
+                total_steps=TP_STEPS if i < TP_LANES else 0))
+            for i in range(k)])
+        step = pop.get_compiled_sharded_population_step(tp_tc, k, mesh=m)
+
+        def _flight():
+            keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+                jax.random.PRNGKey(seed),
+                jnp.arange(k, dtype=jnp.uint32))
+            st = pop.shard_population_state(
+                pop.init_population_state_from_keys(keys, tp_tc), m,
+                tc=tp_tc)
+            jax.block_until_ready(st)
+            t0 = time.perf_counter()
+            for b in tp_batches:
+                st, _ = step(st, b, php)
+            jax.block_until_ready(st["last_loss"])
+            return (time.perf_counter() - t0) / TP_STEPS, st
+
+        _flight()  # warm the compile + placement
+        per_step, st = _flight()
+        for _ in range(TP_REPS - 1):
+            per_step = min(per_step, _flight()[0])
+        return {
+            "width": width, "lanes": k,
+            "padding_lanes": k - TP_LANES,
+            "per_step_seconds": per_step,
+            "collectives": (pop.count_model_axis_collectives(
+                tp_tc, k, m, tp_data) if count_psums else None),
+            "scores": [float(x) for x in np.asarray(
+                pop.population_scores(st))[:TP_LANES]],
+        }
+
+    tp_w1 = _tp_cell(1)
+    tp_w2 = _tp_cell(2)
+    tp_w4 = _tp_cell(4, count_psums=False)  # informational: kv=2 drops attn
+    res["tp_width"] = {
+        "trials": TP_LANES, "steps": TP_STEPS, "reps": TP_REPS,
+        "d_model": TP_D_MODEL, "d_ff": TP_FF,
+        "batch": TP_BATCH, "seq": TP_SEQ, "n_devices": jax.device_count(),
+        "w1": tp_w1, "w2": tp_w2, "w4": tp_w4,
+        "w2_vs_w1_per_step_speedup": (tp_w1["per_step_seconds"]
+                                      / tp_w2["per_step_seconds"]),
+        "w4_vs_w1_per_step_speedup": (tp_w1["per_step_seconds"]
+                                      / tp_w4["per_step_seconds"]),
+        "equivalence_max_abs_diff": float(max(
+            abs(a - b)
+            for ws in (tp_w2["scores"], tp_w4["scores"])
+            for a, b in zip(tp_w1["scores"], ws))),
     }
 
     # -- async vs gated PBT: search quality on a longer horizon ----------------
@@ -1187,6 +1315,16 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
         and elastic["truncated_equal"]
     )
 
+    # -- tensor-parallel width: the model axis must carry compute --------------
+    tp = dict(probe["tp_width"])
+    results["tp_width"] = tp
+    tp_ok = (
+        tp["w2_vs_w1_per_step_speedup"] >= TP_FLOOR
+        and tp["equivalence_max_abs_diff"] <= TP_SCORE_TOL
+        and tp["w1"]["collectives"] == 0
+        and tp["w2"]["collectives"] > 0
+    )
+
     # refill equivalence: every trial must score exactly what the serial
     # driver scores at the trial's *effective* step count — the original
     # budget's LR schedule, cut at the truncation step (early-stop semantics);
@@ -1230,6 +1368,7 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
         and data_ring_ok
         and devrules_ok
         and elastic_ok
+        and tp_ok
         and pbt["speedup"] >= PBT_STREAM_FLOOR
         and pbt["equivalence_max_abs_diff"] <= PBT_SCORE_TOL
         and pbt["stream_host_ckpt_roundtrips"] == 0
@@ -1263,6 +1402,9 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
         "elastic_regrid_later_rung_speedup": elastic["later_rung_speedup"],
         "elastic_regrid_equivalence_max_abs_diff":
             elastic["equivalence_max_abs_diff"],
+        "tp_width_w2_per_step_speedup": tp["w2_vs_w1_per_step_speedup"],
+        "tp_width_model_axis_collectives": tp["w2"]["collectives"],
+        "tp_width_equivalence_max_abs_diff": tp["equivalence_max_abs_diff"],
         "pbt_equivalence_max_abs_diff": pbt["equivalence_max_abs_diff"],
         "recovery_snapshot_overhead_ratio": snapshot_overhead,
         "recovery_snapshot_cost_s": snapshot_cost_s,
@@ -1299,7 +1441,14 @@ def run(arch: str = "starcoder2-3b", n_trials: int = 8, population: int = 8,
             f"{elastic['lane_width_history']}) and runs the same shrink-heavy "
             f"ladder {elastic['later_rung_speedup']:.2f}x faster than the "
             f"fixed-width sharded flight (floor {ELASTIC_FLOOR}x, scores "
-            f"within {elastic['equivalence_max_abs_diff']:.2g}); "
+            f"within {elastic['equivalence_max_abs_diff']:.2g}); the "
+            f"tensor-parallel model axis carries real compute: "
+            f"{tp['trials']} survivors on the full {tp['n_devices']}-device "
+            f"pod step {tp['w2_vs_w1_per_step_speedup']:.2f}x faster at "
+            f"width 2 than width 1 (floor {TP_FLOOR}x; "
+            f"{tp['w2']['collectives']} model-axis all-reduces vs "
+            f"{tp['w1']['collectives']} at width 1, scores within "
+            f"{tp['equivalence_max_abs_diff']:.2g}); "
             f"streaming PBT {pbt['speedup']:.1f}x the generation-barriered "
             f"serial PBT driver at equal total steps (scores equal, "
             f"{pbt['serial_host_ckpt_roundtrips']} -> 0 host checkpoint "

@@ -70,10 +70,13 @@ class ModelConfig:
     # numerics
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"
-    # kernels: force the Pallas rmsnorm (interpret mode off TPU) inside the
-    # train step instead of the reference norm.  A static model field so the
-    # population compile caches key on it (via static_step_key).
+    # kernels: force the Pallas rmsnorm / flash attention / ssm scan
+    # (interpret mode off TPU) inside the train step instead of the reference
+    # ops.  Static model fields so the population compile caches key on them
+    # (via static_step_key).
     fused_rmsnorm: bool = False
+    fused_attention: bool = False
+    fused_ssm: bool = False
 
     def __post_init__(self):
         for mixer, ffn in self.pattern + self.prefix_pattern:

@@ -68,6 +68,7 @@ class Experiment:
                 "lane_refill", "cli", "snapshot_every", "snapshot_dir",
                 "max_flight_restarts", "restart_backoff_s",
                 "finish_join_timeout_s", "fault_spec", "resume",
+                "model_parallel",
             )
         }
         self.proposer = make_proposer(
@@ -88,6 +89,11 @@ class Experiment:
                 # sharded manager only: lane geometry leased through an
                 # ElasticLanePool so rung survivors absorb freed devices
                 rm_kwargs["elastic_regrid"] = True
+            if self.exp_config.get("model_parallel"):
+                # sharded manager only: fold the device grid into a two-level
+                # (pop, model) mesh whose model axis carries tensor-parallel
+                # compute inside every lane
+                rm_kwargs["model_parallel"] = int(self.exp_config["model_parallel"])
             for k in ("max_flight_restarts", "restart_backoff_s",
                       "finish_join_timeout_s"):
                 if self.exp_config.get(k) is not None:

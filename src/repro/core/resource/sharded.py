@@ -117,21 +117,32 @@ class ShardedPopulationResourceManager(VectorizedResourceManager):
         devices: Optional[Sequence[Any]] = None,
         axis: str = "pop",
         elastic_regrid: bool = False,
+        model_parallel: int = 1,
         **kwargs,
     ):
         from ...distributed.sharding import population_mesh
 
         from ...train.population import pad_population
 
-        self.mesh = population_mesh(devices, axis=axis)
+        # --model-parallel W: the device grid folds into a two-level
+        # (pop, model) mesh — N/W lane rows of W devices each.  Lane slots
+        # (and thus padded K) count ROWS, not devices: each lane's tensor
+        # computation splits over its row's model axis.
+        width = max(1, int(model_parallel))
+        self.model_parallel = width
+        self.mesh = population_mesh(devices, axis=axis,
+                                    width=width if width > 1 else None)
         devs = list(self.mesh.devices.flat)
         n_dev = len(devs)
+        rows = n_dev // width
         # population axis must divide over the mesh: round lanes up (same rule
         # the trial applies to its batch, so slot count and padded K agree)
         n_slots = pad_population(int(n_parallel), self.mesh)
-        self.lanes_per_device = n_slots // n_dev
+        self.lanes_per_device = n_slots // rows
+        # resource ids name width-wide device slices: slot j of row i is
+        # "slice[0:1,i*W:(i+1)*W]/lane{j}"
         self.slices = {
-            s.slice_id: s for s in tile_pod((1, n_dev), (1, 1), devices=devs)
+            s.slice_id: s for s in tile_pod((1, n_dev), (1, width), devices=devs)
         }
         super().__init__(n_parallel=0, **kwargs)  # resources added below
         self.n_slots = n_slots

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
+import functools
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -186,8 +187,28 @@ def population_specs(tree: Any, mesh: Mesh, axis: str = "pop") -> Any:
     return jax.tree.map(one, tree)
 
 
+def two_level_pspecs(
+    tree: Any, specs: Any, mesh: Mesh, axis: str = "pop",
+    rules: Optional[Rules] = None,
+) -> Any:
+    """Per-leaf ``PartitionSpec`` tree for a population state on a two-level
+    mesh: ``P(axis, *build_pspec(leaf.shape[1:], logical, rules, mesh))``.
+    This is ``two_level_state_specs`` without the ``NamedSharding`` wrapper —
+    the form ``shard_map`` in/out_specs want for the tensor-parallel
+    population step."""
+    if rules is None:
+        rules = make_rules(tuple(a for a in mesh.axis_names if a != axis))
+
+    def one(leaf: Any, logical):
+        inner = build_pspec(leaf.shape[1:], logical, rules, mesh)
+        return PartitionSpec(axis, *inner)
+
+    return map_specs(tree, specs, one)
+
+
 def two_level_state_specs(
-    tree: Any, specs: Any, mesh: Mesh, axis: str = "pop"
+    tree: Any, specs: Any, mesh: Mesh, axis: str = "pop",
+    rules: Optional[Rules] = None,
 ) -> Any:
     """NamedSharding tree for a population state on a two-level mesh.
 
@@ -199,14 +220,14 @@ def two_level_state_specs(
     like a single-trial program would, instead of the blanket leading-dim
     ``population_specs``.  ``specs`` mirrors ``tree`` with logical-name
     tuples for the *trailing* dims (``()`` for per-lane scalars such as the
-    step counter or the divergence latch)."""
-    rules = make_rules(tuple(a for a in mesh.axis_names if a != axis))
-
-    def one(leaf: Any, logical):
-        inner = build_pspec(leaf.shape[1:], logical, rules, mesh)
-        return NamedSharding(mesh, PartitionSpec(axis, *inner))
-
-    return map_specs(tree, specs, one)
+    step counter or the divergence latch).  ``rules`` overrides the default
+    generic rules — the tensor-parallel population engine passes
+    ``tp_width_rules`` so storage layout matches what the compiled step
+    actually computes on."""
+    pspecs = two_level_pspecs(tree, specs, mesh, axis=axis, rules=rules)
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p), pspecs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
 
 
 # -- activation constraints inside model code -----------------------------------------
@@ -238,3 +259,194 @@ def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
     mesh, rules = ctx
     spec = build_pspec(x.shape, logical, rules, mesh)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# -- tensor-parallel population step (explicit shard_map seams) -----------------------
+#
+# The two-level (pop, model) mesh gives every lane row ``width`` devices.  The
+# GSPMD context above is for the single-trial training path; the population
+# engines instead run *explicit* tensor parallelism inside ``shard_map``: the
+# width rules below decide which weight families shard over the model axis,
+# and the f/g seam ops place the matching psum reductions at activation seams
+# (Megatron's f/g operators):
+#
+#   tp_enter (f): forward identity, backward psum — wraps a *replicated*
+#       activation right before it feeds width-sharded weights (column
+#       parallel), so the partial input-gradients from each shard sum up.
+#   tp_reduce (g): forward psum, backward identity — closes a row-parallel
+#       contraction (output dim replicated, contracting dim sharded), turning
+#       per-shard partial sums into the full activation.
+#
+# Correctness rule: an activation branch that feeds REPLICATED weights must
+# bypass tp_enter — psum-ing a full (already-replicated) contribution W ways
+# overcounts its gradient by W.  The per-module flags in the TP context keep
+# seam placement exactly consistent with the width rules' shard decisions.
+
+_TP_SHARDED_LOGICAL = ("heads", "kv_heads", "ff", "inner")
+
+_TP_CTX: contextvars.ContextVar[Optional[Dict[str, Any]]] = contextvars.ContextVar(
+    "tp_ctx", default=None
+)
+
+
+def tp_width_rules(cfg, width: int, model_axis: str = "model") -> Rules:
+    """Logical-axes rules for a ``width``-way tensor-parallel lane.
+
+    Decisions are per *module*, not per leaf, so e.g. GQA never ends up with
+    sharded q-heads but replicated kv-heads (which would break the grouped
+    attention reshape):
+
+    * attention shards iff ``n_heads % width == 0`` AND ``n_kv_heads %
+      width == 0`` (MLA archs have no separate kv heads — their per-head
+      ``wk_b``/``wv_b`` shard with the q heads);
+    * the dense MLP ``ff`` dim shards iff ``d_ff % width == 0`` and the arch
+      has no MoE blocks (expert weights stay replicated: the dispatch path
+      is token-sorted host-free compute that is only correct replicated);
+    * mamba's ``inner`` channel dim shards iff ``d_inner % width == 0``.
+
+    Everything else — vocab/embed (tied unembed), norms, router, experts,
+    caches — replicates across the model axis: width must stay layout, never
+    math."""
+    flags = tp_module_flags(cfg, width)
+    rules: Rules = {}
+    if flags["attn"]:
+        rules["heads"] = (model_axis,)
+        rules["kv_heads"] = (model_axis,)
+    if flags["mlp"]:
+        rules["ff"] = (model_axis,)
+    if flags["mamba"]:
+        rules["inner"] = (model_axis,)
+    return rules
+
+
+def tp_module_flags(cfg, width: int) -> Dict[str, bool]:
+    """Which modules actually shard at this width (coherent per-module
+    divisibility; see ``tp_width_rules``)."""
+    if width <= 1:
+        return {"attn": False, "mlp": False, "mamba": False}
+    n_kv = int(getattr(cfg, "n_kv_heads", 0) or 0)
+    return {
+        "attn": bool(cfg.has_attention and cfg.n_heads % width == 0
+                     and n_kv % width == 0),
+        "mlp": bool(cfg.d_ff % width == 0 and not cfg.has_moe),
+        "mamba": bool(cfg.has_mamba and cfg.d_inner % width == 0),
+    }
+
+
+@contextlib.contextmanager
+def tp_shard_context(axis: str, flags: Dict[str, bool], gnorm_mask: Any = None):
+    """Arm the tensor-parallel seams for the duration of a trace.
+
+    Set INSIDE the ``shard_map``-ed local function body (contextvars are
+    Python-trace-scoped, which is exactly when the model code runs) — never
+    around the outer jit.  ``flags`` are the ``tp_module_flags`` decisions;
+    ``gnorm_mask`` is a params-shaped bool tree (True = leaf sharded over the
+    model axis) that ``optim.adamw.global_norm`` uses to psum only the
+    width-local sum-of-squares."""
+    tok = _TP_CTX.set(dict(flags, axis=axis, gnorm_mask=gnorm_mask))
+    try:
+        yield
+    finally:
+        _TP_CTX.reset(tok)
+
+
+def tp_ctx() -> Optional[Dict[str, Any]]:
+    return _TP_CTX.get()
+
+
+def tp_axis(module: Optional[str] = None) -> Optional[str]:
+    """The model-axis name if TP is armed (and ``module`` shards), else None."""
+    ctx = _TP_CTX.get()
+    if ctx is None:
+        return None
+    if module is not None and not ctx.get(module, False):
+        return None
+    return ctx["axis"]
+
+
+def _seam_f(axis: str):
+    """f: identity forward, psum backward (enter column-parallel weights)."""
+
+    @jax.custom_vjp
+    def f(x):
+        return x
+
+    def fwd(x):
+        return x, None
+
+    def bwd(_, g):
+        return (jax.lax.psum(g, axis),)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _seam_g(axis: str):
+    """g: psum forward, identity backward (close row-parallel contractions)."""
+
+    @jax.custom_vjp
+    def g(x):
+        return jax.lax.psum(x, axis)
+
+    def fwd(x):
+        return jax.lax.psum(x, axis), None
+
+    def bwd(_, ct):
+        return (ct,)
+
+    g.defvjp(fwd, bwd)
+    return g
+
+
+@functools.lru_cache(maxsize=None)
+def _seams(axis: str):
+    return _seam_f(axis), _seam_g(axis)
+
+
+def tp_enter(x: jax.Array, module: str) -> jax.Array:
+    """Seam into a column-parallel block: no-op unless TP is armed for
+    ``module``.  ONLY wrap activations that feed width-sharded weights;
+    replicated-weight branches must consume the raw input."""
+    ax = tp_axis(module)
+    if ax is None:
+        return x
+    return _seams(ax)[0](x)
+
+
+def tp_reduce(x: jax.Array, module: str) -> jax.Array:
+    """Seam out of a row-parallel contraction: psum the per-shard partials
+    (no-op unless TP is armed for ``module``)."""
+    ax = tp_axis(module)
+    if ax is None:
+        return x
+    return _seams(ax)[1](x)
+
+
+def tp_gnorm_sumsq(leaf_sumsqs: Sequence[jax.Array], tree: Any):
+    """Total sum-of-squares for a grads tree under TP: width-local (sharded)
+    leaves psum their partial sums over the model axis, replicated leaves
+    count once.  ``leaf_sumsqs`` aligns with ``jax.tree.leaves(tree)``.
+    Returns None when TP is not armed (caller keeps its plain path)."""
+    import jax.numpy as jnp
+
+    ctx = _TP_CTX.get()
+    if ctx is None or ctx.get("gnorm_mask") is None:
+        return None
+    mask = jax.tree.leaves(ctx["gnorm_mask"])
+    if len(mask) != len(leaf_sumsqs):
+        # grads tree does not mirror the params mask (e.g. a partial subtree)
+        return None
+    rep = [s for s, m in zip(leaf_sumsqs, mask) if not m]
+    shard = [s for s, m in zip(leaf_sumsqs, mask) if m]
+    total = jnp.sum(jnp.stack(rep)) if rep else jnp.zeros((), jnp.float32)
+    if shard:
+        total = total + jax.lax.psum(jnp.sum(jnp.stack(shard)), ctx["axis"])
+    return total
+
+
+def tp_gnorm_mask(param_specs: Any, rules: Rules) -> Any:
+    """Bool tree over a params specs tree: True iff the leaf's logical spec
+    names a dimension the width rules shard over the model axis."""
+    return map_specs(
+        param_specs, param_specs,
+        lambda _, logical: any(n in rules for n in logical if n is not None))

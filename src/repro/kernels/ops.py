@@ -90,9 +90,21 @@ def attention(
     scale: Optional[float] = None,
     q_offset: int = 0,
     kv_len: Optional[jax.Array] = None,
+    fused: bool = False,
 ) -> jax.Array:
     B, Sq, H, Dq = q.shape
     Sk, Dv = k.shape[1], v.shape[-1]
+    if fused and _FORCE != "ref" and kv_len is None and q_offset == 0:
+        # --fused-attention: force the Pallas flash kernel (interpret mode off
+        # TPU) on the training hot path regardless of tile alignment — the
+        # kernel pads q/k/v internally, so smoke-sized sequences work too.
+        # Decode paths (kv_len / q_offset) keep the ref oracle.
+        from .flash_attention import flash_attention
+
+        return flash_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+            interpret=_interpret(),
+        )
     aligned = Sq % 128 == 0 and q.shape[1] == k.shape[1] and Dq in (64, 128, 192, 256) and Dv in (64, 128, 192, 256)
     if _use_pallas() and aligned and kv_len is None and q_offset == 0:
         from .flash_attention import flash_attention
@@ -121,8 +133,41 @@ def attention(
 
 
 # -- selective scan -------------------------------------------------------------------
-def ssm_scan(x, dt, A, Bc, Cc, D, h0=None, chunk: int = 128):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _fused_ssm(x, dt, A, Bc, Cc, D, chunk: int):
+    """Pallas selective scan on the training hot path (``--fused-ssm``).
+
+    Forward is the chunked Pallas kernel (interpret mode off TPU; it pads L
+    internally and ``block_d`` is snapped to a divisor of the channel dim so
+    smoke geometries work); backward is the reference scan's VJP — exact
+    w.r.t. the same math.  Fresh-state only (h0=None): the decode/resume
+    paths keep the ref oracle.
+    """
+    import math as _math
+
+    from .ssm_scan import ssm_scan_pallas
+
+    return ssm_scan_pallas(
+        x, dt, A, Bc, Cc, D, h0=None, chunk=chunk,
+        block_d=_math.gcd(x.shape[-1], 512), interpret=_interpret())
+
+
+def _fused_ssm_fwd(x, dt, A, Bc, Cc, D, chunk):
+    return _fused_ssm(x, dt, A, Bc, Cc, D, chunk), (x, dt, A, Bc, Cc, D)
+
+
+def _fused_ssm_bwd(chunk, res, ct):
+    _, vjp = jax.vjp(lambda *a: ref.ssm_scan(*a, h0=None, chunk=chunk), *res)
+    return vjp(ct)
+
+
+_fused_ssm.defvjp(_fused_ssm_fwd, _fused_ssm_bwd)
+
+
+def ssm_scan(x, dt, A, Bc, Cc, D, h0=None, chunk: int = 128, fused: bool = False):
     L = x.shape[1]
+    if fused and _FORCE != "ref" and h0 is None:
+        return _fused_ssm(x, dt, A, Bc, Cc, D, chunk)
     if _use_pallas() and L % chunk == 0 and x.shape[-1] % 128 == 0:
         from .ssm_scan import ssm_scan_pallas
 

@@ -197,7 +197,9 @@ class PopulationTrial:
                  chunk_steps: int = 1, snapshot_every: int = 0,
                  snapshots=None, device_rules: bool = False,
                  elastic_regrid: bool = False, data_ring: bool = False,
-                 ring_windows: int = 2, fused_rmsnorm: bool = False):
+                 ring_windows: int = 2, fused_rmsnorm: bool = False,
+                 fused_attention: bool = False, fused_ssm: bool = False,
+                 model_parallel: int = 1, model_overrides=None):
         self.arch = arch
         self.steps = int(steps)
         self.batch = int(batch)
@@ -240,6 +242,22 @@ class PopulationTrial:
         # --fused-rmsnorm: run the Pallas rmsnorm kernel (interpret mode off
         # TPU) inside the population train step instead of the reference norm
         self.fused_rmsnorm = bool(fused_rmsnorm)
+        # --fused-attention / --fused-ssm: the rest of the Pallas kernel bank
+        # (flash attention, chunked selective scan), same static-field keying
+        self.fused_attention = bool(fused_attention)
+        self.fused_ssm = bool(fused_ssm)
+        # --model-parallel W: each lane's tensors split over a W-wide model
+        # axis (two-level (pop, model) mesh) — width is layout, never math
+        self.model_parallel = max(1, int(model_parallel))
+        # static ModelConfig field replacements applied on top of the smoke
+        # config (e.g. a head geometry whose dims divide a TP width) — part
+        # of the compile-cache key like every other static model field
+        self.model_overrides = dict(model_overrides or {})
+        # wall-clock per train step between consecutive rung boundaries,
+        # [[boundary_step, steps, s_per_step], ...] — the elastic/TP speedup
+        # telemetry: later rungs should get *cheaper* per step
+        self.per_rung_step_time_s: list = []
+        self.model_axis_collectives = None  # per-step model-axis all-reduces
         self.n_regrids = 0          # lane-geometry changes executed
         self.lane_width_history: list = []  # [lanes, devices-per-lane] per regrid
         self.n_dispatches = 0       # device calls issued (steps + lane ops)
@@ -297,6 +315,12 @@ class PopulationTrial:
                     # a *static* model field: the compile caches key on it via
                     # static_step_key, so fused and reference programs never mix
                     cfg = dataclasses.replace(cfg, fused_rmsnorm=True)
+                if self.fused_attention:
+                    cfg = dataclasses.replace(cfg, fused_attention=True)
+                if self.fused_ssm:
+                    cfg = dataclasses.replace(cfg, fused_ssm=True)
+                if self.model_overrides:
+                    cfg = dataclasses.replace(cfg, **self.model_overrides)
                 self._data = SyntheticLM(cfg.vocab_size, self.seq, self.batch,
                                          seed=self.seed)
                 self._tc = TrainConfig(model=cfg, parallel=ParallelConfig(remat="none"),
@@ -482,7 +506,9 @@ class PopulationTrial:
             pstep = get_compiled_population_step(
                 tc, k, per_trial_batch=self.per_trial_streams)
         if mesh is not None:
-            pstate = shard_population_state(pstate, mesh)
+            # tc routes width>1 meshes through the two-level placement so
+            # width-sharded leaves land partitioned, not replicated
+            pstate = shard_population_state(pstate, mesh, tc=tc)
         hook = self.early_stop
         if self.device_rules and hook is not None and hook.boundaries:
             scores = self._run_batch_device_rules(
@@ -521,6 +547,7 @@ class PopulationTrial:
             chunk_steps=chunk,
             boundaries=hook.boundaries if hook is not None else ())
         s = 0
+        seg_t0, seg_s0 = time.perf_counter(), 0
         try:
             while s < int(budgets.max()):
                 max_b = int(budgets.max())
@@ -560,6 +587,13 @@ class PopulationTrial:
                         budgets,
                         np.asarray(pstate["diverged"]),
                     )
+                    # the last_loss pull above synced the device, so this
+                    # segment's wall-clock is honest: per-step time between
+                    # consecutive rung boundaries
+                    self.per_rung_step_time_s.append(
+                        [int(s), int(s - seg_s0),
+                         round((time.perf_counter() - seg_t0) / max(1, s - seg_s0), 6)])
+                    seg_t0, seg_s0 = time.perf_counter(), s
                     if (new_budgets != budgets).any():
                         # the budget is a *traced* leaf: truncating it freezes
                         # the losing lanes on the next step without a recompile
@@ -572,6 +606,10 @@ class PopulationTrial:
         # telemetry: how long the flight actually ran (in-flight stops shrink it)
         self.last_flight_steps = s
         scores = np.asarray(population_scores(pstate, self.DIVERGED_SCORE))
+        if s > seg_s0:  # the tail past the last rung boundary (scores synced)
+            self.per_rung_step_time_s.append(
+                [int(s), int(s - seg_s0),
+                 round((time.perf_counter() - seg_t0) / (s - seg_s0), 6)])
         return [float(x) for x in scores[: len(configs)]]
 
     def _run_batch_device_rules(self, tc, data, k, mesh, pstate, php, budgets,
@@ -631,8 +669,7 @@ class PopulationTrial:
         """Batch-protocol flight with elastic lane regrids
         (``--elastic-regrid``).
 
-        Runs the vmapped engine (never ``shard_map`` — device placement is
-        explicit) and, at each rung boundary after the cohort rule fires,
+        At each rung boundary after the cohort rule fires the flight
         *regrids*: the surviving lanes' full train state is gathered into a
         smaller population via the ``regrid`` lane-lifecycle op, retired
         lanes' scores are harvested first, and — when a ``ElasticLanePool``
@@ -642,6 +679,16 @@ class PopulationTrial:
         Without a pool (single-device vectorized manager) the regrid still
         shrinks K to the next power of two, cutting the frozen lanes'
         dead compute.
+
+        Engine choice per segment: width-1 rungs run the vmapped step on
+        explicitly placed state (bit-identical to the fixed-width vmapped
+        run).  Once a regrid widens the rows past 1, the segment switches to
+        the tensor-parallel ``shard_map`` step on the pool's mesh — the same
+        program ``--model-parallel`` pins — so each lane row computes its
+        width-local parameter shards with explicit psum seams instead of
+        GSPMD resharding replicated state every step.  That is what makes a
+        regrid *shrink* later-rung wall-clock: the survivors' per-row compute
+        drops with the width rather than being replicated W times.
 
         The invariant: resharding changes layout, never math.  Per-lane
         arithmetic is lane-independent under vmap, so survivor scores are
@@ -655,10 +702,12 @@ class PopulationTrial:
         import jax.numpy as jnp
 
         from ..data.pipeline import split_stream, split_streams
+        from ..distributed.sharding import tp_module_flags
         from ..optim.hparams import stack_hparams
         from ..train.population import (
             get_compiled_population_scan_step,
             get_compiled_population_step,
+            get_compiled_sharded_population_step,
             place_two_level,
             population_scores,
             regrid_population_state,
@@ -668,8 +717,19 @@ class PopulationTrial:
         planner = ChunkPlanner(
             chunk_steps=chunk,
             boundaries=hook.boundaries if hook is not None else ())
+
+        def _tp_mesh(m, w):
+            # the pool mesh, when its rows genuinely tensor-parallel this
+            # model (width > 1 and at least one module's dims divide) —
+            # widths that shard nothing keep the vmapped engine
+            if m is None or w <= 1:
+                return None
+            return m if any(tp_module_flags(tc.model, w).values()) else None
+
+        tp_mesh = None
         if pool is not None:
             pstate = place_two_level(pstate, tc, pool.mesh())
+            tp_mesh = _tp_mesh(pool.mesh(), pool.width)
         k0 = k
         orig = list(range(k))      # current lane -> original trial index
         final = np.full(k0, self.DIVERGED_SCORE, np.float64)
@@ -683,6 +743,7 @@ class PopulationTrial:
             return tuple(jnp.uint32(w) for w in split_stream(0))
 
         s = 0
+        seg_t0, seg_s0 = time.perf_counter(), 0
         while len(budgets) and s < int(budgets.max()):
             t = planner.chunk_to(s, planner.next_cohort_event(
                 s, int(budgets.max())))
@@ -692,13 +753,18 @@ class PopulationTrial:
                           if self.per_trial_streams
                           else jnp.asarray(s, jnp.int32))
                 scan = get_compiled_population_scan_step(
-                    tc, k, data, t, per_trial_batch=self.per_trial_streams)
+                    tc, k, data, t, mesh=tp_mesh,
+                    per_trial_batch=self.per_trial_streams)
                 pstate, _ = scan(pstate, php, steps0, s_lo, s_hi)
             else:
                 batch = (data.make_population_batch(s, streams)
                          if self.per_trial_streams else data.make_batch(s))
-                pstep = get_compiled_population_step(
-                    tc, k, per_trial_batch=self.per_trial_streams)
+                pstep = (get_compiled_sharded_population_step(
+                             tc, k, mesh=tp_mesh,
+                             per_trial_batch=self.per_trial_streams)
+                         if tp_mesh is not None else
+                         get_compiled_population_step(
+                             tc, k, per_trial_batch=self.per_trial_streams))
                 pstate, _ = pstep(pstate, batch, php)
             self.n_dispatches += 1
             self.n_train_steps += t
@@ -708,6 +774,10 @@ class PopulationTrial:
             new_budgets = np.asarray(hook(
                 s, np.asarray(pstate["last_loss"]), budgets,
                 np.asarray(pstate["diverged"])), np.float64)
+            self.per_rung_step_time_s.append(
+                [int(s), int(s - seg_s0),
+                 round((time.perf_counter() - seg_t0) / max(1, s - seg_s0), 6)])
+            seg_t0, seg_s0 = time.perf_counter(), s
             if (new_budgets != budgets).any():
                 budgets = new_budgets
                 php = dataclasses.replace(
@@ -748,10 +818,15 @@ class PopulationTrial:
                 stack_hparams(hps),
                 total_steps=jnp.asarray(budgets, jnp.float32))
             k = k2
+            tp_mesh = _tp_mesh(mesh2, width)
             self.n_regrids += 1
             self.lane_width_history.append([int(k2), int(width)])
         self.last_flight_steps = s
         cur = np.asarray(population_scores(pstate, self.DIVERGED_SCORE))
+        if s > seg_s0:
+            self.per_rung_step_time_s.append(
+                [int(s), int(s - seg_s0),
+                 round((time.perf_counter() - seg_t0) / (s - seg_s0), 6)])
         for j in range(k):
             if orig[j] >= 0:
                 final[orig[j]] = cur[j]
@@ -891,7 +966,7 @@ class PopulationTrial:
         lane_keys = [self._init_key(s) for s in streams]
         pstate = init_population_state_from_keys(jnp.stack(lane_keys), tc)
         if mesh is not None:
-            pstate = shard_population_state(pstate, mesh)
+            pstate = shard_population_state(pstate, mesh, tc=tc)
         elif elastic is not None:
             from ..train.population import place_two_level
 
@@ -1700,6 +1775,25 @@ def main(argv=None) -> int:
                         "TPU) inside the train step instead of the reference "
                         "norm — the kernel-revival path for the population "
                         "engines")
+    p.add_argument("--fused-attention", action="store_true",
+                   help="run the Pallas flash-attention kernel (interpret "
+                        "mode off TPU) inside the train step instead of the "
+                        "reference attention; decode/cached paths keep the "
+                        "reference op")
+    p.add_argument("--fused-ssm", action="store_true",
+                   help="run the Pallas chunked selective-scan kernel "
+                        "(interpret mode off TPU) inside the train step for "
+                        "SSM/hybrid archs; the backward pass replays the "
+                        "reference scan")
+    p.add_argument("--model-parallel", type=int, default=1, metavar="W",
+                   help="with --shard-population: fold the device grid into "
+                        "a two-level (pop, model) mesh of W-device lane rows "
+                        "— each lane's attention heads and MLP/SSM channels "
+                        "split over its row (shard_map with explicit psum "
+                        "seams), so the model axis carries compute instead "
+                        "of replication and per-lane optimizer state shrinks "
+                        "~1/W per device.  Width is layout, never math: "
+                        "scores match the width-1 run on the same trials")
     p.add_argument("--per-trial-init", action="store_true",
                    help="fold each trial's stream/job id into its init PRNG "
                         "key so trials start from distinct weights (serial and "
@@ -1813,6 +1907,33 @@ def main(argv=None) -> int:
             p.error("--device-rules needs an in-scan rule: --inflight-stop "
                     "(rung cuts) or --pbt-streaming with --pbt-async "
                     "(window-quantile verdicts)")
+    if args.legacy_recompile and (args.fused_rmsnorm or args.fused_attention
+                                  or args.fused_ssm):
+        p.error("--fused-rmsnorm/--fused-attention/--fused-ssm act on the "
+                "compile-once train step; the --legacy-recompile baseline "
+                "predates the kernel bank and would silently ignore them")
+    if args.fused_attention or args.fused_ssm:
+        # fail loudly instead of silently training the reference op: the
+        # fused flags are per-module, and the module must exist in the arch
+        from ..configs import get_smoke_config
+        _cfg = get_smoke_config(args.arch)
+        if args.fused_attention and not _cfg.has_attention:
+            p.error(f"--fused-attention: arch {args.arch!r} has no attention "
+                    "mixer (it would silently run unfused)")
+        if args.fused_ssm and not _cfg.has_mamba:
+            p.error(f"--fused-ssm: arch {args.arch!r} has no SSM mixer "
+                    "(it would silently run unfused)")
+    if args.model_parallel < 1:
+        p.error("--model-parallel must be >= 1")
+    if args.model_parallel > 1:
+        if not args.shard_population:
+            p.error("--model-parallel W splits each lane's tensors over a "
+                    "W-device row of the population mesh; it requires "
+                    "--vectorize K with --shard-population")
+        if args.elastic_regrid:
+            p.error("--model-parallel is incompatible with --elastic-regrid: "
+                    "elastic flights lease their own lane widths through the "
+                    "ElasticLanePool (the regrid IS the width change)")
     if args.elastic_regrid:
         if args.vectorize <= 0:
             p.error("--elastic-regrid acts on the population engines; it "
@@ -1858,6 +1979,8 @@ def main(argv=None) -> int:
             exp_cfg["lane_refill"] = True
         if args.elastic_regrid and args.shard_population:
             exp_cfg["elastic_regrid"] = True
+        if args.model_parallel > 1:
+            exp_cfg["model_parallel"] = args.model_parallel
         trial = PopulationTrial(args.arch, args.steps, args.batch, args.seq,
                                 args.seed, population=args.vectorize,
                                 per_trial_streams=per_trial_streams,
@@ -1869,14 +1992,19 @@ def main(argv=None) -> int:
                                 elastic_regrid=args.elastic_regrid,
                                 data_ring=args.data_ring,
                                 ring_windows=args.ring_windows,
-                                fused_rmsnorm=args.fused_rmsnorm)
+                                fused_rmsnorm=args.fused_rmsnorm,
+                                fused_attention=args.fused_attention,
+                                fused_ssm=args.fused_ssm,
+                                model_parallel=args.model_parallel)
     elif args.legacy_recompile:
         trial = make_trial(args.arch, args.steps, args.batch, args.seq, args.seed)
     else:
         trial = PopulationTrial(args.arch, args.steps, args.batch, args.seq,
                                 args.seed, per_trial_streams=per_trial_streams,
                                 per_trial_init=args.per_trial_init,
-                                fused_rmsnorm=args.fused_rmsnorm)
+                                fused_rmsnorm=args.fused_rmsnorm,
+                                fused_attention=args.fused_attention,
+                                fused_ssm=args.fused_ssm)
     # the stored CLI geometry is what --resume rebuilds the trial from
     exp_cfg["cli"] = {k: getattr(args, k) for k in (
         "arch", "steps", "batch", "seq", "seed", "vectorize",
@@ -1884,6 +2012,7 @@ def main(argv=None) -> int:
         "lane_refill", "inflight_stop", "snapshot_every", "snapshot_dir",
         "legacy_recompile", "pbt_streaming", "pbt_async", "device_rules",
         "elastic_regrid", "data_ring", "ring_windows", "fused_rmsnorm",
+        "fused_attention", "fused_ssm", "model_parallel",
         "max_flight_restarts")}
     t0 = time.time()
     if resume_db is not None:
@@ -1911,7 +2040,9 @@ def main(argv=None) -> int:
     out = {
         "proposer": args.proposer,
         "arch": args.arch,
-        "engine": engine + ("+refill" if args.lane_refill else "")
+        "engine": engine + (f"+tp{args.model_parallel}"
+                            if args.model_parallel > 1 else "")
+                         + ("+refill" if args.lane_refill else "")
                          + ("+chunked" if args.chunk_steps > 1 else "")
                          + ("+ring" if args.data_ring else "")
                          + ("+devrules" if args.device_rules else "")
@@ -1942,6 +2073,26 @@ def main(argv=None) -> int:
         out["overlap_frac"] = round(trial.ring_overlap_frac, 4)
     if args.fused_rmsnorm:
         out["fused_rmsnorm"] = True
+    if args.fused_attention:
+        out["fused_attention"] = True
+    if args.fused_ssm:
+        out["fused_ssm"] = True
+    if args.vectorize > 0 and args.shard_population and not args.elastic_regrid:
+        # static telemetry off the lowered per-step program: how many
+        # all-reduces the model axis contributes per train step (0 at width 1
+        # — the whole point of the width-is-layout invariant)
+        from ..train.population import (count_model_axis_collectives,
+                                        pad_population)
+        tc_, data_ = trial._setup()
+        mesh_ = getattr(exp.rm, "mesh", None)
+        if mesh_ is not None:
+            out["model_parallel"] = args.model_parallel
+            trial.model_axis_collectives = count_model_axis_collectives(
+                tc_, pad_population(max(args.vectorize, 1), mesh_), mesh_,
+                data_, per_trial_batch=per_trial_streams)
+            out["model_axis_collectives"] = trial.model_axis_collectives
+    if getattr(trial, "per_rung_step_time_s", None):
+        out["per_rung_step_time_s"] = trial.per_rung_step_time_s
     if getattr(trial, "early_stop", None) is not None:
         out["inflight_truncated_lanes"] = trial.early_stop.n_truncated
         out["inflight_reclaimed_diverged_lanes"] = trial.early_stop.n_reclaimed

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from ..distributed.sharding import constrain
+from ..distributed.sharding import constrain, tp_enter, tp_reduce
 from ..kernels import ops, ref
 from .layers import Params, Specs, dense_init, dtype_of, rmsnorm_init
 from .rope import apply_rope
@@ -53,9 +53,14 @@ def gqa_apply(
     *,
     local: bool = False,
 ) -> jax.Array:
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    # tp_enter/tp_reduce are the explicit tensor-parallel seams for the
+    # population engines' shard_map path (no-ops elsewhere): heads shard over
+    # the lane's model-axis row, so q/k/v projections are column-parallel and
+    # the wo contraction is row-parallel.
+    xs = tp_enter(x, "attn")
+    q = jnp.einsum("bsd,dhk->bshk", xs, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xs, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xs, p["wv"])
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     # TP over heads when divisible, else Ulysses-style sequence parallelism:
@@ -68,9 +73,10 @@ def gqa_apply(
         causal=not cfg.encoder_only,
         window=cfg.sliding_window if local else None,
         softcap=cfg.attn_softcap,
+        fused=cfg.fused_attention,
     )
     out = constrain(out, ("batch", "act_seq_attn", "heads", None))
-    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return tp_reduce(jnp.einsum("bshk,hkd->bsd", out, p["wo"]), "attn")
 
 
 def gqa_cache_init(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Dict[str, jax.Array]:
@@ -151,7 +157,11 @@ def _mla_qkc(p, x, cfg, positions):
 
     Dh, rr = cfg.resolved_head_dim, cfg.rope_head_dim
     r = cfg.kv_lora_rank
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    # TP seam discipline: wq is head-sharded (column parallel) so its input
+    # passes through tp_enter, but wkv_a / kv_norm are REPLICATED and must
+    # consume the raw x — routing their full contribution through the psum
+    # seam would overcount those gradients width-fold.
+    q = jnp.einsum("bsd,dhk->bshk", tp_enter(x, "attn"), p["wq"])
     q_nope, q_rope = q[..., :Dh], q[..., Dh:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
     ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
@@ -165,6 +175,12 @@ def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, positions: jax.Array) -
     """Prefill/train path: decompress K,V and run standard attention."""
     Dh = cfg.resolved_head_dim
     q_nope, q_rope, c, k_rope = _mla_qkc(p, x, cfg, positions)
+    # c / k_rope are replicated activations feeding head-sharded consumers
+    # (wk_b / wv_b up-projections, the per-head rope broadcast) — tp_enter
+    # here psums their head-local partial cotangents before they flow back
+    # into the replicated wkv_a/kv_norm branch.
+    c = tp_enter(c, "attn")
+    k_rope = tp_enter(k_rope, "attn")
     k_nope = jnp.einsum("bsr,rhk->bshk", c, p["wk_b"])
     v = jnp.einsum("bsr,rhk->bshk", c, p["wv_b"])
     H = cfg.n_heads
@@ -175,9 +191,10 @@ def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, positions: jax.Array) -
     q_full = constrain(q_full, ("batch", "act_seq_attn", "heads", None))
     k_full = constrain(k_full, ("batch", None, "heads", None))
     v = constrain(v, ("batch", None, "heads", None))
-    out = ops.attention(q_full, k_full, v, causal=True, scale=scale)
+    out = ops.attention(q_full, k_full, v, causal=True, scale=scale,
+                        fused=cfg.fused_attention)
     out = constrain(out, ("batch", "act_seq_attn", "heads", None))
-    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return tp_reduce(jnp.einsum("bshk,hkd->bsd", out, p["wo"]), "attn")
 
 
 def mla_cache_init(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Dict[str, jax.Array]:

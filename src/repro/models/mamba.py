@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..distributed.sharding import tp_enter, tp_reduce
 from ..kernels import ops
 from .layers import Params, Specs, dense_init, dtype_of
 
@@ -68,15 +69,23 @@ def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
 
 
 def mamba_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
-    uz = jnp.einsum("bsd,dci->bsci", x, p["in_proj"])
+    # Population TP seams (no-ops elsewhere): every mamba weight carries the
+    # d_inner channel dim, so the whole mixer runs on width-local channels —
+    # in_proj column-parallel, out_proj row-parallel.  The x_proj seam is the
+    # subtle one: its OUTPUT (dt_raw/Bc/Cc) must be replicated (Bc/Cc gate all
+    # channels in the scan), so the row-parallel x_proj closes with tp_reduce,
+    # and the immediately following tp_enter re-enters width-sharded consumers
+    # (dt_proj, the local-channel scan) whose cotangents are partial.
+    uz = jnp.einsum("bsd,dci->bsci", tp_enter(x, "mamba"), p["in_proj"])
     u, z = uz[:, :, 0], uz[:, :, 1]
     u = jax.nn.silu(_causal_conv(u, p["conv_w"], p["conv_b"]))
-    dt_raw, Bc, Cc = _split_xproj(jnp.einsum("bsi,ij->bsj", u, p["x_proj"]), cfg)
+    h = tp_enter(tp_reduce(jnp.einsum("bsi,ij->bsj", u, p["x_proj"]), "mamba"), "mamba")
+    dt_raw, Bc, Cc = _split_xproj(h, cfg)
     dt = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", dt_raw, p["dt_proj"]) + p["dt_bias"])
     A = -jnp.exp(p["A_log"])
-    y, _ = ops.ssm_scan(u, dt, A, Bc, Cc, p["D"])
+    y, _ = ops.ssm_scan(u, dt, A, Bc, Cc, p["D"], fused=cfg.fused_ssm)
     y = y * jax.nn.silu(z)
-    return jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return tp_reduce(jnp.einsum("bsi,id->bsd", y, p["out_proj"]), "mamba")
 
 
 def mamba_cache_init(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..distributed.sharding import tp_enter, tp_reduce
 from .layers import Params, Specs, dense_init, dtype_of
 
 
@@ -30,9 +31,11 @@ def mlp_specs(cfg: ModelConfig) -> Specs:
 
 
 def mlp_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
-    h = jnp.einsum("bsd,dcf->bscf", x, p["wi"])
+    # Megatron split under the population TP seams (no-ops elsewhere): wi is
+    # column-parallel over ff, wo row-parallel, one psum per MLP.
+    h = jnp.einsum("bsd,dcf->bscf", tp_enter(x, "mlp"), p["wi"])
     if cfg.activation == "swiglu":
         h = jax.nn.silu(h[:, :, 0]) * h[:, :, 1]
     else:
         h = jax.nn.gelu(h[:, :, 0])
-    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+    return tp_reduce(jnp.einsum("bsf,fd->bsd", h, p["wo"]), "mlp")

@@ -42,7 +42,17 @@ def opt_state_specs(p_specs) -> Dict[str, Any]:
 
 
 def global_norm(tree) -> jax.Array:
+    """L2 norm over all leaves.  Under the population engines' tensor-parallel
+    shard_map (tp_shard_context armed with a gnorm_mask), width-sharded leaves
+    hold only their model-axis shard, so their sum-of-squares is psum'd over
+    the lane row while replicated leaves count once — every device in the row
+    sees the same (full) norm, keeping grad-clip decisions width-invariant."""
+    from ..distributed.sharding import tp_gnorm_sumsq
+
     leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    tp_total = tp_gnorm_sumsq(leaves, tree)
+    if tp_total is not None:
+        return jnp.sqrt(tp_total)
     return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
 
 

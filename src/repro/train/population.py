@@ -67,6 +67,11 @@ from ..configs.base import TrainConfig
 from ..distributed.sharding import (
     population_mesh,
     population_specs,
+    tp_gnorm_mask,
+    tp_module_flags,
+    tp_shard_context,
+    tp_width_rules,
+    two_level_pspecs,
     two_level_state_specs,
 )
 from ..optim.hparams import HParams
@@ -109,6 +114,105 @@ def _wrap(inner, k: int) -> PopState:
         "diverged": jnp.zeros((k,), bool),
         "last_loss": jnp.full((k,), jnp.inf, jnp.float32),
     }
+
+
+# -- two-level (pop, model) mesh helpers ----------------------------------------
+#
+# On a two-level mesh the population axis holds ``rows`` lane rows and each
+# row is ``width = mesh.size / rows`` devices of genuine tensor parallelism:
+# the sharded engines shard_map over BOTH axes, partitioning every lane's
+# attention heads / MLP ff / mamba channels over its own row per
+# ``tp_width_rules`` with the psum seams in the model code (tp_enter /
+# tp_reduce).  Width is layout, never math — a width-W program computes the
+# same losses as width-1 up to fp reassociation of the seam reductions.
+
+
+def _pop_rows(mesh: Mesh, axis: str = "pop") -> int:
+    """Lane-row count of ``mesh`` (== device count on a 1-D population mesh)."""
+    return int(dict(mesh.shape).get(axis, mesh.size))
+
+
+def _mesh_width(mesh: Mesh, axis: str = "pop") -> int:
+    """Model-parallel width per lane row (1 on a 1-D population mesh)."""
+    return mesh.size // _pop_rows(mesh, axis)
+
+
+def _mesh_cache_key(mesh: Mesh, axis: str) -> Tuple:
+    # the mesh SHAPE is part of the key: the same 8 devices arranged (8,)
+    # and (4, 2) compile different programs
+    return (tuple(d.id for d in mesh.devices.flat), axis,
+            tuple((n, int(s)) for n, s in mesh.shape.items()))
+
+
+def _check_rows(population: int, mesh: Mesh, axis: str = "pop") -> None:
+    rows = _pop_rows(mesh, axis)
+    if population % rows:
+        raise ValueError(
+            f"population {population} does not divide over {rows} lane rows; "
+            f"pad to {pad_population(population, mesh, axis=axis)} with "
+            f"0-budget trials"
+        )
+
+
+def _population_state_shapes(tc: TrainConfig, population: int) -> PopState:
+    return jax.eval_shape(
+        lambda: init_population_state(jax.random.PRNGKey(0), tc, population))
+
+
+def _state_logical_specs(tc: TrainConfig) -> Dict[str, Any]:
+    return {"inner": train_state_specs(tc), "diverged": (), "last_loss": ()}
+
+
+def _tp_rules_or_raise(tc: TrainConfig, width: int,
+                       model_axis: str = "model"):
+    rules = tp_width_rules(tc.model, width, model_axis)
+    if not rules:
+        raise ValueError(
+            f"model-parallel width {width} shards nothing of "
+            f"{tc.model.name} (heads={tc.model.n_heads}, "
+            f"kv={tc.model.n_kv_heads}, ff={tc.model.d_ff}, "
+            f"moe={tc.model.has_moe}) — pure replication contradicts "
+            f"--model-parallel; pick a width dividing the module dims"
+        )
+    return rules
+
+
+def _tp_state_pspecs(tc: TrainConfig, mesh: Mesh, axis: str,
+                     model_axis: str = "model"):
+    """(per-leaf PartitionSpec tree for the population state, width rules).
+
+    The pspecs do not depend on the lane count (only trailing dims are
+    inspected), so a placeholder K = rows is used for the shape walk."""
+    width = _mesh_width(mesh, axis)
+    rules = _tp_rules_or_raise(tc, width, model_axis)
+    shapes = _population_state_shapes(tc, _pop_rows(mesh, axis))
+    return two_level_pspecs(
+        shapes, _state_logical_specs(tc), mesh, axis=axis, rules=rules), rules
+
+
+def _fused_kernels_on(tc: TrainConfig) -> bool:
+    """shard_map's static replication checker has no rule for pallas_call, so
+    the width-1 sharded twins must drop to ``check_rep=False`` whenever a
+    fused Pallas kernel rides inside the train step (the width>1 twins always
+    do: the checker cannot see through the custom_vjp psum seams either)."""
+    m = tc.model
+    return bool(m.fused_rmsnorm or m.fused_attention or m.fused_ssm)
+
+
+def _tp_body(fn: Callable, tc: TrainConfig, width: int,
+             model_axis: str = "model") -> Callable:
+    """Wrap a shard_map-local population fn so the TP seams are armed while
+    it traces: module flags pick which seams fire, and the gnorm mask tells
+    ``optim.adamw.global_norm`` which grad leaves are width-local shards."""
+    flags = tp_module_flags(tc.model, width)
+    rules = tp_width_rules(tc.model, width, model_axis)
+    mask = tp_gnorm_mask(train_state_specs(tc)["params"], rules)
+
+    def wrapped(*args):
+        with tp_shard_context(model_axis, flags, gnorm_mask=mask):
+            return fn(*args)
+
+    return wrapped
 
 
 def make_population_train_step(tc: TrainConfig, per_trial_batch: bool = False) -> Callable:
@@ -367,10 +471,17 @@ def place_two_level(pstate: PopState, tc: TrainConfig, mesh: Mesh,
     """``device_put`` a population state onto a two-level ``(pop, model)``
     mesh: the lane axis spreads over ``axis`` and each lane's parameter /
     optimizer leaves shard over its own device row through the per-leaf
-    composed specs (``two_level_state_specs`` x ``train_state_specs``)."""
-    specs = {"inner": train_state_specs(tc), "diverged": (), "last_loss": ()}
+    composed specs (``two_level_state_specs`` x ``train_state_specs``).
+
+    The width rules are the *module-coherent* ``tp_width_rules`` — the same
+    partitioning the tensor-parallel step computes on — so a regrid onto a
+    wider mesh genuinely re-partitions survivor state (optimizer memory per
+    device drops ~1/W) instead of replicating it."""
+    width = _mesh_width(mesh, axis)
+    rules = tp_width_rules(tc.model, width) if width > 1 else None
     return jax.device_put(
-        pstate, two_level_state_specs(pstate, specs, mesh, axis=axis))
+        pstate, two_level_state_specs(
+            pstate, _state_logical_specs(tc), mesh, axis=axis, rules=rules))
 
 
 def regrid_population_state(
@@ -643,7 +754,12 @@ def make_sharded_population_scan_step(
     """``shard_map`` twin of the fused scan: each device runs the T-step scan
     over its own K/N lane block, synthesizing only its own lanes' batches on
     device.  Stacked metrics come back partitioned on their lane axis
-    (leading axis is the chunk)."""
+    (leading axis is the chunk).
+
+    On a two-level mesh each lane row's scan is width-W tensor parallel (see
+    ``make_sharded_population_step``); the in-scan batch synthesis replicates
+    across the row (same lanes, same streams), which is exactly the TP batch
+    contract."""
     from jax.experimental.shard_map import shard_map
 
     fn = make_population_scan_step(
@@ -651,11 +767,22 @@ def make_sharded_population_scan_step(
     pop = PartitionSpec(axis)
     rep = PartitionSpec()
     lane = pop if per_trial_batch else rep
+    width = _mesh_width(mesh, axis)
+    if width > 1:
+        state_ps, _ = _tp_state_pspecs(tc, mesh, axis)
+        return shard_map(
+            _tp_body(fn, tc, width),
+            mesh=mesh,
+            in_specs=(state_ps, pop, lane, lane, lane),
+            out_specs=(state_ps, PartitionSpec(None, axis)),
+            check_rep=False,
+        )
     return shard_map(
         fn,
         mesh=mesh,
         in_specs=(pop, pop, lane, lane, lane),
         out_specs=(pop, PartitionSpec(None, axis)),
+        check_rep=not _fused_kernels_on(tc),
     )
 
 
@@ -711,11 +838,22 @@ def make_sharded_population_ring_scan_step(
 
     fn = make_population_ring_scan_step(tc, data, chunk, capacity)
     pop = PartitionSpec(axis)
+    width = _mesh_width(mesh, axis)
+    if width > 1:
+        state_ps, _ = _tp_state_pspecs(tc, mesh, axis)
+        return shard_map(
+            _tp_body(fn, tc, width),
+            mesh=mesh,
+            in_specs=(state_ps, pop, PartitionSpec(None, axis), PartitionSpec()),
+            out_specs=(state_ps, PartitionSpec(None, axis)),
+            check_rep=False,
+        )
     return shard_map(
         fn,
         mesh=mesh,
         in_specs=(pop, pop, PartitionSpec(None, axis), PartitionSpec()),
         out_specs=(pop, PartitionSpec(None, axis)),
+        check_rep=not _fused_kernels_on(tc),
     )
 
 
@@ -732,17 +870,36 @@ def make_sharded_population_step(
     axis is partitioned on ``axis``, and the (shared-stream) batch replicates.
     K must be divisible by N — ``pad_population`` gives the padded size and
     callers top up with 0-budget trials that freeze immediately.
+
+    On a two-level ``(pop, model)`` mesh the step shard_maps over BOTH axes:
+    each lane row runs a width-W tensor-parallel program (heads / ff / mamba
+    channels width-local per ``tp_width_rules``, psums at the model-code
+    seams), so the model axis carries compute instead of replicas.
     """
     from jax.experimental.shard_map import shard_map
 
     step = make_population_train_step(tc, per_trial_batch=per_trial_batch)
     pop = PartitionSpec(axis)
     batch_spec = pop if per_trial_batch else PartitionSpec()
+    width = _mesh_width(mesh, axis)
+    if width > 1:
+        state_ps, _ = _tp_state_pspecs(tc, mesh, axis)
+        # check_rep=False: activations/metrics ARE replicated across each lane
+        # row (the seam psums make them so), but the static replication
+        # checker cannot see through custom_vjp seams
+        return shard_map(
+            _tp_body(step, tc, width),
+            mesh=mesh,
+            in_specs=(state_ps, batch_spec, pop),
+            out_specs=(state_ps, pop),
+            check_rep=False,
+        )
     return shard_map(
         step,
         mesh=mesh,
         in_specs=(pop, batch_spec, pop),
         out_specs=(pop, pop),
+        check_rep=not _fused_kernels_on(tc),
     )
 
 
@@ -1079,6 +1236,20 @@ def make_sharded_population_rule_scan_step(
     # check_rep=False: the history/window leaves ARE replicated (every device
     # runs the identical global update on all_gather-ed inputs), but the
     # static replication checker cannot infer that through the gather
+    width = _mesh_width(mesh, axis)
+    if width > 1:
+        # two-level mesh: training is width-W tensor parallel per lane row;
+        # the rule update still all_gathers over the pop axis only — devices
+        # in one row hold identical (replicated) losses, so every device
+        # evaluates the same global rule and the cut set stays width-invariant
+        state_ps, _ = _tp_state_pspecs(tc, mesh, axis)
+        return shard_map(
+            _tp_body(fn, tc, width),
+            mesh=mesh,
+            in_specs=(state_ps, pop, lane, lane, lane, rules_spec),
+            out_specs=((state_ps, rules_spec), PartitionSpec(None, axis)),
+            check_rep=False,
+        )
     return shard_map(
         fn,
         mesh=mesh,
@@ -1088,15 +1259,25 @@ def make_sharded_population_rule_scan_step(
     )
 
 
-def pad_population(k: int, mesh: Optional[Mesh]) -> int:
-    """Smallest population size >= k that divides evenly over ``mesh``."""
-    n = 1 if mesh is None else mesh.size
+def pad_population(k: int, mesh: Optional[Mesh], axis: str = "pop") -> int:
+    """Smallest population size >= k that divides evenly over ``mesh``'s lane
+    rows (on a two-level mesh that is the pop-axis size, NOT the device
+    count: a width-W row serves ONE lane block W-wide)."""
+    n = 1 if mesh is None else _pop_rows(mesh, axis)
     return ((max(k, 1) + n - 1) // n) * n
 
 
-def shard_population_state(pstate: PopState, mesh: Mesh, axis: str = "pop") -> PopState:
+def shard_population_state(
+    pstate: PopState, mesh: Mesh, axis: str = "pop",
+    tc: Optional[TrainConfig] = None,
+) -> PopState:
     """Place a freshly initialized population state on the mesh (leading K dim
-    on ``axis``) so the first sharded step does not pay an input reshard."""
+    on ``axis``) so the first sharded step does not pay an input reshard.
+    On a two-level mesh pass ``tc`` so each lane's parameter/optimizer leaves
+    land width-partitioned per ``tp_width_rules`` (matching what the TP step
+    computes on) instead of row-replicated."""
+    if tc is not None and _mesh_width(mesh, axis) > 1:
+        return place_two_level(pstate, tc, mesh, axis=axis)
     return jax.device_put(pstate, population_specs(pstate, mesh, axis))
 
 
@@ -1136,15 +1317,10 @@ def get_compiled_sharded_population_step(
     1-D mesh over every local device).  Raises if K does not divide over the
     mesh — pad with ``pad_population`` first."""
     mesh = mesh if mesh is not None else population_mesh(axis=axis)
-    if population % mesh.size:
-        raise ValueError(
-            f"population {population} does not divide over {mesh.size} devices; "
-            f"pad to {pad_population(population, mesh)} with 0-budget trials"
-        )
+    _check_rows(population, mesh, axis)
     key = (
         static_step_key(tc), int(population), bool(per_trial_batch),
-        tuple(d.id for d in mesh.devices.flat), axis,
-    )
+    ) + _mesh_cache_key(mesh, axis)
     with _POP_CACHE_LOCK:
         fn = _POP_CACHE.get(key)
         if fn is None:
@@ -1175,15 +1351,12 @@ def get_compiled_population_scan_step(
     compiles at most ``log2(chunk_steps) + 1`` scan programs per engine.
     ``clear_population_cache()`` covers these entries too.
     """
-    if mesh is not None and population % mesh.size:
-        raise ValueError(
-            f"population {population} does not divide over {mesh.size} devices; "
-            f"pad to {pad_population(population, mesh)} with 0-budget trials"
-        )
+    if mesh is not None:
+        _check_rows(population, mesh, axis)
     key = (
         static_step_key(tc), int(population), bool(per_trial_batch),
         "scan", int(chunk), data.spec_key,
-    ) + ((tuple(d.id for d in mesh.devices.flat), axis) if mesh is not None else ())
+    ) + (_mesh_cache_key(mesh, axis) if mesh is not None else ())
     with _POP_CACHE_LOCK:
         fn = _POP_CACHE.get(key)
         if fn is None:
@@ -1216,15 +1389,12 @@ def get_compiled_population_ring_scan_step(
     population state donates — the ring buffer is owned and rotated by the
     fill thread, never by the scan.
     """
-    if mesh is not None and population % mesh.size:
-        raise ValueError(
-            f"population {population} does not divide over {mesh.size} devices; "
-            f"pad to {pad_population(population, mesh)} with 0-budget trials"
-        )
+    if mesh is not None:
+        _check_rows(population, mesh, axis)
     key = (
         static_step_key(tc), int(population), "ringscan", int(chunk),
         int(capacity), data.spec_key,
-    ) + ((tuple(d.id for d in mesh.devices.flat), axis) if mesh is not None else ())
+    ) + (_mesh_cache_key(mesh, axis) if mesh is not None else ())
     with _POP_CACHE_LOCK:
         fn = _POP_CACHE.get(key)
         if fn is None:
@@ -1258,15 +1428,12 @@ def get_compiled_population_rule_scan_step(
     and drivers size them to powers of two so an experiment compiles a
     bounded program set.
     """
-    if mesh is not None and population % mesh.size:
-        raise ValueError(
-            f"population {population} does not divide over {mesh.size} devices; "
-            f"pad to {pad_population(population, mesh)} with 0-budget trials"
-        )
+    if mesh is not None:
+        _check_rows(population, mesh, axis)
     key = (
         static_step_key(tc), int(population), bool(per_trial_batch),
         "rulescan", str(mode), int(chunk), data.spec_key,
-    ) + ((tuple(d.id for d in mesh.devices.flat), axis) if mesh is not None else ())
+    ) + (_mesh_cache_key(mesh, axis) if mesh is not None else ())
     with _POP_CACHE_LOCK:
         fn = _POP_CACHE.get(key)
         if fn is None:
@@ -1315,22 +1482,47 @@ def get_compiled_lane_op(
     (keyed like the sharded population step, so a streaming flight compiles
     each op it uses exactly once).  Mutating ops donate the population state;
     ``snapshot`` reads it and leaves the flight state alive.
+
+    On a two-level (width>1) mesh the hand-written shard_map twins do not
+    apply — state leaves are width-partitioned per lane row, not merely
+    lane-blocked — so the vmapped op runs under GSPMD with
+    ``out_shardings`` pinned to the TP layout (``two_level_state_specs`` x
+    ``tp_width_rules``).  Lifecycle ops fire at event boundaries, not every
+    step, so letting XLA partition them costs nothing on the hot path and
+    keeps them bit-identical to the vmapped originals by construction.
     """
     if op not in _LANE_OPS:
         raise KeyError(f"unknown lane op {op!r}; available: {sorted(_LANE_OPS)}")
-    if mesh is not None and population % mesh.size:
-        raise ValueError(
-            f"population {population} does not divide over {mesh.size} devices; "
-            f"pad to {pad_population(population, mesh)} with 0-budget trials"
-        )
+    if mesh is not None:
+        _check_rows(population, mesh, axis)
     key = (static_step_key(tc), int(population), f"lane-{op}") + (
-        (tuple(d.id for d in mesh.devices.flat), axis) if mesh is not None else ()
+        _mesh_cache_key(mesh, axis) if mesh is not None else ()
     )
     with _POP_CACHE_LOCK:
         fn = _POP_CACHE.get(key)
         if fn is None:
             vmapped, sharded = _LANE_OPS[op]
-            built = vmapped(tc) if mesh is None else sharded(tc, mesh, axis=axis)
+            width = _mesh_width(mesh, axis) if mesh is not None else 1
+            if mesh is None:
+                built = vmapped(tc)
+            elif width > 1 and op not in _READONLY_LANE_OPS:
+                rules = _tp_rules_or_raise(tc, width)
+                out_sh = two_level_state_specs(
+                    _population_state_shapes(tc, int(population)),
+                    _state_logical_specs(tc), mesh, axis=axis, rules=rules)
+                fn = jax.jit(vmapped(tc), donate_argnums=0,
+                             out_shardings=out_sh)
+                _POP_CACHE[key] = fn
+                return fn
+            elif width > 1:
+                # snapshot/regrid: GSPMD, output layout decided by the caller
+                # (snapshot is host-harvested; regrid re-lays out via
+                # place_two_level on the NEW mesh)
+                fn = jax.jit(vmapped(tc))
+                _POP_CACHE[key] = fn
+                return fn
+            else:
+                built = sharded(tc, mesh, axis=axis)
             if op in _READONLY_LANE_OPS:
                 fn = jax.jit(built)
             else:
@@ -1360,6 +1552,45 @@ def get_compiled_sharded_reset_lanes(
 def clear_population_cache() -> None:
     with _POP_CACHE_LOCK:
         _POP_CACHE.clear()
+
+
+def count_model_axis_collectives(
+    tc: TrainConfig,
+    population: int,
+    mesh: Mesh,
+    data,
+    per_trial_batch: bool = False,
+    axis: str = "pop",
+) -> int:
+    """All-reduce count in the lowered population step — the static witness
+    that the model axis carries compute.
+
+    The per-step twin has NO population-axis collectives (lanes are
+    embarrassingly parallel; the rule twins' all_gathers live in other
+    programs), so every all-reduce in its HLO is a model-axis psum from the
+    TP seams.  Width 1 must lower to exactly zero.  Abstract (eval_shape)
+    arguments only — nothing is allocated.
+    """
+    from ..launch.hlo_stats import parse_collectives
+    from ..optim.hparams import hparams_from_config
+
+    k = int(population)
+    step = get_compiled_sharded_population_step(
+        tc, k, mesh=mesh, per_trial_batch=per_trial_batch, axis=axis)
+    pstate = _population_state_shapes(tc, k)
+    bshape = (k, data.global_batch) if per_trial_batch else (data.global_batch,)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct(bshape + (data.seq_len,), jnp.int32),
+        "targets": jax.ShapeDtypeStruct(bshape + (data.seq_len,), jnp.int32),
+        "mask": jax.ShapeDtypeStruct(bshape + (data.seq_len,), jnp.float32),
+    }
+    hp = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((k,), jnp.asarray(x).dtype),
+        hparams_from_config(tc))
+    txt = step.lower(pstate, batch, hp).compile().as_text()
+    width = _mesh_width(mesh, axis)
+    stats = parse_collectives(txt, default_group=max(width, 1))
+    return int(stats.per_op.get("all-reduce", {}).get("count", 0))
 
 
 def population_scores(pstate: PopState, diverged_score: float = -1e9):

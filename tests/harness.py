@@ -46,21 +46,24 @@ def rung_hook():
                                      max_iter=MAX_ITER)
 
 
-def _trial(chunk, device, ring=False):
+def _trial(chunk, device, ring=False, **kw):
+    """Extra ``kw`` forwards to ``PopulationTrial`` (fused-kernel flags,
+    ``model_parallel``) so fused/TP cells reuse the same workload."""
     return PopulationTrial(ARCH, steps=STEPS_PER_UNIT, batch=BATCH, seq=SEQ,
                            seed=0, population=LANES, early_stop=rung_hook(),
                            refill_idle_grace_s=0.0, chunk_steps=chunk,
                            device_rules=device, data_ring=ring,
-                           ring_windows=2)
+                           ring_windows=2, **kw)
 
 
-def run_batch_cell(cfgs, chunk=1, device=False, mesh=None, ring=False):
+def run_batch_cell(cfgs, chunk=1, device=False, mesh=None, ring=False, **kw):
     """Batch protocol: one synchronized flight, cohort rung rule
     (``InFlightSuccessiveHalving.__call__`` on host, ``cohort_rule_update``
     in-scan with ``device=True``).  ``ring=True`` feeds the fused scans from
     the host-filled prefetch ring (``--data-ring``) — the host synth adapter
-    must reproduce the in-scan synthesis exactly."""
-    trial = _trial(chunk, device, ring=ring)
+    must reproduce the in-scan synthesis exactly.  A two-level ``mesh``
+    (``population_mesh(width=W)``) runs the width-W tensor-parallel engine."""
+    trial = _trial(chunk, device, ring=ring, **kw)
     scores = trial.run_population(list(cfgs), mesh=mesh)
     return {
         "scores": scores,
@@ -73,10 +76,11 @@ def run_batch_cell(cfgs, chunk=1, device=False, mesh=None, ring=False):
     }
 
 
-def run_streaming_cell(cfgs, chunk=1, device=False, mesh=None, ring=False):
+def run_streaming_cell(cfgs, chunk=1, device=False, mesh=None, ring=False,
+                       **kw):
     """Streaming protocol: lane-refill flight fed by a fixed queue, staggered
     rung rule (``observe`` on host, ``staggered_rule_update`` in-scan)."""
-    trial = _trial(chunk, device, ring=ring)
+    trial = _trial(chunk, device, ring=ring, **kw)
     feed = QueueFeedScheduler(list(cfgs))
     trial.run_population([], mesh=mesh, scheduler=feed)
     n = len(cfgs)

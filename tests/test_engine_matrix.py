@@ -109,6 +109,66 @@ def test_sharded_cells_match_vmapped(cells, protocol, name):
         assert got["steps"] == ref["steps"]
 
 
+# -- tensor-parallel width family: width is layout, never math -------------------
+
+# (cell name, chunk_steps, device_rules, width): per-step, fused-scan and
+# in-scan-rule twins at width 2, plus width 4 (where 2 kv heads stop dividing
+# so attention stays replicated and only the ff/inner dims shard)
+TP_CELLS = [
+    ("tp2-perstep-host", 1, False, 2),
+    ("tp2-chunked-host", 8, False, 2),
+    ("tp2-chunked-device", 8, True, 2),
+    ("tp4-perstep-host", 1, False, 4),
+]
+
+
+@pytest.fixture(scope="module")
+def tp_cells(cfgs):
+    """Width-2/4 cells of the same ladder: the population axis folds into a
+    two-level (pop, model) mesh and every lane's heads/ff/inner dims split
+    over its W-device row."""
+    if jax.device_count() < 8:
+        pytest.skip("needs the 8-virtual-device CPU mesh")
+    out = {"batch": {}, "streaming": {}}
+    for name, chunk, device, width in TP_CELLS:
+        mesh = population_mesh(width=width)
+        out["batch"][name] = run_batch_cell(
+            cfgs, chunk=chunk, device=device, mesh=mesh)
+        out["streaming"][name] = run_streaming_cell(
+            cfgs, chunk=chunk, device=device, mesh=mesh)
+    return out
+
+
+@multi_device
+@pytest.mark.parametrize("name", [c[0] for c in TP_CELLS])
+@pytest.mark.parametrize("protocol", ["batch", "streaming"])
+def test_tp_width_cells_match_vmapped(cells, tp_cells, protocol, name):
+    """The tentpole invariant: a width-W tensor-parallel flight reproduces
+    the width-1 vmapped reference on the same trial set — scores within 1e-6,
+    identical rule decisions (truncations, reclaims, retirement steps).  The
+    model axis changes *where* each einsum's operands live, never the math
+    (the psum seams restore full activations at the Megatron cut points)."""
+    ref = cells[protocol][REFERENCE]
+    got = tp_cells[protocol][name]
+    np.testing.assert_allclose(got["scores"], ref["scores"],
+                               rtol=0, atol=1e-6)
+    assert got["n_truncated"] == ref["n_truncated"]
+    assert got["n_reclaimed"] == ref["n_reclaimed"]
+    if protocol == "streaming":
+        assert got["steps"] == ref["steps"]
+        assert got["diverged"] == ref["diverged"]
+
+
+@multi_device
+def test_tp_widths_agree_with_each_other(tp_cells):
+    """Widths 2 and 4 of the same cell agree with each other too (not just
+    each with the reference): the partitioning is associativity-stable at
+    these shapes."""
+    a = tp_cells["batch"]["tp2-perstep-host"]
+    b = tp_cells["batch"]["tp4-perstep-host"]
+    np.testing.assert_allclose(a["scores"], b["scores"], rtol=0, atol=1e-6)
+
+
 # -- serial reference ------------------------------------------------------------
 
 

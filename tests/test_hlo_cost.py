@@ -92,6 +92,34 @@ def test_shape_bytes_parsing():
     assert shape_bytes("f32[2,2]", f32_as_bf16=True) == 8
 
 
+def test_model_axis_collective_count_gate():
+    """Static gate on the lowered population step: a width-1 mesh must lower
+    with ZERO all-reduces (lanes never communicate — width is the only source
+    of collectives), and a width-2 mesh must carry at least one psum per
+    sharded module per layer in the forward pass alone (starcoder2 smoke:
+    2 layers x (attention g-seam + MLP g-seam) = 4), the f-seam backward
+    psums and the grad-norm reduction on top of that."""
+    if jax.device_count() < 8:
+        pytest.skip("needs the 8-virtual-device CPU mesh")
+    from repro.configs import get_smoke_config
+    from repro.configs.base import ParallelConfig, TrainConfig
+    from repro.data.pipeline import SyntheticLM
+    from repro.distributed.sharding import population_mesh
+    from repro.train.population import count_model_axis_collectives
+
+    cfg = get_smoke_config("starcoder2-3b")
+    tc = TrainConfig(model=cfg, parallel=ParallelConfig(remat="none"), seed=0)
+    data = SyntheticLM(cfg.vocab_size, 16, 2)
+    c1 = count_model_axis_collectives(tc, 8, population_mesh(), data)
+    c2 = count_model_axis_collectives(tc, 8, population_mesh(width=2), data)
+    c4 = count_model_axis_collectives(tc, 8, population_mesh(width=4), data)
+    assert c1 == 0, f"width-1 step lowered with {c1} all-reduces"
+    assert c2 >= 4, f"width-2 step lowered only {c2} model-axis all-reduces"
+    # at width 4 the 2 kv heads stop dividing: attention drops out of the
+    # rules and only the MLP seams (+ gnorm) remain — strictly fewer psums
+    assert 0 < c4 < c2, (c4, c2)
+
+
 def test_collective_parser_on_synthetic_hlo():
     hlo = """
 HloModule test

@@ -1,0 +1,195 @@
+"""Tensor-parallel population engine: CLI surface, fused-kernel composition
+matrix, and crash-resume from a width-2 snapshot.
+
+The width-scaling score equivalences live in ``test_engine_matrix.py``
+(``tp_cells``); this module covers the seams around them:
+
+* the ``--model-parallel`` / ``--fused-attention`` / ``--fused-ssm`` CLI
+  wiring, including every loud rejection of an unsupported composition;
+* the {fused_rmsnorm, fused_attention} x {vmapped, sharded, chunked, ring,
+  device-rules} composition matrix — every engine must accept the fused
+  train step (the compile caches key on the static ModelConfig fields) and
+  make the SAME rule decisions as its unfused twin;
+* a supervised width-2 streaming flight killed mid-run must restore its
+  lanes from width-2 snapshots and reproduce the uninterrupted scores.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from harness import ladder, run_batch_cell
+from repro.core import faultinject
+from repro.launch.hpo import main
+
+eight_devices = pytest.mark.skipif(
+    jax.device_count() < 8, reason="needs the 8-virtual-device CPU mesh")
+
+HEAVY = os.environ.get("REPRO_TP_SMOKE") == "1"
+
+
+# -- CLI rejections: every unsupported composition fails loudly -------------------
+
+BAD_ARGV = [
+    # --model-parallel needs the sharded population engine
+    ["--vectorize", "8", "--model-parallel", "2"],
+    # ... and a width that makes sense
+    ["--vectorize", "8", "--shard-population", "--model-parallel", "0"],
+    # elastic flights lease their own widths through the pool
+    ["--proposer", "asha", "--vectorize", "8", "--shard-population",
+     "--inflight-stop", "--elastic-regrid", "--model-parallel", "2"],
+    # the legacy baseline predates the kernel bank
+    ["--legacy-recompile", "--fused-rmsnorm"],
+    ["--legacy-recompile", "--fused-attention"],
+    # per-module flags demand the module: starcoder2 has no SSM mixer,
+    # falcon-mamba has no attention
+    ["--arch", "starcoder2-3b", "--fused-ssm"],
+    ["--arch", "falcon-mamba-7b", "--fused-attention"],
+]
+
+
+@pytest.mark.parametrize("argv", BAD_ARGV,
+                         ids=[f"bad{i}" for i in range(len(BAD_ARGV))])
+def test_unsupported_compositions_error_loudly(argv):
+    with pytest.raises(SystemExit) as e:
+        main(argv + ["--n-samples", "2", "--steps", "1"])
+    assert e.value.code == 2  # argparse p.error
+
+
+# -- fused-kernel x engine composition matrix -------------------------------------
+
+# (engine name, chunk_steps, device_rules, sharded, data_ring)
+ENGINES = [
+    ("vmapped", 1, False, False, False),
+    ("sharded", 1, False, True, False),
+    ("chunked", 8, False, False, False),
+    ("ring", 8, False, False, True),
+    ("device-rules", 8, True, False, False),
+]
+FUSED_SETS = [
+    {"fused_rmsnorm": True},
+    {"fused_attention": True},
+    {"fused_rmsnorm": True, "fused_attention": True},
+]
+
+
+@pytest.fixture(scope="module")
+def cfgs():
+    return ladder(6)
+
+
+@pytest.fixture(scope="module")
+def unfused_ref(cfgs):
+    return run_batch_cell(cfgs)
+
+
+def _engine_cell(cfgs, engine, fused):
+    name, chunk, device, sharded, ring = engine
+    mesh = None
+    if sharded:
+        if jax.device_count() < 2:
+            pytest.skip("sharded cell needs a multi-device mesh")
+        from repro.distributed.sharding import population_mesh
+        mesh = population_mesh()
+    return run_batch_cell(cfgs, chunk=chunk, device=device, mesh=mesh,
+                          ring=ring, **fused)
+
+
+@pytest.mark.parametrize("fused", FUSED_SETS,
+                         ids=["rmsnorm", "attention", "both"])
+@pytest.mark.parametrize("engine", ENGINES, ids=[e[0] for e in ENGINES])
+def test_fused_flags_compose_with_every_engine(cfgs, unfused_ref, engine,
+                                               fused):
+    """Each fused flag (and their union) rides every population engine: the
+    static ModelConfig fields key the compile caches so fused and reference
+    programs never mix, the rung rule makes the SAME cuts, and scores stay
+    within kernel tolerance of the unfused reference (the flash forward
+    reassociates softmax reductions — looser than the 1e-6 engine bound)."""
+    if not HEAVY and engine[0] not in ("vmapped", "sharded"):
+        pytest.skip("heavier engine cells run under REPRO_TP_SMOKE=1")
+    got = _engine_cell(cfgs, engine, fused)
+    assert got["n_truncated"] == unfused_ref["n_truncated"]
+    assert got["n_reclaimed"] == unfused_ref["n_reclaimed"]
+    np.testing.assert_allclose(got["scores"], unfused_ref["scores"],
+                               rtol=1e-4, atol=5e-4)
+
+
+@eight_devices
+def test_fused_flags_compose_with_model_parallel(cfgs, unfused_ref):
+    """The full stack: fused rmsnorm + flash attention inside a width-2
+    tensor-parallel shard_map — the Pallas kernels run on width-local shards
+    (heads/W, ff/W) and the psum seams still restore the reference math."""
+    from repro.distributed.sharding import population_mesh
+
+    got = run_batch_cell(cfgs, mesh=population_mesh(width=2),
+                         fused_rmsnorm=True, fused_attention=True)
+    assert got["n_truncated"] == unfused_ref["n_truncated"]
+    np.testing.assert_allclose(got["scores"], unfused_ref["scores"],
+                               rtol=1e-4, atol=5e-4)
+
+
+# -- CLI smoke: width-2 twin vs width-1 -------------------------------------------
+
+def _cli(argv, capsys):
+    assert main(argv) == 0
+    return json.loads(capsys.readouterr().out)
+
+
+@eight_devices
+def test_cli_model_parallel_matches_width1_twin(capsys):
+    """The CI smoke: the same ASHA search at --model-parallel 2 and width 1
+    must land on the same best config with a best score within 1e-6, emit
+    model-axis collective telemetry (> 0 at width 2, == 0 at width 1), and
+    tag the engine string."""
+    heavy = HEAVY
+    base = ["--proposer", "asha", "--n-samples", "8" if heavy else "6",
+            "--vectorize", "8", "--shard-population", "--inflight-stop",
+            "--steps", "4" if heavy else "2", "--batch", "2", "--seq", "16"]
+    w1 = _cli(base, capsys)
+    w2 = _cli(base + ["--model-parallel", "2"], capsys)
+    assert w1["engine"] == "sharded"
+    assert w2["engine"] == "sharded+tp2"
+    assert w1["model_axis_collectives"] == 0
+    assert w2["model_axis_collectives"] > 0
+    assert w2["model_parallel"] == 2
+    assert w2["best_config"] == w1["best_config"]
+    assert abs(w2["best_score"] - w1["best_score"]) <= 1e-6
+    # the rung-segment telemetry must cover the whole flight
+    assert w2["per_rung_step_time_s"]
+    assert sum(seg[1] for seg in w2["per_rung_step_time_s"]) \
+        == w2["trained_steps"]
+
+
+# -- crash-resume from a width-2 snapshot -----------------------------------------
+
+@eight_devices
+def test_width2_flight_death_restores_from_width2_snapshots(tmp_path, capsys):
+    """A supervised width-2 streaming flight dies mid-run (injected raise)
+    and restarts: its lanes restore from snapshots harvested off the
+    width-sharded state (the snapshot op gathers each lane to host layout,
+    the restore splice re-partitions it onto the new flight's rows), and
+    every score matches the uninterrupted width-2 run."""
+    base = ["--proposer", "random", "--vectorize", "4", "--lane-refill",
+            "--shard-population", "--model-parallel", "2",
+            "--n-samples", "6", "--steps", "6", "--batch", "2",
+            "--seq", "16", "--snapshot-every", "1"]
+    try:
+        ok = _cli(base + ["--db", str(tmp_path / "a.sqlite")], capsys)
+        # the first cohort retires (and snapshots) at step 6; the raise lands
+        # inside the refilled second cohort, so live lanes have snapshots
+        crashed = _cli(base + ["--db", str(tmp_path / "b.sqlite"),
+                               "--fault-spec", "raise@step=10,times=1"],
+                       capsys)
+    finally:
+        faultinject.disarm()
+    assert ok["engine"] == "sharded+tp2+refill"
+    assert crashed["flight_deaths"] == 1
+    assert crashed["flight_restarts"] == 1
+    assert crashed["resumed_lanes"] >= 1
+    assert max(crashed["resumed_from_steps"]) > 0, \
+        "restored lanes restarted from step 0 instead of their snapshots"
+    assert abs(crashed["best_score"] - ok["best_score"]) <= 1e-6
+    assert crashed["best_config"] == ok["best_config"]
